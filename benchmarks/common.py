@@ -1,0 +1,50 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import (ALL_PATTERNS, SearchConfig, get_scenario, run_config)
+
+CONFIG_SET = [
+    ("standalone_nvdla", "simba_nvdla", True),
+    ("standalone_shi", "simba_shi", True),
+    ("simba_nvdla", "simba_nvdla", False),
+    ("simba_shi", "simba_shi", False),
+    ("het_cb", "het_cb", False),
+    ("het_sides", "het_sides", False),
+    ("het_cross", "het_cross", False),
+]
+
+
+def npe_for(scenario_name: str) -> int:
+    return 4096 if scenario_name.startswith("dc") else 256
+
+
+def sweep(scenario_name: str, metric: str = "edp", configs=None,
+          rows: int = 3, cols: int = 3, **cfg_kw) -> dict:
+    """Run every MCM config on a scenario; returns {name: outcome}."""
+    sc = get_scenario(scenario_name)
+    out = {}
+    for name, pattern, standalone in (configs or CONFIG_SET):
+        cfg = SearchConfig(metric=metric, **cfg_kw)
+        out[name] = run_config(sc, pattern, rows=rows, cols=cols,
+                               n_pe=npe_for(scenario_name), cfg=cfg,
+                               standalone=standalone)
+    return out
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    """CSV row per harness contract: name,us_per_call,derived."""
+    print(f"{name},{us:.1f},{derived}")
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.time() - self.t0) * 1e6

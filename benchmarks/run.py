@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substr]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import paper_benches, system_benches
+    benches = paper_benches.ALL + system_benches.ALL
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for b in benches:
+        if args.only and args.only not in b.__name__:
+            continue
+        try:
+            b()
+        except Exception:  # noqa: BLE001 - report and continue
+            failures += 1
+            traceback.print_exc()
+            print(f"{b.__name__},0,FAILED")
+    print(f"# total_wall_s={time.time() - t0:.1f} failures={failures}",
+          file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

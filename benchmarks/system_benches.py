@@ -1,0 +1,141 @@
+"""Framework-side benchmarks: kernel oracles, batched-evaluator throughput,
+and the roofline table from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, timer
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s/link (ICI)
+
+
+def bench_scar_eval_throughput() -> None:
+    """Batched schedule evaluation (jnp ref on CPU) vs per-plan python loop."""
+    from repro.core import get_scenario, make_mcm
+    from repro.core.maestro import build_cost_db
+    from repro.core.cost import (BatchedModelCandidates,
+                                 eval_model_candidates)
+    from repro.kernels.scar_eval import evaluate, pack_candidates
+    sc = get_scenario("dc4_lms_seg_image")
+    mcm = make_mcm("het_sides", n_pe=4096)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    rng = np.random.default_rng(0)
+    sl = db.model_slice(0)
+    Lw = sl.stop - sl.start
+    B, S = 2048, 6
+    seg_id = np.sort(rng.integers(0, S, (B, Lw)), axis=1)
+    for b in range(B):
+        _, inv = np.unique(seg_id[b], return_inverse=True)
+        seg_id[b] = inv
+    n_segs = seg_id.max(axis=1) + 1
+    chips = np.full((B, S), -1, dtype=np.int64)
+    for b in range(B):
+        chips[b, :n_segs[b]] = rng.choice(mcm.n_chiplets, n_segs[b],
+                                          replace=False)
+    cand = BatchedModelCandidates(model_idx=0, start=sl.start, end=sl.stop,
+                                  seg_id=seg_id, chiplets=chips,
+                                  n_segs=n_segs)
+    with timer() as t_np:
+        eval_model_candidates(db, mcm, cand, n_active=4)
+    args, Breal = pack_candidates(db, mcm, cand, n_active=4)
+    out = evaluate(*args, use_kernel=False)  # compile
+    out.block_until_ready()
+    with timer() as t_jx:
+        out = evaluate(*args, use_kernel=False)
+        out.block_until_ready()
+    emit("scar_eval_batched_2048cands", t_jx.us,
+         f"numpy_us={t_np.us:.0f};jax_us={t_jx.us:.0f};"
+         f"per_candidate_ns={t_jx.us * 1e3 / B:.0f}")
+
+
+def bench_kernel_agreement() -> None:
+    """Kernel-vs-oracle max error at a production-ish tile (interpret mode)."""
+    from repro.kernels.flash_attention import mha
+    from repro.kernels.ssd_scan import gla
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (1, 256, 4, 128), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 256, 2, 128), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 256, 2, 128), jnp.bfloat16)
+    with timer() as t:
+        out = mha(q, k, v, causal=True, interpret=True)
+        ref = mha(q, k, v, causal=True, use_kernel=False)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    emit("flash_attention_agreement", t.us, f"max_abs_err={err:.2e}")
+    qg = jax.random.normal(ks[0], (1, 512, 2, 64))
+    kg = jax.random.normal(ks[1], (1, 512, 2, 64))
+    vg = jax.random.normal(ks[2], (1, 512, 2, 64))
+    a = -jax.nn.softplus(jax.random.normal(ks[3], (1, 512, 2)))
+    with timer() as t:
+        out = gla(qg, kg, vg, a, chunk=128, interpret=True)
+        ref = gla(qg, kg, vg, a, chunk=128, use_kernel=False)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("ssd_scan_agreement", t.us, f"max_abs_err={err:.2e}")
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Three roofline terms (seconds) from a dry-run record (per device)."""
+    ct = rec["cost"]["flops"] / PEAK_FLOPS
+    mt = rec["cost"]["bytes_accessed"] / HBM_BW
+    lt = rec["collectives"]["total_link_bytes"] / LINK_BW
+    dom = max(("compute", ct), ("memory", mt), ("collective", lt),
+              key=lambda kv: kv[1])
+    return {"compute_s": ct, "memory_s": mt, "collective_s": lt,
+            "bottleneck": dom[0],
+            "roofline_s": max(ct, mt, lt)}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """MODEL_FLOPS: 6*N*D train / 2*N*D prefill / 2*N per-token decode,
+    N = active non-embedding params."""
+    from repro.launch.cells import SHAPES
+    from repro.models import get_arch
+    cfg = get_arch(arch)
+    n_total = cfg.param_count()
+    embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n = n_total - embed
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert_total = (cfg.n_super_blocks * m.n_experts * 3 * cfg.d_model
+                        * m.expert_d_ff)
+        active_frac = m.top_k / m.n_experts
+        n = n - expert_total + expert_total * active_frac
+    s = SHAPES[shape]
+    tokens = s["batch"] * (s["seq"] if s["kind"] != "decode" else 1)
+    mult = 6 if s["kind"] == "train" else 2
+    return mult * n * tokens
+
+
+def bench_roofline_table(path: str = "dryrun_results.jsonl") -> None:
+    """The EXPERIMENTS.md roofline table (also emitted as bench rows)."""
+    if not os.path.exists(path):
+        emit("roofline_table", 0.0, "missing_dryrun_results")
+        return
+    recs = [json.loads(l) for l in open(path)]
+    for r in recs:
+        if "error" in r or not r["mesh"].startswith("single"):
+            continue
+        n_dev = 256
+        terms = roofline_terms(r)
+        mf = model_flops(r["arch"], r["shape"]) / n_dev
+        useful = mf / max(r["cost"]["flops"], 1.0)
+        frac = terms["compute_s"] / terms["roofline_s"]
+        emit(f"roofline_{r['arch']}_{r['shape']}", r["compile_s"] * 1e6,
+             f"compute_s={terms['compute_s']:.3e};"
+             f"memory_s={terms['memory_s']:.3e};"
+             f"collective_s={terms['collective_s']:.3e};"
+             f"bottleneck={terms['bottleneck']};"
+             f"model_flops_ratio={useful:.3f};"
+             f"compute_fraction={frac:.3f}")
+
+
+ALL = [bench_scar_eval_throughput, bench_kernel_agreement,
+       bench_roofline_table]

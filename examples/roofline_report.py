@@ -1,0 +1,33 @@
+"""Render the roofline table from the dry-run artifacts.
+
+    PYTHONPATH=src python examples/roofline_report.py [dryrun_results.jsonl]
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.system_benches import model_flops, roofline_terms
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl"
+    recs = [json.loads(l) for l in open(path)]
+    print(f"{'arch':22s} {'shape':12s} {'mesh':6s} {'compute_s':>10s} "
+          f"{'memory_s':>10s} {'collect_s':>10s} {'bottleneck':>10s} "
+          f"{'MF-ratio':>8s}")
+    for r in recs:
+        if "error" in r:
+            continue
+        t = roofline_terms(r)
+        n_dev = 512 if r["mesh"].startswith("multi") else 256
+        mfr = model_flops(r["arch"], r["shape"]) / n_dev / max(
+            r["cost"]["flops"], 1)
+        mesh = "2pod" if r["mesh"].startswith("multi") else "1pod"
+        print(f"{r['arch']:22s} {r['shape']:12s} {mesh:6s} "
+              f"{t['compute_s']:10.3e} {t['memory_s']:10.3e} "
+              f"{t['collective_s']:10.3e} {t['bottleneck']:>10s} {mfr:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

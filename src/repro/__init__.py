@@ -1,0 +1,2 @@
+"""repro: SCAR multi-model scheduling framework on JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from . import hlo_cost
+from . import roofline

@@ -1,0 +1,367 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
+lowered with ``lax.scan`` over layers (ours: all of them) under-reports FLOPs,
+bytes, and collective traffic by the trip count.  This module parses the
+post-SPMD HLO text, reconstructs the computation call graph, extracts loop
+trip counts from loop-condition constants, and accumulates:
+
+* flops: dots (2*M*N*K), convolutions, elementwise arithmetic (1/elem),
+  reductions (1/elem).
+* bytes: per top-level op, operands + results (fusions count boundary
+  tensors only, interior ops contribute flops but not bytes) — mirroring the
+  semantics of XLA's own bytes-accessed metric.
+* collectives: per op kind, operand bytes and estimated ring link-bytes,
+  multiplied by the enclosing loops' trip counts.
+
+The resulting numbers feed the roofline terms in EXPERIMENTS.md directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "f8e4m3fn": 1, "s64": 8, "u64": 8, "s32": 4,
+                "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "negate", "abs", "sign", "floor", "ceil", "round",
+    "logistic", "cosine", "sine", "atan2", "remainder", "and", "or", "xor",
+    "not", "select", "compare", "clamp", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic",
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+
+
+def _shape_elems_bytes(s: str) -> tuple[int, int, list[int], str]:
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return 0, 0, [], ""
+    dt, dims = m.groups()
+    dl = [int(d) for d in dims.split(",") if d]
+    n = 1
+    for d in dl:
+        n *= d
+    return n, n * _DTYPE_BYTES.get(dt, 4), dl, dt
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shapes: list[str]
+    operands: list[str]
+    line: str
+
+    def result_elems(self) -> int:
+        return sum(_shape_elems_bytes(s)[0] for s in self.result_shapes)
+
+    def result_bytes(self) -> int:
+        return sum(_shape_elems_bytes(s)[1] for s in self.result_shapes)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    shapes: dict[str, list[str]]   # op name -> result shapes
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[^\s(]+)\s+([\w\-]+)\(")
+
+
+def _split_result_shapes(res: str) -> list[str]:
+    res = res.strip()
+    if res.startswith("("):
+        return re.findall(r"\w+\[[\d,]*\](?:\{[^}]*\})?", res)
+    return [res]
+
+
+def _logical_lines(text: str):
+    """Stitch wrapped HLO lines: a new logical line starts at ENTRY/%/ROOT/}."""
+    buf: Optional[str] = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        starts_new = (s.startswith("%") or s.startswith("ENTRY")
+                      or s.startswith("ROOT") or s == "}" or s == "})"
+                      or s.startswith("HloModule"))
+        if starts_new:
+            if buf is not None:
+                yield buf
+            buf = raw.rstrip()
+        else:
+            if buf is not None:
+                buf += " " + s
+            else:
+                buf = raw.rstrip()
+    if buf is not None:
+        yield buf
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in _logical_lines(text):
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, res, opcode = m.groups()
+        shapes = _split_result_shapes(res)
+        # operand names: %tokens inside the first top-level parens
+        operands = re.findall(r"%([\w.\-]+)", line[m.end():])
+        op = Op(name=name, opcode=opcode, result_shapes=shapes,
+                operands=operands, line=line)
+        cur.ops.append(op)
+        cur.shapes[name] = shapes
+    return comps
+
+
+def _attr(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32/s64 constant in the loop condition ~= trip count."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                best = max(best, abs(int(m.group(1))))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = op.result_elems()
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    k = 1
+    if m and op.operands:
+        lhs_shapes = comp.shapes.get(op.operands[0])
+        if lhs_shapes:
+            _, _, dims, _ = _shape_elems_bytes(lhs_shapes[0])
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_elems = op.result_elems()
+    if len(op.operands) >= 2:
+        rhs = comp.shapes.get(op.operands[1])
+        if rhs:
+            kelems, _, _, _ = _shape_elems_bytes(rhs[0])
+            # approx: per output element, 2*K_total/out_features work
+            m = re.search(r"dim_labels=\S*?->\S*", op.line)
+            return 2.0 * out_elems * max(kelems, 1) ** 0.5  # coarse
+    return 2.0 * out_elems
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  called: Optional[Computation]) -> float:
+    """HBM bytes of a fusion: boundary tensors, EXCEPT in-place patterns.
+
+    A fusion whose root is a ``dynamic-update-slice`` is an in-place update
+    of a large buffer (KV-cache append, scan carry write): on TPU the big
+    operand/result alias in place and only the updated slice moves, so we
+    count 2x the update region plus the small operands.  Similarly a
+    ``dynamic-slice``/``gather`` root reads only the slice.
+    """
+    if called is not None and called.ops:
+        body_ops = {o.opcode for o in called.ops
+                    if o.opcode not in ("parameter", "constant")}
+        if body_ops <= {"convert", "bitcast", "copy", "transpose",
+                        "broadcast", "reshape"}:
+            # pure dtype/layout fusion: bf16 feeds the MXU directly on TPU,
+            # no materialised f32 copy exists there
+            return 0.0
+        dus = next((o for o in reversed(called.ops)
+                    if o.opcode == "dynamic-update-slice"), None)
+        if dus is not None and len(dus.operands) >= 2:
+            s = called.shapes.get(dus.operands[1])
+            upd = sum(_shape_elems_bytes(x)[1] for x in s) if s else 0
+            small = sum(
+                sum(_shape_elems_bytes(x)[1] for x in sh)
+                for o in op.operands
+                for sh in [comp.shapes.get(o)]
+                if sh and sum(_shape_elems_bytes(x)[1] for x in sh)
+                < op.result_bytes() / 4)
+            return 2.0 * upd + small
+        root = called.ops[-1]
+        if root.opcode in ("dynamic-slice", "gather"):
+            return 2.0 * op.result_bytes()
+    b = op.result_bytes()
+    for o in op.operands:
+        s = comp.shapes.get(o)
+        if s:
+            b += sum(_shape_elems_bytes(x)[1] for x in s)
+    return b
+
+
+@dataclasses.dataclass
+class CostResult:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_operand_bytes: float = 0.0
+    collective_link_bytes: float = 0.0
+    by_collective: dict = dataclasses.field(default_factory=dict)
+    loops: list = dataclasses.field(default_factory=list)
+
+    def add_collective(self, kind: str, operand: float, link: float,
+                       group: int, mult: float) -> None:
+        self.collective_operand_bytes += operand * mult
+        self.collective_link_bytes += link * mult
+        key = f"{kind}:g{group}"
+        d = self.by_collective.setdefault(key, {"operand": 0.0, "link": 0.0,
+                                                "count": 0.0})
+        d["operand"] += operand * mult
+        d["link"] += link * mult
+        d["count"] += mult
+
+
+def _collective_stats(op: Op) -> tuple[float, float, int]:
+    size = op.result_bytes()
+    g = 1
+    gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+    if gm:
+        g = int(gm.group(2))
+    else:
+        gm = re.search(r"replica_groups=\{\{([^}]*)\}", op.line)
+        if gm:
+            g = gm.group(1).count(",") + 1
+    kind = op.opcode.replace("-start", "")
+    if kind == "all-gather":
+        operand = size / max(g, 1)
+        link = size * (g - 1) / max(g, 1)
+    elif kind == "reduce-scatter":
+        operand = size * g
+        link = size * (g - 1)
+    elif kind == "all-reduce":
+        operand = size
+        link = 2.0 * size * (g - 1) / max(g, 1)
+    else:
+        operand = size
+        link = size
+    return operand, link, g
+
+
+def analyze(text: str) -> CostResult:
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with the most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+
+    res = CostResult()
+    visited_stack: set[str] = set()
+
+    def walk(cname: str, mult: float, in_fusion: bool) -> None:
+        comp = comps.get(cname)
+        if comp is None or cname in visited_stack:
+            return
+        visited_stack.add(cname)
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc.replace("-start", "")
+            if oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "partition-id", "replica-id",
+                      "copy", "copy-start", "copy-done"):
+                # copies of loop carries alias in place on TPU
+                continue
+            if base in COLLECTIVES:
+                operand, link, g = _collective_stats(op)
+                res.add_collective(base, operand, link, g, mult)
+                if not in_fusion:
+                    res.bytes_accessed += (operand + op.result_bytes()) * mult
+                continue
+            if oc == "while":
+                body = _attr(op.line, "body")
+                cond = _attr(op.line, "condition")
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                res.loops.append((body, trips))
+                if body:
+                    walk(body, mult * trips, False)
+                if cond:
+                    walk(cond, mult * trips, False)
+                continue
+            if oc == "fusion":
+                called = _attr(op.line, "calls")
+                if called:
+                    walk(called, mult, True)
+                res.bytes_accessed += mult * _fusion_bytes(op, comp,
+                                                           comps.get(called))
+                continue
+            if oc in ("call", "conditional", "map", "custom-call",
+                      "async-start"):
+                for key in ("to_apply", "calls", "true_computation",
+                            "false_computation", "branch_computations"):
+                    t = _attr(op.line, key)
+                    if t:
+                        walk(t, mult, in_fusion)
+            # flops
+            if oc == "dot":
+                res.flops += mult * _dot_flops(op, comp)
+            elif oc == "convolution":
+                res.flops += mult * _conv_flops(op, comp)
+            elif oc in ELEMENTWISE:
+                res.flops += mult * op.result_elems()
+            elif oc == "reduce":
+                ops_b = comp.shapes.get(op.operands[0]) if op.operands else None
+                if ops_b:
+                    res.flops += mult * _shape_elems_bytes(ops_b[0])[0]
+            # bytes (top level only; fusion interiors excluded)
+            if not in_fusion and oc not in ("fusion",):
+                if oc in ("dynamic-slice", "gather"):
+                    # reads only the sliced region, not the whole operand
+                    b = 2 * op.result_bytes()
+                elif oc in ("dynamic-update-slice", "scatter"):
+                    # read-modify-write of the updated region only
+                    upd = 0
+                    if len(op.operands) >= 2:
+                        s = comp.shapes.get(op.operands[1])
+                        if s:
+                            upd = sum(_shape_elems_bytes(x)[1] for x in s)
+                    b = 2 * upd
+                else:
+                    b = op.result_bytes()
+                    for o in op.operands:
+                        s = comp.shapes.get(o)
+                        if s:
+                            b += sum(_shape_elems_bytes(x)[1] for x in s)
+                res.bytes_accessed += mult * b
+        visited_stack.discard(cname)
+
+    walk(entry, 1.0, False)
+    return res
+
+
+def analyze_compiled(compiled) -> CostResult:
+    return analyze(compiled.as_text())

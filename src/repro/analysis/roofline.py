@@ -1,0 +1,25 @@
+"""Roofline terms from dry-run records (deliverable g).
+
+compute_s   = HLO_FLOPs(per device) / 197 TFLOP/s
+memory_s    = HLO_bytes(per device) / 819 GB/s          (upper bound; see
+              DESIGN.md sec.7 for the CPU-vs-TPU fusion-granularity caveat)
+collective_s = link_bytes(per device) / 50 GB/s
+              (== global collective bytes / (chips * link_bw) since the
+              post-SPMD module is the per-device program)
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def terms(rec: dict) -> dict:
+    ct = rec["cost"]["flops"] / PEAK_FLOPS
+    mt = rec["cost"]["bytes_accessed"] / HBM_BW
+    lt = rec["collectives"]["total_link_bytes"] / LINK_BW
+    dom = max(("compute", ct), ("memory", mt), ("collective", lt),
+              key=lambda kv: kv[1])
+    return {"compute_s": ct, "memory_s": mt, "collective_s": lt,
+            "bottleneck": dom[0], "roofline_s": max(ct, mt, lt),
+            "compute_fraction": ct / max(ct, mt, lt)}

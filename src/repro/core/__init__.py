@@ -1,0 +1,13 @@
+"""SCAR core: multi-model scheduling for heterogeneous MCM accelerators."""
+from .chiplet import (ALL_PATTERNS, HET_PATTERNS, MCM, ChipletClass, Dataflow,
+                      PackageParams, make_mcm)
+from .cost import (ModelWindowPlan, ScheduleResult, WindowPlan, WindowResult,
+                   evaluate_schedule, evaluate_window)
+from .maestro import CostDB, build_cost_db, expected_latency
+from .reconfig import greedy_pack, uniform_pack, validate_assignment
+from .provision import provision
+from .scheduler import (ScheduleOutcome, SearchConfig, run_config, schedule,
+                        standalone_schedule)
+from .scenarios import ARVR, DATACENTER, SCENARIO_NAMES, all_scenarios, get_scenario
+from .workload import Layer, Model, OpType, Scenario
+from .refine import refine

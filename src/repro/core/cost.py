@@ -1,0 +1,345 @@
+"""Schedule evaluation: latency/energy/EDP of SCAR schedules (Sec. III-E/F).
+
+Terms follow the paper exactly:
+
+* ``Lat^com``: 0 on the same chiplet; ``Sz/BW_nop + hops * Lat_hop + delta``
+  across the package; ``Sz/BW_dram + hops * Lat_hop + Lat_mem + delta``
+  off-chip.
+* ``Lat(sg) = sum Lat^comp(l) + Lat^ip_com(sg) + Lat^op_com(sg)`` where
+  ``ip_com`` loads segment weights (and, for the first segment of a model in a
+  window without cross-window locality, its input activations) from DRAM, and
+  ``op_com`` forwards the segment output to the next segment's chiplet (NoP) or
+  writes back to DRAM at the window boundary.  Producer pays the activation
+  transfer, so nothing is double counted.
+* ``Lat(tw)``: per model, ``max`` over segments when pipelined (inter-chiplet
+  pipelining), ``sum`` when end-to-end; the window is the ``max`` over models.
+* Energies are always aggregated (Sec. III-F).
+
+``delta`` (NoP traffic conflicts) is modelled as a serialization penalty
+proportional to the number of concurrently active models sharing the package.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .chiplet import MCM
+from .maestro import CostDB
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelWindowPlan:
+    """One model's execution plan inside a time window.
+
+    ``start``/``end``: flat CostDB layer range assigned to this window.
+    ``seg_ends``: segment boundaries as flat end-indices, strictly increasing,
+    last == ``end`` (segments are contiguous layer runs, Theorem 1).
+    ``chiplets``: one chiplet id per segment.
+    ``pipelined``: inter-chiplet pipelining (max) vs end-to-end (sum).
+    """
+
+    model_idx: int
+    start: int
+    end: int
+    seg_ends: tuple[int, ...]
+    chiplets: tuple[int, ...]
+    pipelined: bool = True
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.seg_ends)
+
+    def validate(self) -> None:
+        if self.end <= self.start:
+            raise ValueError("empty window plan")
+        if len(self.chiplets) != len(self.seg_ends):
+            raise ValueError("one chiplet per segment required")
+        prev = self.start
+        for e in self.seg_ends:
+            if e <= prev:
+                raise ValueError("segment boundaries must increase")
+            prev = e
+        if prev != self.end:
+            raise ValueError("segments must cover the window slice")
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowPlan:
+    plans: tuple[ModelWindowPlan, ...]
+
+    def validate(self) -> None:
+        used: set[int] = set()
+        for p in self.plans:
+            p.validate()
+            for c in p.chiplets:
+                if c in used:
+                    raise ValueError(f"chiplet {c} used by two models in one window")
+                used.add(c)
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowResult:
+    latency: float
+    energy: float
+    per_model_latency: dict[int, float]
+    end_chiplet: dict[int, int]          # data-locality anchor for next window
+
+    @property
+    def edp(self) -> float:
+        return self.latency * self.energy
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleResult:
+    latency: float
+    energy: float
+    windows: tuple[WindowResult, ...]
+
+    @property
+    def edp(self) -> float:
+        return self.latency * self.energy
+
+    def metric(self, name: str) -> float:
+        if name == "latency":
+            return self.latency
+        if name == "energy":
+            return self.energy
+        if name == "edp":
+            return self.edp
+        raise KeyError(name)
+
+
+def _nop_lat(sz: float, hops: int, mcm: MCM, n_active: int) -> float:
+    if hops == 0 or sz == 0:
+        return 0.0
+    pkg = mcm.pkg
+    delta = pkg.contention_delta * max(0, n_active - 1) * (sz / pkg.nop_bw)
+    return sz / pkg.nop_bw + hops * pkg.nop_hop_lat_s + delta
+
+
+def _dram_lat(sz: float, hops_to_port: int, mcm: MCM, n_active: int) -> float:
+    if sz == 0:
+        return 0.0
+    pkg = mcm.pkg
+    delta = pkg.contention_delta * max(0, n_active - 1) * (sz / pkg.dram_bw)
+    return (sz / pkg.dram_bw + hops_to_port * pkg.nop_hop_lat_s
+            + pkg.dram_lat_s + delta)
+
+
+def _nop_energy(sz: float, hops: int, mcm: MCM) -> float:
+    return sz * 8.0 * mcm.pkg.nop_e_pj_per_bit * hops * 1e-12
+
+
+def _dram_energy(sz: float, hops_to_port: int, mcm: MCM) -> float:
+    bits = sz * 8.0
+    return (bits * mcm.pkg.dram_e_pj_per_bit
+            + bits * mcm.pkg.nop_e_pj_per_bit * hops_to_port) * 1e-12
+
+
+def evaluate_window(db: CostDB, mcm: MCM, wp: WindowPlan,
+                    prev_end: Optional[dict[int, int]] = None,
+                    validate: bool = False) -> WindowResult:
+    """Evaluate one time window (latency = max over models, energy = sum)."""
+    if validate:
+        wp.validate()
+    prev_end = prev_end or {}
+    n_active = len(wp.plans)
+    per_model_lat: dict[int, float] = {}
+    end_chiplet: dict[int, int] = {}
+    total_energy = 0.0
+    for p in wp.plans:
+        seg_lats = []
+        seg_start = p.start
+        for si, seg_end in enumerate(p.seg_ends):
+            cid = p.chiplets[si]
+            cls_idx = mcm.class_idx(cid)
+            sl = slice(seg_start, seg_end)
+            comp_lat = float(db.lat[sl, cls_idx].sum())
+            comp_e = float(db.energy[sl, cls_idx].sum())
+            # ip_com: weights always stream from DRAM; first segment also
+            # loads its input activations unless the previous window of this
+            # model ended on this very chiplet (cross-window locality).
+            w_sz = float(db.w_bytes[sl].sum())
+            hops_dram = mcm.hops_to_dram(cid)
+            ip_lat = _dram_lat(w_sz, hops_dram, mcm, n_active)
+            ip_e = _dram_energy(w_sz, hops_dram, mcm)
+            if si == 0:
+                act_in = float(db.in_bytes[seg_start])
+                if prev_end.get(p.model_idx) == cid:
+                    pass  # activations already resident on-chiplet
+                elif p.model_idx in prev_end:
+                    hops = mcm.hops(prev_end[p.model_idx], cid)
+                    ip_lat += _nop_lat(act_in, hops, mcm, n_active)
+                    ip_e += _nop_energy(act_in, hops, mcm)
+                else:
+                    ip_lat += _dram_lat(act_in, hops_dram, mcm, n_active)
+                    ip_e += _dram_energy(act_in, hops_dram, mcm)
+            # op_com: forward activations to next segment (NoP), or write the
+            # model's window output back to DRAM at the window boundary.
+            act_out = float(db.out_bytes[seg_end - 1])
+            if si + 1 < p.n_segments:
+                hops = mcm.hops(cid, p.chiplets[si + 1])
+                op_lat = _nop_lat(act_out, hops, mcm, n_active)
+                op_e = _nop_energy(act_out, hops, mcm)
+            else:
+                op_lat = _dram_lat(act_out, hops_dram, mcm, n_active)
+                op_e = _dram_energy(act_out, hops_dram, mcm)
+                end_chiplet[p.model_idx] = cid
+            seg_lats.append(comp_lat + ip_lat + op_lat)
+            total_energy += comp_e + ip_e + op_e
+            seg_start = seg_end
+        if p.pipelined and p.n_segments > 1:
+            per_model_lat[p.model_idx] = max(seg_lats)
+        else:
+            per_model_lat[p.model_idx] = sum(seg_lats)
+    latency = max(per_model_lat.values()) if per_model_lat else 0.0
+    return WindowResult(latency=latency, energy=total_energy,
+                        per_model_latency=per_model_lat,
+                        end_chiplet=end_chiplet)
+
+
+def evaluate_schedule(db: CostDB, mcm: MCM,
+                      windows: Sequence[WindowPlan],
+                      validate: bool = False) -> ScheduleResult:
+    """Lat(Sc) = sum over windows; E(Sc) = sum (Sec. III-E/F)."""
+    results = []
+    prev_end: dict[int, int] = {}
+    for wp in windows:
+        res = evaluate_window(db, mcm, wp, prev_end, validate=validate)
+        results.append(res)
+        prev_end = dict(prev_end)
+        prev_end.update(res.end_chiplet)
+    lat = float(sum(r.latency for r in results))
+    energy = float(sum(r.energy for r in results))
+    return ScheduleResult(latency=lat, energy=energy, windows=tuple(results))
+
+
+# ---------------------------------------------------------------------------
+# Batched per-model evaluation (the SCHED hot loop; mirrored by the Pallas
+# kernel in repro.kernels.scar_eval)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedModelCandidates:
+    """B candidate (segmentation x placement) plans of one model's window.
+
+    ``seg_id``: [B, Lw] int segment index per layer (monotone, starts at 0).
+    ``chiplets``: [B, S_max] chiplet id per segment (-1 padding).
+    ``n_segs``: [B] number of segments per candidate.
+    """
+
+    model_idx: int
+    start: int
+    end: int
+    seg_id: np.ndarray
+    chiplets: np.ndarray
+    n_segs: np.ndarray
+
+
+def eval_model_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
+                          n_active: int,
+                          prev_end: Optional[int] = None,
+                          pipelined: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised (lat[B], energy[B]) for one model's candidate plans.
+
+    Exactly matches ``evaluate_window`` on singleton batches (tested).
+    """
+    pkg = mcm.pkg
+    B, Lw = cand.seg_id.shape
+    S = cand.chiplets.shape[1]
+    sl = slice(cand.start, cand.end)
+
+    class_map = np.asarray(mcm.class_map, dtype=np.int64)
+    cpos = np.maximum(cand.chiplets, 0)
+    seg_cls = class_map[cpos]                                    # [B, S]
+    valid_seg = (np.arange(S)[None, :] < cand.n_segs[:, None])   # [B, S]
+
+    lat_tab = db.lat[sl]                                          # [Lw, C]
+    e_tab = db.energy[sl]
+    layer_cls = np.take_along_axis(seg_cls, cand.seg_id, axis=1)  # [B, Lw]
+    lat_l = np.take_along_axis(
+        np.broadcast_to(lat_tab.T[None], (B,) + lat_tab.T.shape),
+        layer_cls[:, None, :], axis=1)[:, 0, :]                   # [B, Lw]
+    e_l = np.take_along_axis(
+        np.broadcast_to(e_tab.T[None], (B,) + e_tab.T.shape),
+        layer_cls[:, None, :], axis=1)[:, 0, :]
+
+    # segment-sum compute terms
+    one_hot = (cand.seg_id[:, :, None] == np.arange(S)[None, None, :])
+    seg_comp_lat = np.einsum("bl,bls->bs", lat_l, one_hot)
+    seg_comp_e = np.einsum("bl,bls->bs", e_l, one_hot)
+    seg_w = np.einsum("l,bls->bs", db.w_bytes[sl], one_hot)
+
+    # geometry
+    rows_, cols_ = np.divmod(cpos, mcm.cols)
+    hops_dram = np.minimum(cols_, mcm.cols - 1 - cols_)           # [B, S]
+    nxt = np.roll(cpos, -1, axis=1)
+    r2, c2 = np.divmod(nxt, mcm.cols)
+    hops_next = np.abs(rows_ - r2) + np.abs(cols_ - c2)           # [B, S]
+
+    delta_nop = pkg.contention_delta * max(0, n_active - 1) / pkg.nop_bw
+    delta_dram = pkg.contention_delta * max(0, n_active - 1) / pkg.dram_bw
+
+    def dram_lat(sz, hops):
+        return np.where(sz > 0,
+                        sz / pkg.dram_bw + hops * pkg.nop_hop_lat_s
+                        + pkg.dram_lat_s + delta_dram * sz, 0.0)
+
+    def nop_lat(sz, hops):
+        return np.where((sz > 0) & (hops > 0),
+                        sz / pkg.nop_bw + hops * pkg.nop_hop_lat_s
+                        + delta_nop * sz, 0.0)
+
+    def dram_e(sz, hops):
+        return (sz * 8.0 * (pkg.dram_e_pj_per_bit
+                            + pkg.nop_e_pj_per_bit * hops)) * 1e-12
+
+    def nop_e(sz, hops):
+        return sz * 8.0 * pkg.nop_e_pj_per_bit * hops * 1e-12
+
+    # ip_com: weights from DRAM for every segment
+    ip_lat = dram_lat(seg_w, hops_dram)
+    ip_e = dram_e(seg_w, hops_dram)
+    # first segment input activations
+    act_in = float(db.in_bytes[cand.start])
+    first_c = cpos[:, 0]
+    fr, fc = np.divmod(first_c, mcm.cols)
+    f_hops_dram = np.minimum(fc, mcm.cols - 1 - fc)
+    if prev_end is None:
+        add_lat = dram_lat(np.full(B, act_in), f_hops_dram)
+        add_e = dram_e(np.full(B, act_in), f_hops_dram)
+    else:
+        pr, pc = divmod(int(prev_end), mcm.cols)
+        hops0 = np.abs(fr - pr) + np.abs(fc - pc)
+        add_lat = nop_lat(np.full(B, act_in), hops0)
+        add_e = nop_e(np.full(B, act_in), hops0)
+    ip_lat[:, 0] += add_lat
+    ip_e[:, 0] += add_e
+
+    # op_com: boundary activations; last layer of each segment
+    seg_last_out = np.zeros((B, S))
+    # last flat layer index of each segment, per candidate
+    lidx = np.arange(Lw)
+    for s in range(S):
+        in_seg = cand.seg_id == s
+        any_ = in_seg.any(axis=1)
+        last = np.where(any_, np.where(in_seg, lidx[None, :], -1).max(axis=1), 0)
+        seg_last_out[:, s] = np.where(any_, db.out_bytes[sl][last], 0.0)
+    is_last = (np.arange(S)[None, :] == (cand.n_segs - 1)[:, None])
+    op_lat = np.where(is_last,
+                      dram_lat(seg_last_out, hops_dram),
+                      nop_lat(seg_last_out, hops_next))
+    op_e = np.where(is_last,
+                    dram_e(seg_last_out, hops_dram),
+                    nop_e(seg_last_out, hops_next))
+
+    seg_lat = np.where(valid_seg, seg_comp_lat + ip_lat + op_lat, 0.0)
+    energy = np.where(valid_seg, seg_comp_e + ip_e + op_e, 0.0).sum(axis=1)
+    multi = cand.n_segs > 1
+    if pipelined:
+        lat = np.where(multi, seg_lat.max(axis=1), seg_lat.sum(axis=1))
+    else:
+        lat = seg_lat.sum(axis=1)
+    return lat, energy

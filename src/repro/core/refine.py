@@ -1,0 +1,208 @@
+"""Beyond-paper: local-search refinement of SCAR schedules.
+
+The paper's SCHED engine optimises each time window greedily and constrains
+placements to XY-contiguous chiplet paths rooted at DRAM ports — both are
+search heuristics, not hardware requirements (the cost model charges hop
+distance wherever chiplets sit).  This pass takes the paper-faithful
+schedule and applies accept-if-better local moves over the *whole* schedule
+(cross-window effects included via data-locality anchors):
+
+  * ``boundary``: shift one model's segment boundary by one layer;
+  * ``relocate``: move one segment of one model to any free chiplet
+    (drops the contiguity heuristic; comm costs follow the hop metric);
+  * ``rewindow``: move one layer between a model's adjacent windows
+    (undoes greedy-packing decisions the per-window search can't).
+
+Simulated-annealing acceptance with a small temperature escapes per-window
+local minima; the result is validated against Theorems 1-2 on every accept.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .chiplet import MCM
+from .cost import ModelWindowPlan, WindowPlan, evaluate_schedule
+from .maestro import CostDB
+from .scheduler import ScheduleOutcome, get_cost_db
+
+
+def _from_window_plans(wps: list[WindowPlan]) -> list[list[ModelWindowPlan]]:
+    return [[p for p in wp.plans] for wp in wps]
+
+
+def _clone_windows(windows: list[list[ModelWindowPlan]]
+                   ) -> list[list[ModelWindowPlan]]:
+    return [list(ps) for ps in windows]
+
+
+def _to_plans(windows: list[list[ModelWindowPlan]]) -> list[WindowPlan]:
+    return [WindowPlan(plans=tuple(sorted(ps, key=lambda p: p.model_idx)))
+            for ps in windows if ps]
+
+
+def _try_boundary(rng, windows, db):
+    w = rng.integers(len(windows))
+    ps = windows[w]
+    if not ps:
+        return None
+    i = rng.integers(len(ps))
+    p = ps[i]
+    if p.n_segments < 2:
+        return None
+    si = int(rng.integers(p.n_segments - 1))
+    delta = int(rng.choice([-1, 1]))
+    ends = list(p.seg_ends)
+    new_end = ends[si] + delta
+    lo = p.start if si == 0 else ends[si - 1]
+    if not (lo < new_end < ends[si + 1]):
+        return None
+    ends[si] = new_end
+    new = dataclasses.replace(p, seg_ends=tuple(ends))
+    out = _clone_windows_replace(windows, w, i, new)
+    return out
+
+
+def _try_relocate(rng, windows, db, mcm):
+    w = int(rng.integers(len(windows)))
+    ps = windows[w]
+    if not ps:
+        return None
+    i = int(rng.integers(len(ps)))
+    p = ps[i]
+    used = {c for q in ps for c in q.chiplets}
+    free = [c for c in range(mcm.n_chiplets) if c not in used]
+    if not free:
+        return None
+    si = int(rng.integers(p.n_segments))
+    chips = list(p.chiplets)
+    chips[si] = int(rng.choice(free))
+    new = dataclasses.replace(p, chiplets=tuple(chips))
+    return _clone_windows_replace(windows, w, i, new)
+
+
+def _try_rewindow(rng, windows, db):
+    """Move one boundary layer between a model's adjacent windows."""
+    w = int(rng.integers(len(windows)))
+    ps = windows[w]
+    if not ps:
+        return None
+    i = int(rng.integers(len(ps)))
+    p = ps[i]
+    # find this model's plan in the next window
+    for w2 in range(w + 1, len(windows)):
+        js = [j for j, q in enumerate(windows[w2])
+              if q.model_idx == p.model_idx]
+        if js:
+            break
+    else:
+        return None
+    j = js[0]
+    q = windows[w2][j]
+    if q.start != p.end:
+        return None  # not adjacent ranges (shouldn't happen)
+    if bool(rng.integers(2)):
+        # give the last layer of w to w2
+        if p.end - p.start < 2:
+            return None
+        new_p = _shrink_tail(p)
+        new_q = _grow_head(q)
+    else:
+        if q.end - q.start < 2:
+            return None
+        new_p = _grow_tail(p)
+        new_q = _shrink_head(q)
+    out = _clone_windows(windows)
+    out[w][i] = new_p
+    out[w2][j] = new_q
+    return out
+
+
+def _shrink_tail(p: ModelWindowPlan) -> ModelWindowPlan:
+    ends = [min(e, p.end - 1) for e in p.seg_ends]
+    ends[-1] = p.end - 1
+    # deduplicate collapsed segments
+    ends2, chips2, prev = [], [], p.start
+    for e, c in zip(ends, p.chiplets):
+        if e > prev:
+            ends2.append(e)
+            chips2.append(c)
+            prev = e
+    return dataclasses.replace(p, end=p.end - 1, seg_ends=tuple(ends2),
+                               chiplets=tuple(chips2))
+
+
+def _grow_tail(p: ModelWindowPlan) -> ModelWindowPlan:
+    ends = list(p.seg_ends)
+    ends[-1] = p.end + 1
+    return dataclasses.replace(p, end=p.end + 1, seg_ends=tuple(ends))
+
+
+def _grow_head(q: ModelWindowPlan) -> ModelWindowPlan:
+    return dataclasses.replace(q, start=q.start - 1)
+
+
+def _shrink_head(q: ModelWindowPlan) -> ModelWindowPlan:
+    ends = [e for e in q.seg_ends if e > q.start + 1]
+    chips = q.chiplets[len(q.seg_ends) - len(ends):]
+    return dataclasses.replace(q, start=q.start + 1, seg_ends=tuple(ends),
+                               chiplets=tuple(chips))
+
+
+def _clone_windows_replace(windows, w, i, new_plan):
+    out = _clone_windows(windows)
+    out[w][i] = new_plan
+    return out
+
+
+def refine(sc, mcm: MCM, outcome: ScheduleOutcome, metric: str = "edp",
+           iters: int = 600, seed: int = 0,
+           temperature: float = 0.02) -> ScheduleOutcome:
+    """Anneal-refine a schedule; returns an outcome that is never worse."""
+    db = get_cost_db(sc, mcm)
+    rng = np.random.default_rng(seed)
+    windows = _from_window_plans([w.plan for w in outcome.windows])
+    if not windows:
+        return outcome
+    cur_plans = _to_plans(windows)
+    cur = evaluate_schedule(db, mcm, cur_plans, validate=True)
+    best_windows, best = windows, cur
+    moves = [_try_boundary, _try_relocate, _try_rewindow]
+    for it in range(iters):
+        mv = moves[int(rng.integers(len(moves)))]
+        try:
+            cand = (mv(rng, windows, db) if mv is not _try_relocate
+                    else mv(rng, windows, db, mcm))
+            if cand is None:
+                continue
+            plans = _to_plans(cand)
+            res = evaluate_schedule(db, mcm, plans, validate=True)
+        except (ValueError, IndexError):
+            continue
+        t = temperature * (1.0 - it / iters)
+        cur_m, new_m = cur.metric(metric), res.metric(metric)
+        accept = new_m < cur_m or (
+            t > 0 and rng.random() < math.exp(-(new_m / cur_m - 1.0)
+                                              / max(t, 1e-9)))
+        if accept:
+            windows, cur = cand, res
+            if res.metric(metric) < best.metric(metric):
+                best_windows, best = cand, res
+    final_plans = _to_plans(best_windows)
+    final = evaluate_schedule(db, mcm, final_plans, validate=True)
+    wrs = []
+    from .sched import WindowSearchResult
+    from .cost import evaluate_window
+    prev_end: dict[int, int] = {}
+    for wp in final_plans:
+        res = evaluate_window(db, mcm, wp, prev_end)
+        wrs.append(WindowSearchResult(plan=wp, result=res, explored=[]))
+        prev_end = dict(prev_end)
+        prev_end.update(res.end_chiplet)
+    return ScheduleOutcome(scenario=outcome.scenario, mcm=outcome.mcm,
+                           config=outcome.config, result=final, windows=wrs,
+                           assignment=outcome.assignment,
+                           explored=outcome.explored)

@@ -1,0 +1,42 @@
+"""The paper's ten multi-model workload scenarios (Table II)."""
+from __future__ import annotations
+
+from .modelzoo import get_model
+from .workload import Scenario
+
+# (scenario name, use case, [(model, batch), ...]) — exactly Table II.
+_TABLE_II: list[tuple[str, str, list[tuple[str, int]]]] = [
+    ("dc1_lms", "datacenter", [("gpt-l", 1), ("bert-l", 3)]),
+    ("dc2_lms_image_light", "datacenter",
+     [("gpt-l", 1), ("bert-l", 3), ("resnet-50", 1)]),
+    ("dc3_lms_image_heavy", "datacenter",
+     [("gpt-l", 1), ("bert-l", 3), ("resnet-50", 32)]),
+    ("dc4_lms_seg_image", "datacenter",
+     [("gpt-l", 8), ("bert-l", 24), ("u-net", 1), ("resnet-50", 32)]),
+    ("dc5_lms_seg_image_wide", "datacenter",
+     [("gpt-l", 8), ("bert-l", 24), ("bert-base", 24), ("u-net", 1),
+      ("resnet-50", 32), ("googlenet", 32)]),
+    ("xr6_ar_assistant", "arvr",
+     [("d2go", 10), ("planercnn", 15), ("midas", 30), ("emformer", 3),
+      ("hrvit", 10)]),
+    ("xr7_ar_gaming", "arvr",
+     [("planercnn", 15), ("hand-sp", 45), ("midas", 30)]),
+    ("xr8_outdoors", "arvr", [("d2go", 30), ("emformer", 3)]),
+    ("xr9_social", "arvr", [("eyecod", 60), ("hand-sp", 30), ("sp2dense", 30)]),
+    ("xr10_vr_gaming", "arvr", [("eyecod", 60), ("hand-sp", 45)]),
+]
+
+SCENARIO_NAMES = [name for name, _, _ in _TABLE_II]
+DATACENTER = [n for n, uc, _ in _TABLE_II if uc == "datacenter"]
+ARVR = [n for n, uc, _ in _TABLE_II if uc == "arvr"]
+
+
+def get_scenario(name: str) -> Scenario:
+    for sname, _, spec in _TABLE_II:
+        if sname == name:
+            return Scenario(sname, tuple(get_model(m, b) for m, b in spec))
+    raise KeyError(f"unknown scenario {name!r}; have {SCENARIO_NAMES}")
+
+
+def all_scenarios() -> list[Scenario]:
+    return [get_scenario(n) for n in SCENARIO_NAMES]

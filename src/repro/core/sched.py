@@ -1,0 +1,220 @@
+"""Scheduling engine (SCHED): segment -> chiplet mapping (Sec. IV-D).
+
+The search space is a forest of scheduling trees: tree nodes are chiplets,
+edges are XY-mesh adjacencies, subtree roots are constrained to (i) chiplets
+with a direct DRAM interface (left/right package columns) or (ii) the model's
+ending chiplet from the previous window (cross-window data locality).  A
+constrained DFS enumerates self-avoiding paths (one chiplet per segment,
+exclusive occupancy), per-model candidates are scored with the vectorised
+cost model, and a beam search combines disjoint per-model paths into the
+window schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .chiplet import MCM
+from .cost import (BatchedModelCandidates, ModelWindowPlan, WindowPlan,
+                   WindowResult, eval_model_candidates, evaluate_window)
+from .maestro import CostDB
+
+
+def enumerate_paths(mcm: MCM, length: int, starts: list[int],
+                    cap: int = 512) -> list[tuple[int, ...]]:
+    """Constrained DFS: self-avoiding XY-mesh paths of ``length`` chiplets.
+
+    The enumeration budget is split evenly across the valid start positions
+    (the scheduling-tree roots) so every subtree contributes candidates.
+    """
+    paths: list[tuple[int, ...]] = []
+    per_start = max(1, cap // max(1, len(starts)))
+
+    def dfs(path: list[int], budget: list[int]) -> bool:
+        if len(path) == length:
+            paths.append(tuple(path))
+            budget[0] -= 1
+            return budget[0] <= 0
+        for nb in mcm.neighbors(path[-1]):
+            if nb in path:
+                continue
+            path.append(nb)
+            if dfs(path, budget):
+                return True
+            path.pop()
+        return False
+
+    seen: set[int] = set()
+    for s in starts:
+        if s in seen:
+            continue
+        seen.add(s)
+        dfs([s], [per_start])
+    return paths
+
+
+def _path_mask(path: tuple[int, ...]) -> int:
+    m = 0
+    for c in path:
+        m |= 1 << c
+    return m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCandidateSet:
+    """Scored placement candidates of one model in one window."""
+
+    model_idx: int
+    start: int
+    end: int
+    seg_ends_abs: list[tuple[int, ...]]     # per candidate
+    paths: list[tuple[int, ...]]
+    masks: list[int]
+    lat: np.ndarray
+    energy: np.ndarray
+    keep: int = 64                           # preferred expansion width
+
+
+def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
+                     rng_range: tuple[int, int],
+                     segmentations: list[tuple[int, ...]],
+                     n_active: int,
+                     prev_end: Optional[int],
+                     path_cap: int = 256,
+                     keep: int = 64,
+                     metric: str = "edp") -> ModelCandidateSet:
+    """Enumerate (segmentation x path) candidates for one model, keep top-k."""
+    start, end = rng_range
+    starts = list(mcm.dram_ports())
+    if prev_end is not None and prev_end not in starts:
+        starts = [prev_end] + starts
+    # Tier-2 roots: every remaining chiplet.  Only consulted by the combiner
+    # when all tree-constrained candidates violate exclusive occupancy (the
+    # extra hops to a DRAM port are charged by the cost model).
+    fallback_starts = [c for c in range(mcm.n_chiplets) if c not in starts]
+    Lw = end - start
+
+    # Feasibility fallback: the trivial single-segment plan can occupy any
+    # one free chiplet, so a disjoint combination always exists.
+    if (Lw,) not in segmentations:
+        segmentations = list(segmentations) + [(Lw,)]
+
+    all_seg_ends: list[tuple[int, ...]] = []
+    all_paths: list[tuple[int, ...]] = []
+    tiers: list[int] = []
+    by_len: dict[int, list[list[tuple[int, ...]]]] = {}
+    for seg in segmentations:
+        n_seg = len(seg)
+        if n_seg not in by_len:
+            by_len[n_seg] = [
+                enumerate_paths(mcm, n_seg, starts, cap=path_cap),
+                enumerate_paths(mcm, n_seg, fallback_starts, cap=path_cap),
+            ]
+        for tier, pool in enumerate(by_len[n_seg]):
+            for path in pool:
+                all_seg_ends.append(tuple(start + e for e in seg))
+                all_paths.append(path)
+                tiers.append(tier)
+    if not all_paths:
+        raise RuntimeError(f"no placement candidates for model {model_idx}")
+
+    B = len(all_paths)
+    S = max(len(p) for p in all_paths)
+    seg_id = np.zeros((B, Lw), dtype=np.int64)
+    chips = np.full((B, S), -1, dtype=np.int64)
+    n_segs = np.zeros(B, dtype=np.int64)
+    for b, (se, path) in enumerate(zip(all_seg_ends, all_paths)):
+        prev_abs = start
+        for si, e_abs in enumerate(se):
+            seg_id[b, prev_abs - start:e_abs - start] = si
+            prev_abs = e_abs
+        chips[b, :len(path)] = path
+        n_segs[b] = len(path)
+
+    cand = BatchedModelCandidates(model_idx=model_idx, start=start, end=end,
+                                  seg_id=seg_id, chiplets=chips, n_segs=n_segs)
+    lat, energy = eval_model_candidates(db, mcm, cand, n_active=n_active,
+                                        prev_end=prev_end)
+    if metric == "latency":
+        score = lat
+    elif metric == "energy":
+        score = energy
+    else:
+        score = lat * energy
+    # Keep ALL candidates sorted by (tier, score); the combiner expands the
+    # first ``keep`` per beam item and falls back deeper (eventually into the
+    # unconstrained-root tier) only when blocked by exclusive occupancy.
+    order = np.lexsort((score, np.asarray(tiers)))
+    return ModelCandidateSet(
+        model_idx=model_idx, start=start, end=end,
+        seg_ends_abs=[all_seg_ends[i] for i in order],
+        paths=[all_paths[i] for i in order],
+        masks=[_path_mask(all_paths[i]) for i in order],
+        lat=lat[order], energy=energy[order], keep=keep)
+
+
+@dataclasses.dataclass
+class WindowSearchResult:
+    plan: WindowPlan
+    result: WindowResult
+    explored: list[tuple[float, float]]   # (lat, energy) cloud for Pareto
+
+
+def combine_candidates(db: CostDB, mcm: MCM,
+                       sets: list[ModelCandidateSet],
+                       prev_end: dict[int, int],
+                       metric: str = "edp",
+                       beam: int = 64,
+                       max_expansions: int = 20000) -> WindowSearchResult:
+    """Beam search over disjoint per-model path combinations."""
+    # order models by compute weight (largest first: hardest to place)
+    sets = sorted(sets, key=lambda s: -float(np.min(s.lat)))
+    # beam items: (mask, lat_max, energy_sum, [choice indices])
+    items: list[tuple[int, float, float, list[int]]] = [(0, 0.0, 0.0, [])]
+    explored: list[tuple[float, float]] = []
+    expansions = 0
+    for cs in sets:
+        nxt: list[tuple[int, float, float, list[int]]] = []
+        for mask, lmax, esum, picks in items:
+            found = 0
+            for ci in range(len(cs.paths)):
+                if (expansions >= max_expansions or found >= cs.keep) and nxt:
+                    break
+                if mask & cs.masks[ci]:
+                    continue
+                expansions += 1
+                found += 1
+                nl = max(lmax, float(cs.lat[ci]))
+                ne = esum + float(cs.energy[ci])
+                nxt.append((mask | cs.masks[ci], nl, ne, picks + [ci]))
+        if not nxt:
+            raise RuntimeError(
+                f"no disjoint placement for model {cs.model_idx} even after "
+                f"scanning all {len(cs.paths)} candidates; "
+                f"increase path_cap or reduce provisioned nodes")
+
+        def key(it):
+            _, l, e, _ = it
+            if metric == "latency":
+                return l
+            if metric == "energy":
+                return e
+            return l * e
+
+        nxt.sort(key=key)
+        explored.extend((l, e) for _, l, e, _ in nxt[:beam])
+        items = nxt[:beam]
+
+    best = items[0]
+    _, _, _, picks = best
+    plans = []
+    for cs, ci in zip(sets, picks):
+        plans.append(ModelWindowPlan(
+            model_idx=cs.model_idx, start=cs.start, end=cs.end,
+            seg_ends=cs.seg_ends_abs[ci], chiplets=cs.paths[ci],
+            pipelined=True))
+    plan = WindowPlan(plans=tuple(sorted(plans, key=lambda p: p.model_idx)))
+    result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+    return WindowSearchResult(plan=plan, result=result, explored=explored)

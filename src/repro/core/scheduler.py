@@ -1,0 +1,169 @@
+"""End-to-end SCAR scheduler (Fig. 3 framework flow).
+
+Pipeline per scenario x MCM x optimisation target:
+  MCM-Reconfig (windows, greedy packing) -> per window: PROV (Eq. 2) ->
+  SEG (Heuristic 1 top-k) -> SCHED (tree search / EA) -> scored schedule.
+
+Also provides the paper's two baselines: ``standalone`` (one chiplet per
+model, no pipelining) and Simba-like pipelining (= the full scheduler on a
+homogeneous MCM; just pass a homogeneous pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .chiplet import MCM, PackageParams, make_mcm
+from .cost import (ModelWindowPlan, ScheduleResult, WindowPlan,
+                   evaluate_schedule)
+from .maestro import CostDB, build_cost_db
+from .reconfig import WindowAssignment, greedy_pack, uniform_pack
+from .provision import provision
+from .sched import WindowSearchResult, build_candidates, combine_candidates
+from .search import evolutionary_combine
+from .segmentation import top_k_segmentations
+from .workload import Scenario
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    metric: str = "edp"                 # latency | energy | edp
+    n_splits: int = 4                   # paper default (5 windows)
+    packing: str = "greedy"             # greedy | uniform (ablation)
+    algo: str = "brute"                 # brute | evolutionary
+    seg_top_k: int = 4
+    seg_cap: int = 512
+    path_cap: int = 128
+    keep_per_model: int = 48
+    beam: int = 48
+    max_nodes_per_model: Optional[int] = 6   # Heuristic 2 user cap
+    ea_population: int = 10             # paper Sec. V-A
+    ea_generations: int = 4
+    seed: int = 0
+    refine_iters: int = 0               # beyond-paper anneal refinement
+
+
+@dataclasses.dataclass
+class ScheduleOutcome:
+    scenario: str
+    mcm: str
+    config: SearchConfig
+    result: ScheduleResult
+    windows: list[WindowSearchResult]
+    assignment: WindowAssignment
+    explored: list[tuple[float, float]]   # (lat, energy) cloud across windows
+
+    @property
+    def edp(self) -> float:
+        return self.result.edp
+
+
+_DB_CACHE: dict[tuple, CostDB] = {}
+
+
+def get_cost_db(sc: Scenario, mcm: MCM) -> CostDB:
+    key = (sc.name,
+           tuple((m.name, len(m.layers), m.batch) for m in sc.models),
+           tuple((c.dataflow.value, c.n_pe) for c in mcm.classes),
+           mcm.pkg)  # PackageParams is frozen -> hashable
+    if key not in _DB_CACHE:
+        _DB_CACHE[key] = build_cost_db(sc, mcm.classes, mcm.pkg)
+    return _DB_CACHE[key]
+
+
+def schedule(sc: Scenario, mcm: MCM,
+             cfg: Optional[SearchConfig] = None) -> ScheduleOutcome:
+    """Run the full SCAR pipeline and return the optimised schedule."""
+    cfg = cfg or SearchConfig()
+    db = get_cost_db(sc, mcm)
+    counts = mcm.class_counts()
+    if cfg.packing == "greedy":
+        wa = greedy_pack(db, counts, cfg.n_splits)
+    elif cfg.packing == "uniform":
+        wa = uniform_pack(db, cfg.n_splits)
+    else:
+        raise KeyError(cfg.packing)
+
+    window_results: list[WindowSearchResult] = []
+    prev_end: dict[int, int] = {}
+    explored: list[tuple[float, float]] = []
+    for w, ranges in enumerate(wa.ranges):
+        alloc = provision(db, counts, ranges, mcm.n_chiplets,
+                          metric=cfg.metric,
+                          max_nodes_per_model=cfg.max_nodes_per_model)
+        sets = []
+        n_active = len(ranges)
+        for mi, (s, e) in sorted(ranges.items()):
+            segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
+                                       k=cfg.seg_top_k, cap=cfg.seg_cap,
+                                       metric=cfg.metric)
+            sets.append(build_candidates(
+                db, mcm, mi, (s, e), segs, n_active=n_active,
+                prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
+                keep=cfg.keep_per_model, metric=cfg.metric))
+        if cfg.algo == "evolutionary":
+            wr = evolutionary_combine(db, mcm, sets, prev_end,
+                                      metric=cfg.metric,
+                                      population=cfg.ea_population,
+                                      generations=cfg.ea_generations,
+                                      seed=cfg.seed + w)
+        else:
+            wr = combine_candidates(db, mcm, sets, prev_end,
+                                    metric=cfg.metric, beam=cfg.beam)
+        window_results.append(wr)
+        explored.extend(wr.explored)
+        prev_end = dict(prev_end)
+        prev_end.update(wr.result.end_chiplet)
+
+    result = evaluate_schedule(db, mcm, [wr.plan for wr in window_results],
+                               validate=True)
+    outcome = ScheduleOutcome(scenario=sc.name, mcm=mcm.name, config=cfg,
+                              result=result, windows=window_results,
+                              assignment=wa, explored=explored)
+    if cfg.refine_iters > 0:
+        from .refine import refine  # local import: refine uses this module
+        outcome = refine(sc, mcm, outcome, metric=cfg.metric,
+                         iters=cfg.refine_iters, seed=cfg.seed)
+    return outcome
+
+
+def standalone_schedule(sc: Scenario, mcm: MCM) -> ScheduleOutcome:
+    """Baseline: one chiplet per model, single window, no pipelining."""
+    db = get_cost_db(sc, mcm)
+    ports = mcm.dram_ports()
+    order = sorted(range(db.n_models),
+                   key=lambda mi: -float(db.lat[db.model_slice(mi), 0].sum()))
+    if db.n_models > mcm.n_chiplets:
+        raise ValueError("more models than chiplets in standalone mode")
+    chosen: list[int] = []
+    pool = ports + [c for c in range(mcm.n_chiplets) if c not in ports]
+    for mi in order:
+        chosen.append(pool[len(chosen)])
+    plans = []
+    for mi, cid in zip(order, chosen):
+        sl = db.model_slice(mi)
+        plans.append(ModelWindowPlan(model_idx=mi, start=sl.start,
+                                     end=sl.stop, seg_ends=(sl.stop,),
+                                     chiplets=(cid,), pipelined=False))
+    plan = WindowPlan(plans=tuple(sorted(plans, key=lambda p: p.model_idx)))
+    result = evaluate_schedule(db, mcm, [plan], validate=True)
+    wa = WindowAssignment(
+        ranges=({mi: (db.model_slice(mi).start, db.model_slice(mi).stop)
+                 for mi in range(db.n_models)},),
+        boundaries=(float("inf"),))
+    return ScheduleOutcome(scenario=sc.name, mcm=mcm.name,
+                           config=SearchConfig(), result=result,
+                           windows=[], assignment=wa,
+                           explored=[(result.latency, result.energy)])
+
+
+def run_config(scenario: Scenario, pattern: str, rows: int = 3, cols: int = 3,
+               n_pe: int = 4096, cfg: Optional[SearchConfig] = None,
+               standalone: bool = False) -> ScheduleOutcome:
+    """Convenience wrapper used by benchmarks: pattern name -> outcome."""
+    mcm = make_mcm(pattern, rows=rows, cols=cols, n_pe=n_pe)
+    if standalone:
+        return standalone_schedule(scenario, mcm)
+    return schedule(scenario, mcm, cfg)

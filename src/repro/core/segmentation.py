@@ -1,0 +1,94 @@
+"""Segmentation engine (SEG): layer-to-segment partitioning (Sec. IV-C).
+
+A segmentation of a model's window slice [start, end) with up to N nodes is a
+choice of <= N-1 split points among the end-1-start interior positions
+(segments are contiguous, Theorem 1).  Heuristic 1 scores each model's
+segmentation space *independently* with a placement-agnostic score and keeps
+the top-k, reducing O(prod_i |L_i| x |N_i|) to O(max_i |L_i| x |N_i|); the
+cross product of per-model top-k's is handed to SCHED.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from .chiplet import MCM
+from .maestro import CostDB
+
+
+def enumerate_segmentations(n_layers: int, max_segments: int,
+                            cap: int = 4096) -> list[tuple[int, ...]]:
+    """All segmentations of ``n_layers`` into <= ``max_segments`` runs.
+
+    Returned as tuples of *relative* end offsets (1..n_layers, last ==
+    n_layers).  Deterministically subsampled to ``cap`` if the space is
+    larger (Heuristic 2 keeps this from exploding in practice).
+    """
+    max_segments = max(1, min(max_segments, n_layers))
+    out: list[tuple[int, ...]] = []
+    for k in range(max_segments):  # k split points -> k+1 segments
+        for cuts in itertools.combinations(range(1, n_layers), k):
+            out.append(cuts + (n_layers,))
+            if len(out) >= 4 * cap:
+                break
+        if len(out) >= 4 * cap:
+            break
+    if len(out) > cap:
+        idx = np.linspace(0, len(out) - 1, cap).astype(int)
+        out = [out[i] for i in idx]
+    return out
+
+
+def score_segmentation(db: CostDB, mcm: MCM, start: int,
+                       seg_ends_rel: tuple[int, ...],
+                       metric: str = "edp") -> float:
+    """Placement-agnostic score: each segment on its best-affinity class.
+
+    Uses the best class per segment (heterogeneous upper bound on affinity),
+    DRAM weight-load time, pipelined (max) latency across segments.
+    """
+    pkg = mcm.pkg
+    seg_lat = []
+    seg_e = []
+    s = start
+    for e_rel in seg_ends_rel:
+        e = start + e_rel
+        lat_per_class = db.lat[s:e].sum(axis=0)       # [n_classes]
+        c = int(np.argmin(lat_per_class))
+        w = float(db.w_bytes[s:e].sum())
+        load = w / pkg.dram_bw + pkg.dram_lat_s
+        seg_lat.append(float(lat_per_class[c]) + load)
+        seg_e.append(float(db.energy[s:e, c].sum())
+                     + w * 8.0 * pkg.dram_e_pj_per_bit * 1e-12)
+        s = e
+    lat = max(seg_lat) if len(seg_lat) > 1 else sum(seg_lat)
+    energy = sum(seg_e)
+    if metric == "latency":
+        return lat
+    if metric == "energy":
+        return energy
+    return lat * energy
+
+
+def top_k_segmentations(db: CostDB, mcm: MCM, start: int, end: int,
+                        n_nodes: int, k: int = 4, cap: int = 1024,
+                        metric: str = "edp") -> list[tuple[int, ...]]:
+    """Heuristic 1 step 1: per-model top-k segmentations by solo score."""
+    cands = enumerate_segmentations(end - start, n_nodes, cap=cap)
+    scored = sorted(cands, key=lambda se: score_segmentation(
+        db, mcm, start, se, metric))
+    return scored[:k]
+
+
+def co_explore(per_model_topk: dict[int, list[tuple[int, ...]]],
+               cap: int = 256) -> list[dict[int, tuple[int, ...]]]:
+    """Heuristic 1 step 2: combinatorial co-exploration of per-model top-k."""
+    models = sorted(per_model_topk)
+    pools = [per_model_topk[m] for m in models]
+    combos = []
+    for combo in itertools.product(*pools):
+        combos.append(dict(zip(models, combo)))
+        if len(combos) >= cap:
+            break
+    return combos

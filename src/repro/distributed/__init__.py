@@ -1,0 +1,2 @@
+from . import sharding
+from .sharding import ShardingSpecs, make_specs, param_specs, opt_state_specs, batch_specs, style_for

@@ -1,0 +1,137 @@
+"""Sharded, atomic, elastic checkpointing (no orbax in this environment).
+
+Layout:  <dir>/step_<N>/
+            manifest.msgpack   {step, leaves: [{path, shape, dtype, sha256}]}
+            data.npz           one entry per pytree leaf (host-local shards
+                               in a multi-process deployment; full arrays on
+                               a single host)
+
+Properties required at scale:
+* **atomic**: written to ``step_<N>.tmp`` then renamed — a crash never leaves
+  a half-written checkpoint that parses.
+* **verified**: per-leaf sha256 in the manifest; corrupt checkpoints are
+  detected at restore and skipped (fall back to the previous one).
+* **elastic**: restore returns host arrays and re-shards onto *whatever* mesh
+  the new job runs (device_put with the new NamedSharding) — a restart on a
+  different topology resumes cleanly.
+* **async**: ``save_async`` runs serialization on a background thread.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> list[tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten(tree)
+    arrays = {}
+    manifest = {"step": step, "leaves": []}
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        arrays[key] = arr
+        manifest["leaves"].append({
+            "path": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+        })
+    np.savez(os.path.join(tmp, "data.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree,
+               keep: int = 3) -> threading.Thread:
+    host_tree = jax.tree.map(np.asarray, tree)  # snapshot before returning
+    t = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, keep),
+                         daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(list_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _verify_and_load(path: str) -> Optional[dict[str, np.ndarray]]:
+    try:
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        data = np.load(os.path.join(path, "data.npz"))
+        out = {}
+        for leaf in manifest["leaves"]:
+            arr = data[leaf["path"]]
+            if hashlib.sha256(arr.tobytes()).hexdigest() != leaf["sha256"]:
+                return None
+            if arr.dtype.kind == "V":  # bfloat16 round-trips as void
+                import ml_dtypes  # noqa: F401 (registers the dtype)
+                arr = arr.view(np.dtype(leaf["dtype"]))
+            out[leaf["path"]] = arr
+        return out
+    except Exception:  # noqa: BLE001 - any corruption -> unusable checkpoint
+        return None
+
+
+def restore(ckpt_dir: str, like, shardings=None,
+            step: Optional[int] = None) -> tuple[Any, int]:
+    """Restore the newest valid checkpoint into ``like``'s structure.
+
+    ``shardings``: optional NamedSharding pytree — arrays are placed directly
+    onto the (possibly different) current mesh: elastic restart.
+    Returns (tree, step); raises FileNotFoundError if nothing valid exists.
+    """
+    steps = list_steps(ckpt_dir)
+    if step is not None:
+        steps = [s for s in steps if s == step]
+    for s in reversed(steps):
+        data = _verify_and_load(os.path.join(ckpt_dir, f"step_{s:08d}"))
+        if data is None:
+            continue  # corrupt: fall back to an older checkpoint
+        keys = [k for k, _ in _flatten(like)]
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        arrays = [data[k] for k in keys]
+        tree = jax.tree_util.tree_unflatten(treedef, arrays)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, s
+    raise FileNotFoundError(f"no valid checkpoint under {ckpt_dir}")

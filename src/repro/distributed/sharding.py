@@ -1,0 +1,233 @@
+"""Sharding rules: mesh axes -> PartitionSpecs for params, activations,
+optimizer state, and KV caches.
+
+Two styles, chosen per architecture:
+
+* ``tp`` (default): Megatron-style tensor parallelism over the ``model`` axis
+  (attention heads, FFN hidden, MoE experts, vocab), batch over
+  ``(pod, data)``.  Padding of heads/vocab/experts to the TP degree is done in
+  ``ModelDims`` (exact at tp=1).
+* ``dp`` (small archs: xlstm-350m, zamba2-2.7b): parameters replicated,
+  batch sharded over as many mesh axes as divide it, optimizer state ZeRO-1
+  sharded.  This is what production systems actually do for sub-3B models.
+
+Optimizer state additionally gets ZeRO-1 sharding: the largest dimension not
+already sharded and divisible by the ``data`` axis is sharded over ``data``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+DP_STYLE_ARCHS = {"xlstm-350m", "zamba2-2.7b"}
+# >=30 GB parameter archs: weights sharded 2D over (data x model) — FSDP.
+# XLA GSPMD inserts the per-layer weight all-gathers; optimizer state stays
+# fully sharded.  MoE experts shard E over 'data' and d_ff over 'model'.
+FSDP_ARCHS = {"arctic-480b", "llama-3.2-vision-90b", "command-r-35b",
+              "qwen2.5-32b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingSpecs:
+    """Activation-side specs threaded through the model as constraints."""
+    act: P            # [B, S, D]
+    ffn: P            # [B, S, F]
+    expert: P         # [G, E, C, D]
+    kv_cache: P       # [B, S, H, hd]
+    kv_cache_stacked: P   # [L, B, S, H, hd]
+    logits: P         # [B, S, V]
+    heads: P = None   # [B, S, H, hd] attention q/k/v head constraint
+    ssm_heads: P = None   # [B, L, H, P] ssm head constraint
+
+
+def style_for(cfg: ArchConfig) -> str:
+    return "dp" if cfg.name in DP_STYLE_ARCHS else "tp"
+
+
+def _dp_axes(mesh_axes: tuple[str, ...], batch: int,
+             mesh_shape: dict[str, int], style: str) -> tuple[str, ...]:
+    """Batch axes: every mesh axis (in order) whose product divides batch."""
+    cand = ["pod", "data"] if "pod" in mesh_axes else ["data"]
+    if style == "dp":
+        cand = cand + ["model"]
+    axes: list[str] = []
+    prod = 1
+    for a in cand:
+        if a in mesh_axes and batch % (prod * mesh_shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh_shape[a]
+    return tuple(axes)
+
+
+def make_specs(cfg: ArchConfig, mesh: jax.sharding.Mesh, batch: int,
+               seq_shard: bool = False,
+               seq_parallel: bool = False,
+               expert_axes: str = "default") -> ShardingSpecs:
+    """Activation specs for a given cell.
+
+    ``seq_shard``: shard the KV-cache sequence dim over 'data' (long-context
+    decode at batch=1).  ``seq_parallel``: Megatron-SP — shard the activation
+    sequence dim over 'model' between blocks (norm/residual traffic /tp).
+    ``expert_axes``: 'default' | 'model_major' — MoE EP layout."""
+    style = style_for(cfg)
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = _dp_axes(tuple(mesh.axis_names), batch, shape, style)
+    dp_spec = dp if dp else None
+    model = "model" if style == "tp" else None
+    kv_seq = "data" if seq_shard else None
+    kv_model = "model"  # head dim of caches sharded in both styles
+    # shard attention/ssm heads over 'model' whenever it isn't a batch axis
+    m_sz = shape.get("model", 1)
+    heads = None
+    ssm_heads = None
+    if "model" not in dp:
+        tp_pad = m_sz if style == "tp" else 1
+        from repro.models.transformer import ModelDims
+        dims = ModelDims.create(cfg, tp=tp_pad)
+        if dims.n_q_pad % m_sz == 0 and dims.n_kv_pad % m_sz == 0:
+            heads = P(dp_spec, None, "model", None)
+        if cfg.ssm is not None:
+            ssm_h = cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim
+            if ssm_h % m_sz == 0:
+                ssm_heads = P(dp_spec, None, "model", None)
+    if cfg.moe is not None and cfg.name in FSDP_ARCHS:
+        expert = (P(None, "model", None, None) if expert_axes == "model_major"
+                  else P(None, "data", None, None))
+    else:
+        expert = P(dp_spec, model, None, None)
+    sp = (seq_parallel and "model" not in dp)
+    return ShardingSpecs(
+        act=P(dp_spec, "model" if sp else None, None),
+        ffn=P(dp_spec, None, model),
+        expert=expert,
+        kv_cache=P(dp_spec if not seq_shard else None, kv_seq, kv_model, None),
+        kv_cache_stacked=P(None, dp_spec if not seq_shard else None, kv_seq,
+                           kv_model, None),
+        logits=P(dp_spec, None, "model" if style == "tp" else None),
+        heads=heads,
+        ssm_heads=ssm_heads,
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs
+# ---------------------------------------------------------------------------
+
+def _param_rule(path_keys: list[str], shape: tuple[int, ...],
+                cfg: ArchConfig, style: str) -> P:
+    if style == "dp":
+        return P()
+    fsdp = cfg.name in FSDP_ARCHS
+    d2 = "data" if fsdp else None   # second weight-sharding axis
+    name = path_keys[-1]
+    parent = path_keys[-2] if len(path_keys) > 1 else ""
+    gparent = path_keys[-3] if len(path_keys) > 2 else ""
+    if name == "embed":
+        return P("model", None) if cfg.tie_embeddings else P(None, "model")
+    if parent == "lm_head":
+        return P(None, "model") if name == "w" else P("model")
+    in_attn = parent in ("wq", "wk", "wv") and gparent in ("attn", "xattn")
+    if in_attn:
+        return P(d2, "model") if name == "w" else P("model")
+    if parent == "wo" and gparent in ("attn", "xattn"):
+        return P("model", d2)
+    if parent in ("wi", "wg") and gparent in ("mlp", "shared", "dense_mlp"):
+        return P(d2, "model") if name == "w" else P("model")
+    if parent == "wo" and gparent in ("mlp", "shared", "dense_mlp"):
+        return P("model", d2) if name == "w" else P()
+    if parent == "moe":
+        if fsdp and name in ("wi", "wg"):
+            return P("data", None, "model")
+        if fsdp and name == "wo":
+            return P("data", "model", None)
+        if name in ("wi", "wg", "wo"):
+            return P("model", None, None)
+        return P()  # router replicated
+    return P()  # norms, gates, ssm/lstm small params
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return out
+
+
+def param_specs(cfg: ArchConfig, params) -> Any:
+    """PartitionSpec pytree for params.  Layer-stacked leaves (under 'layers')
+    get a leading None for the super-block dim."""
+    style = style_for(cfg)
+
+    def f(path, leaf):
+        names = _path_names(path)
+        stacked = names and names[0] == "layers"
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        inner = names[2:] if stacked else names
+        spec = _param_rule(inner if inner else names, shape, cfg, style)
+        if stacked:
+            spec = P(None, *spec)
+        # guard: never shard a dim that doesn't divide
+        return _validated(spec, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def _validated(spec: P, shape: tuple[int, ...]) -> P:
+    fixed = []
+    mesh_sizes = {"model": None}  # validated at mesh-apply time instead
+    for i, s in enumerate(spec):
+        fixed.append(s)
+    return P(*fixed) if len(spec) <= len(shape) else P(*list(spec)[:len(shape)])
+
+
+def zero1_specs(param_spec_tree, params, data_divisor: int) -> Any:
+    """ZeRO-1: shard optimizer moments over 'data' on the largest free dim."""
+
+    def f(spec, leaf):
+        if not hasattr(leaf, "shape"):
+            return spec
+        used = set(a for s in spec for a in ((s,) if isinstance(s, str)
+                                             else (s or ())))
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        best, best_size = -1, 0
+        for i, (s, dim) in enumerate(zip(entries, leaf.shape)):
+            if s is None and dim % data_divisor == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best >= 0 and "data" not in used:
+            entries[best] = "data"
+        return P(*entries)
+
+    return jax.tree.map(f, param_spec_tree, params)
+
+
+def opt_state_specs(cfg: ArchConfig, params, opt_state,
+                    data_divisor: int) -> Any:
+    pspec = param_specs(cfg, params)
+    zspec = zero1_specs(pspec, params, data_divisor)
+    return {"mu": zspec, "nu": zspec,
+            "step": P()}
+
+
+def batch_specs(cfg: ArchConfig, mesh: jax.sharding.Mesh, batch_dict: dict,
+                batch: int) -> dict:
+    style = style_for(cfg)
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = _dp_axes(tuple(mesh.axis_names), batch, shape, style)
+    dp_spec = dp if dp else None
+
+    out = {}
+    for k, v in batch_dict.items():
+        nd = v.ndim if hasattr(v, "ndim") else len(v.shape)
+        out[k] = P(dp_spec, *([None] * (nd - 1)))
+    return out

@@ -1,0 +1,3 @@
+from .ops import mha
+from .kernel import flash_attention
+from .ref import attention_ref

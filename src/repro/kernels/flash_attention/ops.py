@@ -1,0 +1,33 @@
+"""jit'd public wrapper: [B, S, H, D] layout + GQA + interpret fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret", "use_kernel"))
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        block_q: int = 128, block_k: int = 128, interpret: bool = False,
+        use_kernel: bool = True) -> jax.Array:
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D].
+
+    ``use_kernel=False`` routes to the jnp oracle (CPU dry-run path);
+    ``interpret=True`` executes the Pallas kernel body in Python on CPU.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    if use_kernel:
+        of = flash_attention(qf, kf, vf, causal=causal, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    else:
+        of = attention_ref(qf, kf, vf, causal=causal)
+    return of.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  sm_scale: float | None = None) -> jax.Array:
+    """q: [BH, Sq, D]; k, v: [BKV, Skv, D] with BH = BKV * group."""
+    BH, Sq, D = q.shape
+    BKV, Skv, _ = k.shape
+    group = BH // BKV
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32)).astype(q.dtype)

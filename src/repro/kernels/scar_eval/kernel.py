@@ -1,0 +1,83 @@
+"""SCAR schedule-evaluation Pallas kernel.
+
+The SCHED engine's hot loop scores 10^4-10^5 candidate (segmentation x
+placement) plans per window: gather per-(layer, chiplet-class) costs, reduce
+per segment, add communication terms, combine (max for pipelined latency,
+sum for energy).  As dense tensor ops this is a batched matvec over the
+segment one-hot — MXU work — with VPU reductions; the kernel tiles the
+candidate batch into VMEM-resident blocks.
+
+Inputs (all f32):
+  lat_tab, e_tab   [L, C]      per-(layer, class) costs
+  cls_oh           [B, L, C]   chiplet-class one-hot per layer per candidate
+  seg_oh           [B, L, S]   segment one-hot per layer per candidate
+  comm_lat, comm_e [B, S]      per-segment ip/op communication terms
+  seg_valid        [B, S]      1.0 for live segments
+  pipe             [B, 1]      1.0 -> pipelined (max), 0.0 -> sequential (sum)
+Output:
+  out              [B, 2]      (window latency, window energy)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _scar_kernel(lat_ref, e_ref, cls_ref, seg_ref, clat_ref, ce_ref,
+                 valid_ref, pipe_ref, out_ref):
+    lat_tab = lat_ref[...]                       # [L, C]
+    e_tab = e_ref[...]
+    cls_oh = cls_ref[...]                        # [bt, L, C]
+    seg_oh = seg_ref[...]                        # [bt, L, S]
+    lat_layer = jnp.sum(cls_oh * lat_tab[None], axis=-1)   # [bt, L]
+    e_layer = jnp.sum(cls_oh * e_tab[None], axis=-1)
+    # batched matvec: [bt, 1, L] @ [bt, L, S] -> [bt, S]
+    seg_lat = jax.lax.dot_general(
+        lat_layer[:, None, :], seg_oh,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[:, 0, :]
+    seg_e = jax.lax.dot_general(
+        e_layer[:, None, :], seg_oh,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[:, 0, :]
+    valid = valid_ref[...]
+    seg_lat = seg_lat + clat_ref[...]
+    seg_e = (seg_e + ce_ref[...]) * valid
+    lat_max = jnp.max(jnp.where(valid > 0, seg_lat, NEG), axis=-1)
+    lat_sum = jnp.sum(seg_lat * valid, axis=-1)
+    n_seg = jnp.sum(valid, axis=-1)
+    pipe = pipe_ref[..., 0] * (n_seg > 1)
+    lat = jnp.where(pipe > 0, lat_max, lat_sum)
+    energy = jnp.sum(seg_e, axis=-1)
+    out_ref[...] = jnp.stack([lat, energy], axis=-1)
+
+
+def scar_eval(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e, seg_valid,
+              pipe, *, block_b: int = 128, interpret: bool = False):
+    B, L, C = cls_oh.shape
+    S = seg_oh.shape[-1]
+    block_b = min(block_b, B)
+    assert B % block_b == 0
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        _scar_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, C), lambda b: (0, 0)),
+            pl.BlockSpec((L, C), lambda b: (0, 0)),
+            pl.BlockSpec((block_b, L, C), lambda b: (b, 0, 0)),
+            pl.BlockSpec((block_b, L, S), lambda b: (b, 0, 0)),
+            pl.BlockSpec((block_b, S), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, S), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, S), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 2), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 2), jnp.float32),
+        interpret=interpret,
+    )(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e, seg_valid, pipe)

@@ -1,0 +1,110 @@
+"""Wrapper + bridge from ``repro.core`` candidate sets to kernel inputs.
+
+``pack_candidates`` converts a ``BatchedModelCandidates`` + CostDB + MCM into
+the dense tensors the kernel consumes (communication terms precomputed on
+host — they are O(B*S) scalar geometry, not the hot loop).  This lets the
+kernel be tested end-to-end against ``repro.core.cost.eval_model_candidates``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import scar_eval
+from .ref import scar_eval_ref
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret", "use_kernel"))
+def evaluate(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e, seg_valid,
+             pipe, *, block_b: int = 128, interpret: bool = False,
+             use_kernel: bool = True):
+    if use_kernel:
+        return scar_eval(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e,
+                         seg_valid, pipe, block_b=block_b,
+                         interpret=interpret)
+    return scar_eval_ref(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e,
+                         seg_valid, pipe)
+
+
+def pack_candidates(db, mcm, cand, n_active: int, prev_end=None,
+                    pad_b: int = 128):
+    """Dense kernel inputs for one model's candidate batch (numpy -> jnp)."""
+    from repro.core.cost import eval_model_candidates  # noqa: F401 (oracle)
+    pkg = mcm.pkg
+    B, Lw = cand.seg_id.shape
+    S = cand.chiplets.shape[1]
+    sl = slice(cand.start, cand.end)
+    lat_tab = db.lat[sl].astype(np.float32)
+    e_tab = db.energy[sl].astype(np.float32)
+    class_map = np.asarray(mcm.class_map)
+    cpos = np.maximum(cand.chiplets, 0)
+    seg_cls = class_map[cpos]                                  # [B, S]
+    layer_cls = np.take_along_axis(seg_cls, cand.seg_id, axis=1)
+    C = lat_tab.shape[1]
+    cls_oh = (layer_cls[..., None] == np.arange(C)).astype(np.float32)
+    seg_oh = (cand.seg_id[..., None] == np.arange(S)).astype(np.float32)
+    valid = (np.arange(S)[None] < cand.n_segs[:, None]).astype(np.float32)
+
+    # host-side communication terms (mirrors repro.core.cost geometry)
+    rows, cols = np.divmod(cpos, mcm.cols)
+    hops_dram = np.minimum(cols, mcm.cols - 1 - cols)
+    nxt = np.roll(cpos, -1, axis=1)
+    r2, c2 = np.divmod(nxt, mcm.cols)
+    hops_next = np.abs(rows - r2) + np.abs(cols - c2)
+    dl = pkg.contention_delta * max(0, n_active - 1)
+
+    seg_w = np.einsum("l,bls->bs", db.w_bytes[sl].astype(np.float32), seg_oh)
+    lidx = np.arange(Lw)
+    last = np.where(seg_oh > 0, lidx[None, :, None], -1).max(axis=1)
+    seg_out = np.where(last >= 0, db.out_bytes[sl][np.maximum(last, 0)], 0.0)
+
+    def dram_lat(sz, hops):
+        return np.where(sz > 0, sz / pkg.dram_bw + hops * pkg.nop_hop_lat_s
+                        + pkg.dram_lat_s + dl * sz / pkg.dram_bw, 0.0)
+
+    def nop_lat(sz, hops):
+        return np.where((sz > 0) & (hops > 0), sz / pkg.nop_bw
+                        + hops * pkg.nop_hop_lat_s + dl * sz / pkg.nop_bw,
+                        0.0)
+
+    def dram_e(sz, hops):
+        return sz * 8.0 * (pkg.dram_e_pj_per_bit
+                           + pkg.nop_e_pj_per_bit * hops) * 1e-12
+
+    def nop_e(sz, hops):
+        return sz * 8.0 * pkg.nop_e_pj_per_bit * hops * 1e-12
+
+    comm_lat = dram_lat(seg_w, hops_dram)
+    comm_e = dram_e(seg_w, hops_dram)
+    act_in = float(db.in_bytes[cand.start])
+    fr, fc = np.divmod(cpos[:, 0], mcm.cols)
+    fh = np.minimum(fc, mcm.cols - 1 - fc)
+    if prev_end is None:
+        comm_lat[:, 0] += dram_lat(np.full(B, act_in), fh)
+        comm_e[:, 0] += dram_e(np.full(B, act_in), fh)
+    else:
+        pr, pc = divmod(int(prev_end), mcm.cols)
+        h0 = np.abs(fr - pr) + np.abs(fc - pc)
+        comm_lat[:, 0] += nop_lat(np.full(B, act_in), h0)
+        comm_e[:, 0] += nop_e(np.full(B, act_in), h0)
+    is_last = (np.arange(S)[None] == (cand.n_segs - 1)[:, None])
+    comm_lat += np.where(is_last, dram_lat(seg_out, hops_dram),
+                         nop_lat(seg_out, hops_next))
+    comm_e += np.where(is_last, dram_e(seg_out, hops_dram),
+                       nop_e(seg_out, hops_next))
+
+    pipe = np.ones((B, 1), np.float32)
+    pad = (-B) % pad_b
+    if pad:
+        def z(a):
+            return np.concatenate([a, np.zeros((pad,) + a.shape[1:],
+                                               a.dtype)])
+        cls_oh, seg_oh, valid = z(cls_oh), z(seg_oh), z(valid)
+        comm_lat, comm_e, pipe = z(comm_lat), z(comm_e), z(pipe)
+    args = tuple(jnp.asarray(a) for a in
+                 (lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e, valid,
+                  pipe))
+    return args, B

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the SCAR schedule-evaluation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def scar_eval_ref(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e,
+                  seg_valid, pipe):
+    lat_layer = jnp.einsum("blc,lc->bl", cls_oh, lat_tab)
+    e_layer = jnp.einsum("blc,lc->bl", cls_oh, e_tab)
+    seg_lat = jnp.einsum("bl,bls->bs", lat_layer, seg_oh) + comm_lat
+    seg_e = (jnp.einsum("bl,bls->bs", e_layer, seg_oh) + comm_e) * seg_valid
+    lat_max = jnp.max(jnp.where(seg_valid > 0, seg_lat, NEG), axis=-1)
+    lat_sum = jnp.sum(seg_lat * seg_valid, axis=-1)
+    n_seg = seg_valid.sum(axis=-1)
+    p = pipe[..., 0] * (n_seg > 1)
+    lat = jnp.where(p > 0, lat_max, lat_sum)
+    return jnp.stack([lat, seg_e.sum(axis=-1)], axis=-1)

@@ -1,0 +1,3 @@
+from .ops import gla
+from .kernel import ssd_scan
+from .ref import ssd_scan_ref

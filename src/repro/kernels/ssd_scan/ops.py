@@ -1,0 +1,28 @@
+"""jit'd wrapper with [B, L, H, ...] layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan
+from .ref import ssd_scan_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def gla(q, k, v, a, *, chunk: int = 128, interpret: bool = False,
+        use_kernel: bool = True):
+    """q,k: [B, L, H, N]; v: [B, L, H, P]; a: [B, L, H] -> [B, L, H, P]."""
+    B, L, H, N = q.shape
+    P = v.shape[-1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, L, N)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, L, N)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, L, P)
+    af = a.transpose(0, 2, 1).reshape(B * H, L)
+    f = ssd_scan if use_kernel else ssd_scan_ref
+    if use_kernel:
+        of = ssd_scan(qf, kf, vf, af, chunk=chunk, interpret=interpret)
+    else:
+        of = ssd_scan_ref(qf, kf, vf, af, chunk=chunk)
+    return of.reshape(B, H, L, P).transpose(0, 2, 1, 3)

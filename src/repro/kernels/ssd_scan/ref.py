@@ -1,0 +1,15 @@
+"""Oracle: the model-layer chunked GLA implementation itself."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import gla_chunked
+
+
+def ssd_scan_ref(q, k, v, a, chunk: int = 128):
+    """Same [BH, L, ...] layout as the kernel; delegates to the (tested)
+    model implementation with B=BH, H=1."""
+    out = gla_chunked(q[:, :, None, :], k[:, :, None, :], v[:, :, None, :],
+                      a[:, :, None], chunk)
+    return out[:, :, 0, :]

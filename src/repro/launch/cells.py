@@ -1,0 +1,133 @@
+"""Dry-run cell matrix: (architecture x input shape) with validity rules.
+
+Shapes (assigned):
+  train_4k     seq 4096,   global_batch 256   (training step)
+  prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+  decode_32k   KV 32768,   global_batch 128   (one decode token)
+  long_500k    KV 524288,  global_batch 1     (long-context decode)
+
+Skips (documented in DESIGN.md):
+  * long_500k only for sub-quadratic archs (xlstm-350m, zamba2-2.7b).
+  * decode shapes skipped for encoder-only archs (hubert-xlarge).
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) for every model input of the cell's step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED
+from repro.models import ModelDims, get_arch
+from repro.models.config import ArchConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def kind(self) -> str:
+        return SHAPES[self.shape]["kind"]
+
+    @property
+    def seq(self) -> int:
+        return SHAPES[self.shape]["seq"]
+
+    @property
+    def batch(self) -> int:
+        return SHAPES[self.shape]["batch"]
+
+    @property
+    def seq_shard(self) -> bool:
+        """Shard KV cache over sequence (batch too small for data axis)."""
+        return self.shape == "long_500k"
+
+
+def cell_valid(cell: Cell) -> tuple[bool, str]:
+    cfg = get_arch(cell.arch)
+    if cell.shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: no sub-quadratic path at 512k"
+    if cfg.encoder_only and cell.kind == "decode":
+        return False, "encoder-only arch: no autoregressive decode step"
+    return True, ""
+
+
+def all_cells(include_skipped: bool = False) -> list[Cell]:
+    out = []
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            c = Cell(arch, shape)
+            if include_skipped or cell_valid(c)[0]:
+                out.append(c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cell: Cell) -> dict:
+    """Model inputs of the cell's step function as ShapeDtypeStructs."""
+    cfg = get_arch(cell.arch)
+    B, S = cell.batch, cell.seq
+    if cell.kind == "train":
+        batch: dict = {}
+        if cfg.frontend_stub:
+            batch["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["labels"] = _sds((B, S), jnp.int32)
+        if cfg.cross_ctx_len:
+            batch["cross_ctx"] = _sds((B, cfg.cross_ctx_len, cfg.d_model),
+                                      jnp.bfloat16)
+        return batch
+    if cell.kind == "prefill":
+        batch = {}
+        if cfg.frontend_stub:
+            batch["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.cross_ctx_len:
+            batch["cross_ctx"] = _sds((B, cfg.cross_ctx_len, cfg.d_model),
+                                      jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of length seq
+    out = {"tokens": _sds((B, 1), jnp.int32),
+           "index": _sds((), jnp.int32)}
+    if cfg.cross_ctx_len:
+        out["cross_ctx"] = _sds((B, cfg.cross_ctx_len, cfg.d_model),
+                                jnp.bfloat16)
+    return out
+
+
+def cache_specs(cell: Cell, dims: ModelDims,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs of the decode cache via eval_shape (no allocation)."""
+    from repro.models.transformer import init_cache
+    cfg = get_arch(cell.arch)
+    return jax.eval_shape(
+        lambda: init_cache(cfg, dims, cell.batch, cell.seq, dtype))
+
+
+def param_shapes(cfg: ArchConfig, dims: ModelDims, dtype=jnp.bfloat16) -> dict:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models.transformer import init_params
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dims, dtype))

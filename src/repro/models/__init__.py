@@ -1,0 +1,5 @@
+"""Production JAX model zoo (pure pytrees)."""
+from .config import ArchConfig, BlockKind, MLPKind, MoEConfig, SSMConfig, get_arch, list_archs
+from .transformer import ModelDims, forward, init_params, loss_fn, init_cache, prefill, decode_step
+from .steps import (make_decode_step, make_eval_step, make_forward,
+                    make_prefill_step, make_train_step)

@@ -1,0 +1,432 @@
+"""Block-level init/apply for every BlockKind, plus cache initialisation.
+
+Blocks are uniform functions ``apply(params, x, ctx) -> (y, new_cache)`` so a
+stack of identical super-blocks can execute under ``jax.lax.scan`` with
+stacked params (see ``transformer.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, BlockKind, MLPKind
+from .layers import (AttnDims, MoEDims, attn_apply, attn_init, dense,
+                     dense_init, gla_chunked, gla_step, mlp_apply, mlp_init,
+                     moe_apply, moe_init, rmsnorm, rmsnorm_init)
+
+Params = dict
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCtx:
+    """Per-call context threaded through blocks (static except arrays)."""
+    cfg: ArchConfig
+    mode: str                      # "full" (train/prefill) | "decode"
+    positions: Array               # [B, S] or [S]
+    cache_index: Optional[Array] = None   # scalar decode position
+    cross_ctx: Optional[Array] = None     # [B, Tctx, d] (VLM)
+    specs: Any = None              # ShardingSpecs or None
+    n_q_pad: int = 0
+    n_kv_pad: int = 0
+    expert_pad: int = 1
+    max_cache_len: int = 0
+
+
+def _attn_dims(cfg: ArchConfig, ctx: BlockCtx) -> AttnDims:
+    return AttnDims(d_model=cfg.d_model, n_q=ctx.n_q_pad, n_kv=ctx.n_kv_pad,
+                    hd=cfg.hd, bias=cfg.qkv_bias)
+
+
+def _moe_dims(cfg: ArchConfig, ctx: BlockCtx) -> MoEDims:
+    m = cfg.moe
+    return MoEDims(d_model=cfg.d_model, n_experts=ctx.expert_pad,
+                   n_routed=m.n_experts, top_k=m.top_k, d_ff=m.expert_d_ff,
+                   n_shared=m.n_shared_experts,
+                   capacity_factor=m.capacity_factor,
+                   group_size=m.group_size)
+
+
+def _spec(ctx: BlockCtx, name: str):
+    return getattr(ctx.specs, name) if ctx.specs is not None else None
+
+
+def _wsc(x, spec):
+    return jax.lax.with_sharding_constraint(x, spec) if spec is not None else x
+
+
+# ---------------------------------------------------------------------------
+# ATTN / MOE / CROSS_ATTN
+# ---------------------------------------------------------------------------
+
+def attn_block_init(key, cfg: ArchConfig, ctx: BlockCtx, dtype,
+                    kind: BlockKind) -> Params:
+    keys = jax.random.split(key, 6)
+    p: Params = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(keys[0], _attn_dims(cfg, ctx), dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if kind == BlockKind.MOE:
+        p["moe"] = moe_init(keys[1], _moe_dims(cfg, ctx), dtype)
+        if cfg.moe.dense_residual:
+            p["dense_mlp"] = mlp_init(keys[2], cfg.d_model,
+                                      cfg.moe.dense_d_ff, "swiglu", dtype)
+    elif cfg.mlp != MLPKind.NONE:
+        p["mlp"] = mlp_init(keys[1], cfg.d_model, cfg.d_ff, cfg.mlp.value,
+                            dtype)
+    if kind == BlockKind.CROSS_ATTN:
+        p["ln_x"] = rmsnorm_init(cfg.d_model, dtype)
+        p["xattn"] = attn_init(keys[3], _attn_dims(cfg, ctx), dtype)
+        p["xgate"] = jnp.zeros((), dtype=jnp.float32)
+    return p
+
+
+def attn_block_apply(p: Params, x: Array, ctx: BlockCtx, cache: Optional[Params],
+                     kind: BlockKind) -> tuple[Array, Optional[Params]]:
+    cfg = ctx.cfg
+    dims = _attn_dims(cfg, ctx)
+    causal = not cfg.encoder_only
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    self_cache = cache.get("self") if cache else None
+    out, new_self = attn_apply(
+        p["attn"], h, dims, causal=causal, theta=cfg.rope_theta,
+        positions=ctx.positions, q_chunk=cfg.attn_q_chunk,
+        cache=self_cache, cache_index=ctx.cache_index,
+        spec=_spec(ctx, "kv_cache"), head_spec=_spec(ctx, "heads"))
+    x = x + _wsc(out, _spec(ctx, "act"))
+    new_cache: Optional[Params] = None
+    if new_self is not None:
+        new_cache = {"self": new_self}
+
+    if kind == BlockKind.CROSS_ATTN:
+        h = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        if ctx.mode == "decode" and cache is not None and "cross" in cache:
+            ck, cv = cache["cross"]["k"], cache["cross"]["v"]
+        else:
+            cctx = ctx.cross_ctx
+            B, T, _ = cctx.shape
+            ck = dense(p["xattn"]["wk"], cctx).reshape(B, T, dims.n_kv, dims.hd)
+            cv = dense(p["xattn"]["wv"], cctx).reshape(B, T, dims.n_kv, dims.hd)
+        xout, _ = attn_apply(p["xattn"], h, dims, causal=False, theta=0.0,
+                             positions=ctx.positions,
+                             q_chunk=cfg.attn_q_chunk, kv=(ck, cv))
+        gate = jnp.tanh(p["xgate"]).astype(x.dtype)
+        x = x + gate * _wsc(xout, _spec(ctx, "act"))
+        if new_cache is not None:
+            new_cache["cross"] = {"k": ck, "v": cv}
+
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind == BlockKind.MOE:
+        y = moe_apply(p["moe"], h, _moe_dims(cfg, ctx),
+                      expert_spec=_spec(ctx, "expert"))
+        if cfg.moe.dense_residual:
+            y = y + mlp_apply(p["dense_mlp"], h, "swiglu",
+                              spec=_spec(ctx, "ffn"))
+    elif cfg.mlp != MLPKind.NONE:
+        y = mlp_apply(p["mlp"], h, cfg.mlp.value, spec=_spec(ctx, "ffn"))
+    else:
+        y = jnp.zeros_like(x)
+    x = x + _wsc(y, _spec(ctx, "act"))
+    return x, new_cache
+
+
+def attn_block_cache(cfg: ArchConfig, ctx: BlockCtx, batch: int,
+                     dtype, kind: BlockKind) -> Params:
+    c: Params = {"self": {
+        "k": jnp.zeros((batch, ctx.max_cache_len, ctx.n_kv_pad, cfg.hd), dtype),
+        "v": jnp.zeros((batch, ctx.max_cache_len, ctx.n_kv_pad, cfg.hd), dtype),
+    }}
+    if kind == BlockKind.CROSS_ATTN:
+        c["cross"] = {
+            "k": jnp.zeros((batch, cfg.cross_ctx_len, ctx.n_kv_pad, cfg.hd), dtype),
+            "v": jnp.zeros((batch, cfg.cross_ctx_len, ctx.n_kv_pad, cfg.hd), dtype),
+        }
+    return c
+
+
+# ---------------------------------------------------------------------------
+# MAMBA2 (SSD)
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state, s.head_dim, s.d_conv
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype) -> Params:
+    d_inner, H, N, P, K = _mamba_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    conv_dim = d_inner + 2 * N
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, conv_dim), jnp.float32)
+                   / math.sqrt(K)).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv1d: x [B, L, C], w [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(K))
+    return out
+
+
+def mamba2_apply(p: Params, x: Array, ctx: BlockCtx,
+                 cache: Optional[Params]) -> tuple[Array, Optional[Params]]:
+    cfg = ctx.cfg
+    d_inner, H, N, P, K = _mamba_dims(cfg)
+    Bsz, L, _ = x.shape
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    zxbcdt = dense(p["in_proj"], h)
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    new_cache: Optional[Params] = None
+    if ctx.mode == "decode" and cache is not None:
+        window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # [B,K,C]
+        conv = (window * p["conv_w"].astype(x.dtype)[None]).sum(axis=1,
+                                                                keepdims=True)
+        new_conv = window[:, 1:, :]
+    else:
+        conv = _causal_conv(conv_in, p["conv_w"])
+        new_conv = conv_in[:, -(K - 1):, :] if cache is not None else None
+    conv = jax.nn.silu(conv)
+    xin, Bc, Cc = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,L,H]
+    A = -jnp.exp(p["A_log"])                                      # [H] < 0
+    log_decay = dt * A[None, None, :]
+    xh = xin.reshape(Bsz, L, H, P)
+    hspec = _spec(ctx, "ssm_heads")
+    if hspec is not None:
+        xh = jax.lax.with_sharding_constraint(xh, hspec)
+    v = xh * dt[..., None].astype(xh.dtype)                       # fold dt
+    k = jnp.broadcast_to(Bc[:, :, None, :], (Bsz, L, H, N))
+    q = jnp.broadcast_to(Cc[:, :, None, :], (Bsz, L, H, N))
+
+    if ctx.mode == "decode" and cache is not None:
+        state = cache["state"]                                    # [B,H,N,P]
+        new_state, out = gla_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                  log_decay[:, 0])
+        y = out[:, None]
+        new_cache = {"state": new_state, "conv": new_conv}
+    else:
+        y = gla_chunked(q, k, v, log_decay, cfg.ssm.chunk)
+        if cache is not None:
+            # rebuild final state for decode handoff (prefill): one more scan
+            k_dec = k.astype(jnp.float32)
+            cum = jnp.cumsum(log_decay, axis=1)
+            tail = jnp.exp(cum[:, -1:, :] - cum)
+            state = jnp.einsum("blhn,blhp->bhnp", k_dec * tail[..., None],
+                               v.astype(jnp.float32))
+            new_cache = {"state": state, "conv": new_conv}
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, L, d_inner) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    return x + _wsc(out, _spec(ctx, "act")), new_cache
+
+
+def mamba2_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    d_inner, H, N, P, K = _mamba_dims(cfg)
+    return {"state": jnp.zeros((batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, d_inner + 2 * N), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wif": dense_init(ks[3], d, 2 * cfg.n_heads, dtype, bias=True),
+        "wo_gate": dense_init(ks[4], d, d, dtype),
+        "out": dense_init(ks[5], d, d, dtype),
+    }
+
+
+def mlstm_apply(p: Params, x: Array, ctx: BlockCtx,
+                cache: Optional[Params]) -> tuple[Array, Optional[Params]]:
+    cfg = ctx.cfg
+    B, L, d = x.shape
+    H = cfg.n_heads
+    P = d // H
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    q = dense(p["wq"], h).reshape(B, L, H, P) / math.sqrt(P)
+    k = dense(p["wk"], h).reshape(B, L, H, P)
+    v = dense(p["wv"], h).reshape(B, L, H, P)
+    gif = dense(p["wif"], h).astype(jnp.float32)
+    i_gate, f_gate = jnp.split(gif, 2, axis=-1)          # [B,L,H]
+    log_f = -jax.nn.softplus(-f_gate)                    # log sigmoid(f)
+    i_w = jnp.exp(jnp.minimum(i_gate, 8.0))
+    k_in = k * i_w[..., None].astype(k.dtype)
+    new_cache: Optional[Params] = None
+    if ctx.mode == "decode" and cache is not None:
+        state, nstate = cache["state"], cache["norm"]
+        state2, out = gla_step(state, q[:, 0], k_in[:, 0], v[:, 0], log_f[:, 0])
+        nstate2 = nstate * jnp.exp(log_f[:, 0])[..., None] + \
+            k_in[:, 0].astype(jnp.float32)
+        denom = jnp.abs(jnp.einsum("bhn,bhn->bh", q[:, 0].astype(jnp.float32),
+                                   nstate2))
+        out = out / jnp.maximum(denom, 1.0)[..., None].astype(out.dtype)
+        y = out[:, None]
+        new_cache = {"state": state2, "norm": nstate2}
+    else:
+        num = gla_chunked(q, k_in, v, log_f, cfg.ssm.chunk if cfg.ssm else 256)
+        ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+        den = gla_chunked(q, k_in, ones, log_f,
+                          cfg.ssm.chunk if cfg.ssm else 256)[..., 0]
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        if cache is not None:
+            cum = jnp.cumsum(log_f, axis=1)
+            tail = jnp.exp(cum[:, -1:, :] - cum)
+            kf = k_in.astype(jnp.float32) * tail[..., None]
+            state = jnp.einsum("blhn,blhp->bhnp", kf, v.astype(jnp.float32))
+            norm = kf.sum(axis=1)
+            new_cache = {"state": state, "norm": norm}
+    y = y.reshape(B, L, d) * jax.nn.silu(dense(p["wo_gate"], h))
+    return x + _wsc(dense(p["out"], y), _spec(ctx, "act")), new_cache
+
+
+def mlstm_cache(cfg: ArchConfig, batch: int) -> Params:
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    return {"state": jnp.zeros((batch, H, P, P), jnp.float32),
+            "norm": jnp.zeros((batch, H, P), jnp.float32)}
+
+
+def slstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "wx": dense_init(ks[0], d, 4 * d, dtype, bias=True),
+        "r": (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+              / math.sqrt(dh)).astype(dtype),
+        "out": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _slstm_cell(carry, gx, r):
+    """One sLSTM step.  carry: (c, n, h, m) each [B, H, dh] (m: [B,H,dh])."""
+    c, n, h, m = carry
+    gr = jnp.einsum("bhd,hdk->bhk", h, r.astype(h.dtype))
+    g = (gx + gr).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    log_f = -jax.nn.softplus(-ft)
+    m2 = jnp.maximum(log_f + m, it)
+    ip = jnp.exp(it - m2)
+    fp = jnp.exp(log_f + m - m2)
+    c2 = fp * c + ip * jnp.tanh(zt)
+    n2 = fp * n + ip
+    h2 = jax.nn.sigmoid(ot) * c2 / jnp.maximum(n2, 1.0)
+    h2 = h2.astype(h.dtype)
+    return (c2, n2, h2, m2), h2
+
+
+def slstm_apply(p: Params, x: Array, ctx: BlockCtx,
+                cache: Optional[Params]) -> tuple[Array, Optional[Params]]:
+    cfg = ctx.cfg
+    B, L, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    h_in = rmsnorm(p["ln"], x, cfg.norm_eps)
+    gx = dense(p["wx"], h_in).reshape(B, L, H, 4 * dh)
+    if cache is not None and ctx.mode == "decode":
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        carry = (zeros, zeros, zeros.astype(x.dtype), zeros)
+    if L == 1:
+        carry, y = _slstm_cell(carry, gx[:, 0], p["r"])
+        ys = y[:, None]
+    else:
+        def step(cr, g):
+            return _slstm_cell(cr, g, p["r"])
+        carry, ys = jax.lax.scan(step, carry, gx.swapaxes(0, 1))
+        ys = ys.swapaxes(0, 1)
+    new_cache = None
+    if cache is not None:
+        c, n, h, m = carry
+        new_cache = {"c": c, "n": n, "h": h, "m": m}
+    y = dense(p["out"], ys.reshape(B, L, d))
+    return x + _wsc(y, _spec(ctx, "act")), new_cache
+
+
+def slstm_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z.astype(dtype), "m": z}
+
+
+# ---------------------------------------------------------------------------
+# dispatch tables
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ArchConfig, ctx: BlockCtx, dtype,
+               kind: BlockKind) -> Params:
+    if kind in (BlockKind.ATTN, BlockKind.MOE, BlockKind.CROSS_ATTN):
+        return attn_block_init(key, cfg, ctx, dtype, kind)
+    if kind == BlockKind.MAMBA2:
+        return mamba2_init(key, cfg, dtype)
+    if kind == BlockKind.MLSTM:
+        return mlstm_init(key, cfg, dtype)
+    if kind == BlockKind.SLSTM:
+        return slstm_init(key, cfg, dtype)
+    if kind == BlockKind.SHARED_ATTN:
+        return {}  # weight-tied; params live at stack level
+    raise KeyError(kind)
+
+
+def block_apply(p: Params, x: Array, ctx: BlockCtx, cache: Optional[Params],
+                kind: BlockKind,
+                shared: Optional[Params] = None) -> tuple[Array, Optional[Params]]:
+    if kind in (BlockKind.ATTN, BlockKind.MOE, BlockKind.CROSS_ATTN):
+        return attn_block_apply(p, x, ctx, cache, kind)
+    if kind == BlockKind.SHARED_ATTN:
+        return attn_block_apply(shared, x, ctx, cache, BlockKind.ATTN)
+    if kind == BlockKind.MAMBA2:
+        return mamba2_apply(p, x, ctx, cache)
+    if kind == BlockKind.MLSTM:
+        return mlstm_apply(p, x, ctx, cache)
+    if kind == BlockKind.SLSTM:
+        return slstm_apply(p, x, ctx, cache)
+    raise KeyError(kind)
+
+
+def block_cache(cfg: ArchConfig, ctx: BlockCtx, batch: int, dtype,
+                kind: BlockKind) -> Params:
+    if kind in (BlockKind.ATTN, BlockKind.MOE, BlockKind.CROSS_ATTN,
+                BlockKind.SHARED_ATTN):
+        return attn_block_cache(cfg, ctx, batch, dtype, kind)
+    if kind == BlockKind.MAMBA2:
+        return mamba2_cache(cfg, batch, dtype)
+    if kind == BlockKind.MLSTM:
+        return mlstm_cache(cfg, batch)
+    if kind == BlockKind.SLSTM:
+        return slstm_cache(cfg, batch, dtype)
+    raise KeyError(kind)

@@ -1,0 +1,373 @@
+"""Model-layer primitives: pure-function JAX (pytree params, no framework).
+
+Every primitive ships ``init`` (shape-driven, usable under ``jax.eval_shape``
+for the allocation-free dry-run) and ``apply``.  Sharding is injected from
+outside via ``jax.lax.with_sharding_constraint`` on activations and
+PartitionSpec trees on params (see ``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Array = jax.Array
+
+
+def _init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    p = {"w": _init_dense(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p: Params, x: Array) -> Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, query-chunked for long prefill)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_q: int          # padded query heads (divisible by TP)
+    n_kv: int         # padded/duplicated kv heads
+    hd: int
+    bias: bool = False
+
+
+def attn_init(key, dims: AttnDims, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, dims.d_model, dims.n_q * dims.hd, dtype, dims.bias),
+        "wk": dense_init(k2, dims.d_model, dims.n_kv * dims.hd, dtype, dims.bias),
+        "wv": dense_init(k3, dims.d_model, dims.n_kv * dims.hd, dtype, dims.bias),
+        "wo": dense_init(k4, dims.n_q * dims.hd, dims.d_model, dtype, False),
+    }
+
+
+def _sdpa(q: Array, k: Array, v: Array, causal: bool,
+          q_offset: Array | int = 0, kv_len: Optional[Array] = None) -> Array:
+    """q: [B,Sq,Hq,hd]; k,v: [B,Skv,Hkv,hd] with Hq = G*Hkv.  Full softmax.
+
+    ``kv_len``: number of valid cache entries (decode); positions beyond are
+    masked.  ``q_offset``: absolute position of q[0] for causal masking.
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    Skv = k.shape[1]
+    kv_pos = jnp.arange(Skv)
+    mask = None
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        mask = kv_pos[None, :] <= q_pos[:, None]
+    if kv_len is not None:
+        valid = kv_pos[None, :] < kv_len
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def sdpa_chunked(q: Array, k: Array, v: Array, causal: bool,
+                 q_chunk: int, q_offset: Array | int = 0,
+                 kv_len: Optional[Array] = None) -> Array:
+    """Query-chunked attention: O(chunk * Skv) score memory."""
+    B, Sq, Hq, hd = q.shape
+    if Sq <= q_chunk:
+        return _sdpa(q, k, v, causal, q_offset, kv_len)
+    n = Sq // q_chunk
+    assert Sq % q_chunk == 0, "seq len must be a multiple of q_chunk"
+    qs = q.reshape(B, n, q_chunk, Hq, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(i, qc):
+        return _sdpa(qc, k, v, causal, q_offset + i * q_chunk, kv_len)
+
+    out = jax.lax.map(lambda t: body(t[0], t[1]),
+                      (jnp.arange(n), qs))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, hd)
+
+
+def attn_apply(p: Params, x: Array, dims: AttnDims, *, causal: bool,
+               theta: float, positions: Array, q_chunk: int = 0,
+               kv: Optional[tuple[Array, Array]] = None,
+               kv_positions: Optional[Array] = None,
+               cache: Optional[Params] = None,
+               cache_index: Optional[Array] = None,
+               spec=None, head_spec=None) -> tuple[Array, Optional[Params]]:
+    """Self/cross attention with optional KV cache.
+
+    * prefill/train: ``kv=None, cache=None`` -> self-attention over x.
+    * cross-attn: ``kv=(k_ctx, v_ctx)`` pre-projected context.
+    * decode: ``cache={'k','v'}, cache_index=pos`` -> update + attend.
+    Returns (out, updated_cache).
+    """
+    B, S, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, S, dims.n_q, dims.hd)
+    if head_spec is not None:
+        q = jax.lax.with_sharding_constraint(q, head_spec)
+    new_cache = None
+    if kv is not None:
+        k, v = kv
+        q = rope(q, positions, theta) if theta > 0 else q
+        out = sdpa_chunked(q, k, v, causal=False,
+                           q_chunk=q_chunk or S)
+    else:
+        k = dense(p["wk"], x).reshape(B, S, dims.n_kv, dims.hd)
+        v = dense(p["wv"], x).reshape(B, S, dims.n_kv, dims.hd)
+        if head_spec is not None:
+            k = jax.lax.with_sharding_constraint(k, head_spec)
+            v = jax.lax.with_sharding_constraint(v, head_spec)
+        if theta > 0:
+            q = rope(q, positions, theta)
+            k = rope(k, positions, theta)
+        if cache is not None:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+            if spec is not None:
+                ck = jax.lax.with_sharding_constraint(ck, spec)
+                cv = jax.lax.with_sharding_constraint(cv, spec)
+            new_cache = {"k": ck, "v": cv}
+            out = sdpa_chunked(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                               causal=causal, q_chunk=q_chunk or S,
+                               q_offset=cache_index, kv_len=cache_index + S)
+        else:
+            out = sdpa_chunked(q, k, v, causal=causal,
+                               q_chunk=q_chunk or S)
+    out = out.reshape(B, S, dims.n_q * dims.hd)
+    return dense(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, kind: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wi": dense_init(k1, d, d_ff, dtype),
+                "wg": dense_init(k2, d, d_ff, dtype),
+                "wo": dense_init(k3, d_ff, d, dtype)}
+    return {"wi": dense_init(k1, d, d_ff, dtype),
+            "wo": dense_init(k2, d_ff, d, dtype)}
+
+
+def mlp_apply(p: Params, x: Array, kind: str, spec=None) -> Array:
+    h = dense(p["wi"], x)
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x)) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(dense(p["wg"], x)) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise KeyError(kind)
+    if spec is not None:
+        h = jax.lax.with_sharding_constraint(h, spec)
+    return dense(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE: GShard-style grouped one-hot dispatch (SPMD-friendly, EP over 'model')
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    n_experts: int         # padded to a multiple of the model axis
+    n_routed: int          # real (routable) experts
+    top_k: int
+    d_ff: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 512  # dispatch group (controls dispatch-FLOP overhead)
+
+
+def moe_init(key, dims: MoEDims, dtype) -> Params:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    E, d, f = dims.n_experts, dims.d_model, dims.d_ff
+    p = {
+        "router": _init_dense(k1, d, dims.n_routed, jnp.float32),
+        "wi": (jax.random.normal(k2, (E, d, f), jnp.float32)
+               / math.sqrt(d)).astype(dtype),
+        "wg": (jax.random.normal(k3, (E, d, f), jnp.float32)
+               / math.sqrt(d)).astype(dtype),
+        "wo": (jax.random.normal(k4, (E, f, d), jnp.float32)
+               / math.sqrt(f)).astype(dtype),
+    }
+    if dims.n_shared:
+        p["shared"] = mlp_init(k5, d, dims.n_shared * f, "swiglu", dtype)
+    return p
+
+
+def moe_apply(p: Params, x: Array, dims: MoEDims,
+              expert_spec=None) -> Array:
+    """Top-k capacity-based MoE over flattened tokens.
+
+    Tokens are processed in groups of ``group_size``; each group one-hot
+    dispatches into per-expert capacity buffers (GShard einsum), experts run
+    as a stacked GEMM sharded over the 'model' axis, and results combine back
+    with routing weights.  Over-capacity tokens fall through to the residual.
+    """
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    T = xt.shape[0]
+    g = min(dims.group_size, T)
+    G = T // g
+    assert T % g == 0, "token count must divide dispatch group size"
+    E, k = dims.n_experts, dims.top_k
+    cap = int(math.ceil(g * k / dims.n_routed * dims.capacity_factor))
+    cap = max(4, min(cap + (-cap) % 4, g))
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # [T, n_routed]
+    weights, sel = jax.lax.top_k(logits, k)                   # [T, k]
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    sel_g = sel.reshape(G, g, k)
+    w_g = weights.reshape(G, g, k)
+    x_g = xt.reshape(G, g, d)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(sel_g, E, dtype=jnp.float32)      # [G, g, k, E]
+    pos = jnp.cumsum(onehot.reshape(G, g * k, E), axis=1).reshape(
+        G, g, k, E) * onehot - 1.0                            # [G, g, k, E]
+    in_cap = (pos >= 0) & (pos < cap)
+    slot = jax.nn.one_hot(jnp.where(in_cap, pos, -1).astype(jnp.int32), cap,
+                          dtype=jnp.float32)                  # [G, g, k, E, cap]
+    dispatch = (onehot[..., None] * slot).sum(axis=2)         # [G, g, E, cap]
+    combine = (w_g[..., None, None] * onehot[..., None] * slot).sum(axis=2)
+
+    xs = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), x_g)
+    if expert_spec is not None:
+        xs = jax.lax.with_sharding_constraint(xs, expert_spec)
+    h = jnp.einsum("gecd,edf->gecf", xs, p["wi"].astype(x.dtype))
+    hg = jnp.einsum("gecd,edf->gecf", xs, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(hg) * h
+    ys = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    if expert_spec is not None:
+        ys = jax.lax.with_sharding_constraint(ys, expert_spec)
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ys)
+    out = out.reshape(B, S, d)
+    if dims.n_shared:
+        out = out + mlp_apply(p["shared"], x, "swiglu")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Gated linear recurrence (shared by Mamba-2 SSD and mLSTM)
+# ---------------------------------------------------------------------------
+
+def gla_chunked(q: Array, k: Array, v: Array, log_decay: Array,
+                chunk: int) -> Array:
+    """Chunked gated linear attention:  o_t = q_t @ S_t,
+    S_t = exp(a_t) * S_{t-1} + k_t^T v_t  with per-(position, head) log-decay.
+
+    q,k: [B, L, H, N]; v: [B, L, H, P]; log_decay: [B, L, H] (<= 0).
+    Returns o: [B, L, H, P].  Within-chunk quadratic + inter-chunk scan.
+    """
+    B, L, H, N = q.shape
+    P = v.shape[-1]
+    c = min(chunk, L)
+    assert L % c == 0, "seq len must divide chunk size"
+    nc = L // c
+    qc = q.reshape(B, nc, c, H, N)
+    kc = k.reshape(B, nc, c, H, N)
+    vc = v.reshape(B, nc, c, H, P)
+    a = log_decay.reshape(B, nc, c, H).astype(jnp.float32)
+    cum = jnp.cumsum(a, axis=2)                      # within-chunk cumulative
+    total = cum[:, :, -1:, :]                        # [B, nc, 1, H]
+
+    # intra-chunk: masked quadratic with decay ratio exp(cum_i - cum_j)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,i,j,H]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    gate = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bnihd,bnjhd->bnijh", qc, kc,
+                        preferred_element_type=jnp.float32)
+    intra = jnp.einsum("bnijh,bnjhp->bnihp", scores * gate,
+                       vc.astype(jnp.float32))
+
+    # inter-chunk: per-chunk state contribution, combined by associative scan
+    k_dec = kc.astype(jnp.float32) * jnp.exp(total - cum)[..., None]
+    state_c = jnp.einsum("bnchd,bnchp->bnhdp", k_dec, vc.astype(jnp.float32))
+
+    def combine(x, y):
+        ax, sx = x
+        ay, sy = y
+        return ax + ay, sy + sx * jnp.exp(ay)[..., None, None]
+
+    totals = total[:, :, 0, :]                       # [B, nc, H]
+    _, states = jax.lax.associative_scan(combine, (totals, state_c), axis=1)
+    # shift: state entering chunk n is the scan up to n-1
+    prev = jnp.concatenate([jnp.zeros_like(states[:, :1]), states[:, :-1]],
+                           axis=1)
+    # need decay from chunk start: q_i picks up exp(cum_i) * prev_state
+    q_dec = qc.astype(jnp.float32) * jnp.exp(cum)[..., None]
+    inter = jnp.einsum("bnihd,bnhdp->bnihp", q_dec, prev)
+    out = (intra + inter).reshape(B, L, H, P)
+    return out.astype(v.dtype)
+
+
+def gla_step(state: Array, q: Array, k: Array, v: Array,
+             log_decay: Array) -> tuple[Array, Array]:
+    """Single-token recurrent step.  state: [B, H, N, P]; q,k: [B,H,N];
+    v: [B,H,P]; log_decay: [B,H].  Returns (new_state, out [B,H,P])."""
+    decay = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    new_state = state * decay + jnp.einsum(
+        "bhn,bhp->bhnp", k.astype(jnp.float32), v.astype(jnp.float32))
+    out = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), new_state)
+    return new_state, out.astype(v.dtype)

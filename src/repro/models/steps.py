@@ -1,0 +1,102 @@
+"""Step functions: train_step / prefill / decode, built per (arch, specs).
+
+These are the functions the launcher jits (and the dry-run lowers).  They are
+pure: (params, opt_state, batch) -> (params, opt_state, metrics), so fault
+recovery is "restore pytrees, continue".
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from .config import ArchConfig
+from .transformer import ModelDims, decode_step, forward, loss_fn, prefill
+
+
+def make_train_step(cfg: ArchConfig, dims: ModelDims, opt: adamw.AdamWConfig,
+                    specs=None, remat: bool = True, accum_steps: int = 1,
+                    remat_policy: str = "nothing"):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``accum_steps`` > 1 splits the global batch into microbatches executed
+    under ``lax.scan`` with f32 gradient accumulation — bounding activation
+    memory to one microbatch while keeping the optimizer update per-step.
+    """
+
+    acc_dtype = (jnp.bfloat16 if opt.moment_dtype == jnp.bfloat16
+                 else jnp.float32)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, dims, p, batch, specs=specs, remat=remat,
+                              remat_policy=remat_policy))(params)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            from jax.sharding import PartitionSpec as P
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            if specs is not None:
+                micro = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, P(None, specs.act[0], *([None] * (x.ndim - 2)))),
+                    micro)
+
+            def body(acc, mb):
+                l, g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(acc_dtype), acc, g)
+                return acc, l
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                                 params)
+            gsum, losses = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(
+                lambda g, p: (g / accum_steps).astype(p.dtype), gsum, params)
+            loss = losses.mean()
+        new_params, new_state = adamw.apply_updates(opt, params, grads,
+                                                    opt_state)
+        metrics = {"loss": loss,
+                   "grad_norm": adamw.global_norm(grads),
+                   "step": new_state["step"]}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, dims: ModelDims, specs=None):
+    def eval_step(params, batch):
+        return loss_fn(cfg, dims, params, batch, specs=specs, remat=False)
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig, dims: ModelDims, max_cache_len: int,
+                      specs=None):
+    def prefill_step(params, batch):
+        return prefill(cfg, dims, params, batch, max_cache_len, specs=specs)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, dims: ModelDims, specs=None):
+    if cfg.encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+
+    def serve_step(params, tokens, cache, index, cross_ctx=None):
+        return decode_step(cfg, dims, params, tokens, cache, index,
+                           specs=specs, cross_ctx=cross_ctx)
+
+    return serve_step
+
+
+def make_forward(cfg: ArchConfig, dims: ModelDims, specs=None):
+    def fwd(params, batch):
+        logits, _ = forward(cfg, dims, params, batch, specs=specs)
+        return logits
+    return fwd

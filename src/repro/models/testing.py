@@ -1,0 +1,58 @@
+"""Reduced configs + synthetic batches for CPU smoke tests.
+
+Same family/block-pattern as the full config, tiny dims: exercises every code
+path (MoE dispatch, SSD scan, shared attention, cross attention, ...) in
+milliseconds on one CPU device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, BlockKind, MoEConfig, SSMConfig
+
+
+def reduced(cfg: ArchConfig, n_super: int = 2) -> ArchConfig:
+    p = len(cfg.block_pattern)
+    hd = 16
+    n_heads = 4
+    n_kv = max(1, min(cfg.n_kv_heads * n_heads // max(cfg.n_heads, 1), n_heads))
+    moe = None
+    if cfg.moe is not None:
+        # capacity_factor=4: no token drops at tiny T, so prefill+decode is
+        # bit-consistent with the full forward (drop behaviour is tested
+        # separately in test_moe.py)
+        moe = MoEConfig(n_experts=8, top_k=min(cfg.moe.top_k, 2),
+                        expert_d_ff=96,
+                        n_shared_experts=min(cfg.moe.n_shared_experts, 1),
+                        dense_residual=cfg.moe.dense_residual, dense_d_ff=96,
+                        capacity_factor=4.0)
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=16)
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", n_layers=p * n_super, d_model=64,
+        n_heads=n_heads, n_kv_heads=n_kv, head_dim=hd,
+        d_ff=0 if cfg.d_ff == 0 else 128, vocab=512, moe=moe, ssm=ssm,
+        cross_ctx_len=16 if cfg.cross_ctx_len else 0, attn_q_chunk=64)
+
+
+def synth_batch(cfg: ArchConfig, batch: int = 2, seq: int = 32,
+                seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: dict = {}
+    if cfg.frontend_stub:
+        out["frames"] = jax.random.normal(
+            k1, (batch, seq, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.random.randint(k1, (batch, seq), 0, cfg.vocab,
+                                           jnp.int32)
+    out["labels"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab,
+                                       jnp.int32)
+    if cfg.cross_ctx_len:
+        out["cross_ctx"] = jax.random.normal(
+            k3, (batch, cfg.cross_ctx_len, cfg.d_model), jnp.bfloat16)
+    return out

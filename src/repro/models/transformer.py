@@ -1,0 +1,283 @@
+"""Config-driven model stack: init / forward / prefill / decode.
+
+The layer stack executes as ``jax.lax.scan`` over *super-blocks* (stacked
+params) so 100-layer models lower to compact HLO.  Tensor-parallel padding
+(query heads, KV heads, vocab, experts) is computed from the model-axis size;
+at tp=1 the architecture is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import BlockCtx, block_apply, block_cache, block_init
+from .config import ArchConfig, BlockKind, MLPKind
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+Params = dict
+Array = jax.Array
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDims:
+    """TP-aware padded dimensions (exact when tp == 1)."""
+    tp: int
+    n_q_pad: int
+    n_kv_pad: int
+    vocab_pad: int
+    expert_pad: int
+
+    @staticmethod
+    def create(cfg: ArchConfig, tp: int = 1) -> "ModelDims":
+        n_q = _pad_to(cfg.n_heads, tp)
+        n_kv = cfg.n_kv_heads if cfg.n_kv_heads % tp == 0 else _pad_to(
+            cfg.n_kv_heads, tp)
+        if tp > cfg.n_kv_heads:
+            n_kv = tp  # replicate KV heads across TP ranks (vLLM-style)
+        expert_pad = 1
+        if cfg.moe is not None:
+            expert_pad = _pad_to(cfg.moe.n_experts, tp)
+        return ModelDims(tp=tp, n_q_pad=n_q, n_kv_pad=n_kv,
+                         vocab_pad=_pad_to(cfg.vocab, tp),
+                         expert_pad=expert_pad)
+
+
+def make_ctx(cfg: ArchConfig, dims: ModelDims, mode: str, positions: Array,
+             cache_index=None, cross_ctx=None, specs=None,
+             max_cache_len: int = 0) -> BlockCtx:
+    return BlockCtx(cfg=cfg, mode=mode, positions=positions,
+                    cache_index=cache_index, cross_ctx=cross_ctx, specs=specs,
+                    n_q_pad=dims.n_q_pad, n_kv_pad=dims.n_kv_pad,
+                    expert_pad=dims.expert_pad, max_cache_len=max_cache_len)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key: Array, dims: ModelDims,
+                dtype=jnp.bfloat16) -> Params:
+    pattern = cfg.block_pattern
+    n_super = cfg.n_super_blocks
+    ctx = make_ctx(cfg, dims, "full", jnp.zeros((1,), jnp.int32))
+    keys = jax.random.split(key, len(pattern) + 4)
+    layers: Params = {}
+    for pi, kind in enumerate(pattern):
+        if kind == BlockKind.SHARED_ATTN:
+            layers[f"p{pi}"] = jax.vmap(lambda k: {})(
+                jax.random.split(keys[pi], n_super))
+            continue
+        init_one = lambda k, _kind=kind: block_init(k, cfg, ctx, dtype, _kind)
+        layers[f"p{pi}"] = jax.vmap(init_one)(
+            jax.random.split(keys[pi], n_super))
+    params: Params = {
+        "embed": (jax.random.normal(keys[-1], (dims.vocab_pad, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "layers": layers,
+        "final_ln": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if BlockKind.SHARED_ATTN in pattern:
+        params["shared_attn"] = block_init(keys[-2], cfg, ctx, dtype,
+                                           BlockKind.ATTN)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-3], cfg.d_model, dims.vocab_pad,
+                                       dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params: Params, batch: dict,
+           specs) -> tuple[Array, Optional[Array]]:
+    if cfg.frontend_stub and "frames" in batch:
+        x = batch["frames"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    if specs is not None:
+        x = jax.lax.with_sharding_constraint(x, specs.act)
+    return x, batch.get("cross_ctx")
+
+
+def _logits(cfg: ArchConfig, params: Params, x: Array, specs) -> Array:
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = x @ w.astype(x.dtype)
+    if specs is not None:
+        logits = jax.lax.with_sharding_constraint(logits, specs.logits)
+    return logits
+
+
+_REMAT_POLICIES = {
+    "nothing": lambda: jax.checkpoint_policies.nothing_saveable,
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "checkpoint_dots": lambda: jax.checkpoint_policies.checkpoint_dots,
+}
+
+
+def _run_stack(cfg: ArchConfig, params: Params, x: Array, ctx: BlockCtx,
+               cache: Optional[Params], remat: bool = False,
+               remat_policy: str = "nothing"
+               ) -> tuple[Array, Optional[Params]]:
+    pattern = cfg.block_pattern
+    shared = params.get("shared_attn")
+
+    def super_block(x, layer_params, layer_cache):
+        new_cache = {}
+        for pi, kind in enumerate(pattern):
+            c_in = layer_cache.get(f"p{pi}") if layer_cache else None
+            x, c_out = block_apply(layer_params[f"p{pi}"], x, ctx, c_in, kind,
+                                   shared=shared)
+            if c_out is not None:
+                new_cache[f"p{pi}"] = c_out
+        return x, (new_cache if new_cache else None)
+
+    if remat:
+        super_block = jax.checkpoint(
+            super_block, policy=_REMAT_POLICIES[remat_policy]())
+
+    def scan_body(x, xs):
+        layer_params, layer_cache = xs
+        x, new_cache = super_block(x, layer_params, layer_cache)
+        return x, new_cache
+
+    cache_xs = cache if cache is not None else None
+    x, new_cache = jax.lax.scan(scan_body, x, (params["layers"], cache_xs))
+    return x, new_cache
+
+
+def forward(cfg: ArchConfig, dims: ModelDims, params: Params, batch: dict,
+            specs=None, remat: bool = False,
+            return_cache: bool = False,
+            max_cache_len: int = 0) -> tuple[Array, Optional[Params]]:
+    """Full-sequence forward.  batch: tokens [B,S] (or frames [B,S,d]),
+    optional cross_ctx [B,T,d].  Returns (logits, cache or None)."""
+    x, cross = _embed(cfg, params, batch, specs)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    ctx = make_ctx(cfg, dims, "full", positions, cross_ctx=cross, specs=specs,
+                   max_cache_len=max_cache_len or S)
+    cache = None
+    if return_cache:
+        cache = init_cache(cfg, dims, B, max_cache_len or S,
+                           x.dtype, specs)
+        # prefill fills positions [0, S); mark by passing cache through
+        ctx = dataclasses.replace(ctx, cache_index=jnp.int32(0))
+        # full-mode blocks rebuild cache from scratch; attn writes via
+        # dynamic_update_slice at 0
+        ctx = dataclasses.replace(ctx, mode="full")
+    x, new_cache = _run_stack(cfg, params, x, ctx,
+                              cache if return_cache else None, remat=remat)
+    logits = _logits(cfg, params, x, specs)
+    return logits, new_cache
+
+
+def loss_fn(cfg: ArchConfig, dims: ModelDims, params: Params, batch: dict,
+            specs=None, remat: bool = True,
+            loss_chunk: int = 512, remat_policy: str = "nothing") -> Array:
+    """Cross-entropy with sequence-chunked, rematerialised logits.
+
+    The lm_head projection + f32 softmax over a 256k vocab dominates training
+    memory if materialised for the full [B, S]; we recompute logits per
+    sequence chunk in the backward pass instead (jax.checkpoint), bounding
+    peak logits memory to B x loss_chunk x V.
+    """
+    x, cross = _embed(cfg, params, batch, specs)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    ctx = make_ctx(cfg, dims, "full", positions, cross_ctx=cross, specs=specs,
+                   max_cache_len=S)
+    x, _ = _run_stack(cfg, params, x, ctx, None, remat=remat,
+                      remat_policy=remat_policy)
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    labels = batch["labels"]
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_loss(xc, lc):
+        logits = (xc @ w.astype(xc.dtype)).astype(jnp.float32)
+        if specs is not None:
+            logits = jax.lax.with_sharding_constraint(logits, specs.logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * mask), jnp.sum(mask)
+
+    c = min(loss_chunk, S)
+    if S % c:
+        c = S
+    nc = S // c
+    if nc > 1:
+        xs = x.reshape(B, nc, c, -1).swapaxes(0, 1)
+        ls = labels.reshape(B, nc, c).swapaxes(0, 1)
+        sums = jax.lax.map(lambda t: chunk_loss(t[0], t[1]), (xs, ls))
+        total, n = jax.tree.map(jnp.sum, sums)
+    else:
+        total, n = chunk_loss(x, labels)
+    return total / jnp.maximum(n, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, dims: ModelDims, batch: int, max_len: int,
+               dtype=jnp.bfloat16, specs=None) -> Params:
+    ctx = make_ctx(cfg, dims, "full", jnp.zeros((1,), jnp.int32),
+                   specs=specs, max_cache_len=max_len)
+
+    def one(kind):
+        return block_cache(cfg, ctx, batch, dtype, kind)
+
+    n_super = cfg.n_super_blocks
+    cache: Params = {}
+    for pi, kind in enumerate(cfg.block_pattern):
+        c = one(kind)
+        cache[f"p{pi}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_super,) + a.shape), c)
+    if specs is not None:
+        cache = constrain_cache(cache, specs)
+    return cache
+
+
+def constrain_cache(cache: Params, specs) -> Params:
+    def f(path, a):
+        names = [getattr(p, "key", None) for p in path]
+        if a.ndim == 5 and "k" in names or a.ndim == 5 and "v" in names:
+            return jax.lax.with_sharding_constraint(
+                a, specs.kv_cache_stacked)
+        return a
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def prefill(cfg: ArchConfig, dims: ModelDims, params: Params, batch: dict,
+            max_cache_len: int, specs=None) -> tuple[Array, Params]:
+    """Run the prompt, return (last-token logits, filled cache)."""
+    logits, cache = forward(cfg, dims, params, batch, specs=specs,
+                            return_cache=True, max_cache_len=max_cache_len)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ArchConfig, dims: ModelDims, params: Params,
+                tokens: Array, cache: Params, index: Array,
+                specs=None, cross_ctx: Optional[Array] = None
+                ) -> tuple[Array, Params]:
+    """One autoregressive step.  tokens: [B, 1]; index: scalar position."""
+    x, _ = _embed(cfg, params, {"tokens": tokens, "cross_ctx": cross_ctx},
+                  specs)
+    positions = jnp.full((x.shape[0], 1), index, dtype=jnp.int32)
+    ctx = make_ctx(cfg, dims, "decode", positions, cache_index=index,
+                   cross_ctx=cross_ctx, specs=specs)
+    x, new_cache = _run_stack(cfg, params, x, ctx, cache)
+    logits = _logits(cfg, params, x, specs)
+    return logits[:, 0], new_cache

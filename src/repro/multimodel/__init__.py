@@ -1,0 +1,2 @@
+from .orchestrator import (ModelPlacement, PodPlan, ServeRequest,
+                           arch_to_workload, make_pod_mcm, plan, realize)

@@ -1,0 +1,79 @@
+"""AdamW from scratch (no optax in this environment).
+
+Features needed at scale: decoupled weight decay, bf16 moment mode (halves
+optimizer memory for the 480B MoE), global-norm clipping, and a linear-warmup
+cosine schedule.  State is a pytree mirroring params, so any ZeRO-style
+sharding rule that applies to params applies to the state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32   # jnp.bfloat16 -> low-mem mode
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_state(cfg: AdamWConfig, params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = schedule(cfg, state["step"])
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu2 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        update = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * update
+        return (p2.astype(p.dtype), mu2.astype(cfg.moment_dtype),
+                nu2.astype(cfg.moment_dtype))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}

@@ -1,0 +1,104 @@
+"""Tests for the trip-count-aware HLO cost analyzer and the cell matrix."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import hlo_cost
+from repro.launch import cells as cm
+from repro.models import ModelDims, get_arch
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(*shapes).compile()
+
+
+def test_scan_flops_equal_unroll():
+    """The core property XLA's cost_analysis lacks: scan == unroll."""
+    def make(unroll):
+        def f(ws, x):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(body, x, ws, unroll=8 if unroll else 1)
+            return x.sum()
+        return f
+
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+    r_scan = hlo_cost.analyze(_compile(make(False), ws, x).as_text())
+    r_unroll = hlo_cost.analyze(_compile(make(True), ws, x).as_text())
+    expected = 8 * 2 * 32 * 256 * 256
+    assert abs(r_scan.flops - r_unroll.flops) / r_unroll.flops < 0.02
+    assert r_scan.flops > expected  # dots + elementwise
+    assert any(t == 8 for _, t in r_scan.loops)
+
+
+def test_nested_loops_multiply():
+    def f(ws, x):
+        def outer(x, w):
+            def inner(x, _):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(inner, x, None, length=4)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, ws)
+        return x.sum()
+
+    ws = jax.ShapeDtypeStruct((3, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 128), jnp.float32)
+    r = hlo_cost.analyze(_compile(f, ws, x).as_text())
+    expected_dot = 3 * 4 * 2 * 16 * 128 * 128
+    assert r.flops > expected_dot * 0.9
+    assert r.flops < expected_dot * 1.6
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    r = hlo_cost.analyze(_compile(f, a, b).as_text())
+    assert r.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+# ---------------------------- cell matrix -----------------------------------
+
+def test_cell_matrix_counts():
+    assert len(cm.all_cells(include_skipped=True)) == 40
+    valid = cm.all_cells()
+    assert len(valid) == 31
+    skipped = [c for c in cm.all_cells(include_skipped=True)
+               if not cm.cell_valid(c)[0]]
+    assert len(skipped) == 9
+
+
+def test_long_context_only_for_subquadratic():
+    for c in cm.all_cells():
+        if c.shape == "long_500k":
+            assert get_arch(c.arch).sub_quadratic
+
+
+def test_encoder_only_has_no_decode_cells():
+    for c in cm.all_cells():
+        if get_arch(c.arch).encoder_only:
+            assert c.kind != "decode"
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "hubert-xlarge",
+                                  "llama-3.2-vision-90b"])
+def test_input_specs_shapes(arch):
+    for shape in ("train_4k", "prefill_32k"):
+        cell = cm.Cell(arch, shape)
+        specs = cm.input_specs(cell)
+        cfg = get_arch(arch)
+        key = "frames" if cfg.frontend_stub else "tokens"
+        assert specs[key].shape[:2] == (cell.batch, cell.seq)
+        if cfg.cross_ctx_len:
+            assert specs["cross_ctx"].shape == (
+                cell.batch, cfg.cross_ctx_len, cfg.d_model)
+
+
+def test_param_shapes_no_allocation():
+    cfg = get_arch("command-r-35b")
+    dims = ModelDims.create(cfg, tp=16)
+    shapes = cm.param_shapes(cfg, dims)
+    total = sum(s.size for s in jax.tree.leaves(shapes))
+    assert 30e9 < total < 40e9  # ~32B params, no memory allocated

@@ -1,0 +1,210 @@
+"""Engine tests: packing (Thm 2), provisioning (Eq 2), segmentation (Thm 1),
+scheduling validity, batched-vs-reference evaluator equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SearchConfig, get_scenario, make_mcm, run_config,
+                        schedule, standalone_schedule)
+from repro.core.cost import (BatchedModelCandidates, ModelWindowPlan,
+                             WindowPlan, eval_model_candidates,
+                             evaluate_window)
+from repro.core.maestro import build_cost_db
+from repro.core.provision import provision
+from repro.core.reconfig import (greedy_pack, uniform_pack,
+                                 validate_assignment)
+from repro.core.segmentation import enumerate_segmentations
+
+
+@pytest.fixture(scope="module")
+def small():
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    return sc, mcm, db
+
+
+@pytest.fixture(scope="module")
+def heavy():
+    sc = get_scenario("dc4_lms_seg_image")
+    mcm = make_mcm("het_cb", n_pe=4096)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    return sc, mcm, db
+
+
+# --------------------------- MCM-Reconfig ----------------------------------
+
+@pytest.mark.parametrize("n_splits", [0, 1, 2, 4, 8])
+def test_greedy_pack_is_valid_partition(heavy, n_splits):
+    _, mcm, db = heavy
+    wa = greedy_pack(db, mcm.class_counts(), n_splits)
+    validate_assignment(db, wa)  # Theorem 2: coverage + exclusivity
+
+
+@pytest.mark.parametrize("n_splits", [1, 2, 4])
+def test_uniform_pack_is_valid_partition(heavy, n_splits):
+    _, mcm, db = heavy
+    validate_assignment(db, uniform_pack(db, n_splits))
+
+
+def test_greedy_pack_preserves_layer_order(heavy):
+    _, mcm, db = heavy
+    wa = greedy_pack(db, mcm.class_counts(), 4)
+    for mi in range(db.n_models):
+        ranges = [r[mi] for r in wa.ranges if mi in r]
+        for (s1, e1), (s2, e2) in zip(ranges, ranges[1:]):
+            assert e1 == s2  # contiguous, in order
+
+
+def test_greedy_pack_zero_splits_single_window(heavy):
+    _, mcm, db = heavy
+    wa = greedy_pack(db, mcm.class_counts(), 0)
+    assert wa.n_windows == 1
+
+
+# ------------------------------ PROV ---------------------------------------
+
+def test_provision_respects_budget_and_min_one(heavy):
+    _, mcm, db = heavy
+    ranges = {mi: (db.model_slice(mi).start, db.model_slice(mi).stop)
+              for mi in range(db.n_models)}
+    alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets)
+    assert sum(alloc.values()) <= mcm.n_chiplets
+    assert all(v >= 1 for v in alloc.values())
+
+
+def test_provision_heuristic2_cap(heavy):
+    _, mcm, db = heavy
+    ranges = {0: (0, 2)}  # two layers only
+    alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
+                      max_nodes_per_model=6)
+    assert alloc[0] <= 2  # never more nodes than layers
+
+
+def test_provision_proportional_to_share(small):
+    _, mcm, db = small
+    # model 1 (HandSP, batch 30) dominates EyeCod compute here
+    ranges = {mi: (db.model_slice(mi).start, db.model_slice(mi).stop)
+              for mi in range(db.n_models)}
+    alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
+                      metric="latency")
+    lat0 = db.lat[db.model_slice(0)].mean(axis=1).sum()
+    lat1 = db.lat[db.model_slice(1)].mean(axis=1).sum()
+    if lat1 > 2 * lat0:
+        assert alloc[1] > alloc[0]
+
+
+# ------------------------------ SEG ----------------------------------------
+
+@given(n_layers=st.integers(1, 12), max_segs=st.integers(1, 5))
+@settings(max_examples=50, deadline=None)
+def test_segmentations_are_valid_partitions(n_layers, max_segs):
+    for se in enumerate_segmentations(n_layers, max_segs, cap=512):
+        assert se[-1] == n_layers          # covers the slice (Theorem 1)
+        assert len(se) <= max(1, min(max_segs, n_layers))
+        assert all(b < a for b, a in zip(se, se[1:]))  # strictly increasing
+
+
+def test_segmentation_count_small_case():
+    # 4 layers, up to 3 segments: C(3,0)+C(3,1)+C(3,2) = 1+3+3 = 7
+    assert len(enumerate_segmentations(4, 3, cap=512)) == 7
+
+
+# ------------------------- batched evaluator --------------------------------
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_batched_eval_matches_reference(seed):
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    rng = np.random.default_rng(seed)
+    mi = int(rng.integers(0, db.n_models))
+    sl = db.model_slice(mi)
+    Lw = sl.stop - sl.start
+    n_seg = int(rng.integers(1, min(4, Lw) + 1))
+    cuts = np.sort(rng.choice(np.arange(1, Lw), size=n_seg - 1,
+                              replace=False)) if n_seg > 1 else np.array([], int)
+    seg_ends_rel = np.concatenate([cuts, [Lw]]).astype(int)
+    # random self-avoiding path
+    path = [int(rng.choice(mcm.dram_ports()))]
+    while len(path) < n_seg:
+        nbrs = [c for c in mcm.neighbors(path[-1]) if c not in path]
+        if not nbrs:
+            return  # dead end; skip this example
+        path.append(int(rng.choice(nbrs)))
+
+    plan = ModelWindowPlan(model_idx=mi, start=sl.start, end=sl.stop,
+                           seg_ends=tuple(sl.start + e for e in seg_ends_rel),
+                           chiplets=tuple(path), pipelined=True)
+    ref = evaluate_window(db, mcm, WindowPlan((plan,)), validate=True)
+
+    seg_id = np.zeros((1, Lw), dtype=np.int64)
+    prev = 0
+    for si, e in enumerate(seg_ends_rel):
+        seg_id[0, prev:e] = si
+        prev = e
+    chips = np.full((1, n_seg), -1, dtype=np.int64)
+    chips[0, :] = path
+    cand = BatchedModelCandidates(model_idx=mi, start=sl.start, end=sl.stop,
+                                  seg_id=seg_id, chiplets=chips,
+                                  n_segs=np.array([n_seg]))
+    lat, energy = eval_model_candidates(db, mcm, cand, n_active=1)
+    np.testing.assert_allclose(lat[0], ref.per_model_latency[mi], rtol=1e-12)
+    np.testing.assert_allclose(energy[0], ref.energy, rtol=1e-12)
+
+
+# --------------------------- end-to-end ------------------------------------
+
+def test_schedule_validates_and_is_deterministic(small):
+    sc, mcm, _ = small
+    out1 = schedule(sc, mcm, SearchConfig(seed=3))
+    out2 = schedule(sc, mcm, SearchConfig(seed=3))
+    assert out1.result.latency == out2.result.latency
+    assert out1.result.energy == out2.result.energy
+
+
+def test_pipelined_no_slower_than_sequential(small):
+    """max(segments) <= sum(segments): pipelining never hurts one model."""
+    sc, mcm, db = small
+    out = schedule(sc, mcm, SearchConfig())
+    for wr in out.windows:
+        for p in wr.plan.plans:
+            seq = ModelWindowPlan(**{**p.__dict__, "pipelined": False})
+            w_pipe = evaluate_window(db, mcm, WindowPlan((p,)))
+            w_seq = evaluate_window(db, mcm, WindowPlan((seq,)))
+            assert (w_pipe.per_model_latency[p.model_idx]
+                    <= w_seq.per_model_latency[p.model_idx] + 1e-15)
+
+
+def test_scar_beats_standalone_on_latency(small):
+    sc, mcm, _ = small
+    scar = schedule(sc, mcm, SearchConfig(metric="latency"))
+    sa = standalone_schedule(sc, mcm)
+    assert scar.result.latency <= sa.result.latency * 1.001
+
+
+def test_heterogeneous_beats_homogeneous_on_arvr_edp():
+    """Paper headline direction: het MCM wins on diverse AR/VR workloads."""
+    sc = get_scenario("xr10_vr_gaming")
+    het = run_config(sc, "het_sides", n_pe=256, cfg=SearchConfig())
+    h_nv = run_config(sc, "simba_nvdla", n_pe=256, cfg=SearchConfig())
+    h_sh = run_config(sc, "simba_shi", n_pe=256, cfg=SearchConfig())
+    assert het.edp < min(h_nv.edp, h_sh.edp)
+
+
+def test_evolutionary_search_runs_and_is_valid(heavy):
+    sc, _, _ = heavy
+    mcm66 = make_mcm("het_cross", rows=6, cols=6, n_pe=4096)
+    out = schedule(sc, mcm66, SearchConfig(algo="evolutionary", seed=1,
+                                           path_cap=64, seg_cap=128))
+    assert out.result.latency > 0
+    for wr in out.windows:
+        wr.plan.validate()
+
+
+def test_window_energy_additive(small):
+    sc, mcm, db = small
+    out = schedule(sc, mcm, SearchConfig())
+    total = sum(w.result.energy for w in out.windows)
+    np.testing.assert_allclose(total, out.result.energy, rtol=1e-12)

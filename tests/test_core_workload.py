@@ -1,0 +1,91 @@
+"""Unit tests: workload IR, model zoo, cost DB."""
+import numpy as np
+import pytest
+
+from repro.core import OpType, get_scenario, make_mcm
+from repro.core.maestro import build_cost_db, expected_latency
+from repro.core.modelzoo import REGISTRY, get_model
+from repro.core.workload import Layer, attn_layer, conv, gemm
+
+
+def test_gemm_macs_and_bytes():
+    l = gemm("g", M=128, N=256, K=512, B=4)
+    assert l.macs == 4 * 128 * 256 * 512
+    assert l.weight_bytes == 512 * 256
+    assert l.in_bytes == 4 * 128 * 512
+    assert l.out_bytes == 4 * 128 * 256
+
+
+def test_conv_macs():
+    l = conv("c", N=2, C=64, K=128, Y=56, X=56, R=3)
+    assert l.macs == 2 * 64 * 128 * 56 * 56 * 9
+
+
+def test_attn_layer_fuses_score_and_context():
+    l = attn_layer("a", batch=2, heads=8, sl_q=128, sl_kv=128, head_dim=64)
+    assert l.macs == 2 * 8 * 128 * 128 * 64 * 2
+    assert l.weight_bytes == 0
+
+
+def test_gpt_l_layer_count_matches_table_iii():
+    assert len(get_model("gpt-l")) == 120
+
+
+def test_bert_l_layer_count_matches_table_iii():
+    assert len(get_model("bert-l")) == 60
+
+
+def test_unet_has_23_convs():
+    m = get_model("u-net")
+    assert len(m) == 23
+    assert all(l.op == OpType.CONV for l in m.layers)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_every_zoo_model_builds_with_batch(name):
+    m = get_model(name, batch=4)
+    assert len(m.layers) > 0
+    assert m.total_macs > 0
+    for l in m.layers:
+        assert l.macs >= 0
+        assert l.in_bytes > 0
+        assert l.out_bytes > 0
+
+
+def test_batch_scales_macs():
+    m1, m8 = get_model("resnet-50", 1), get_model("resnet-50", 8)
+    assert m8.total_macs == 8 * m1.total_macs
+
+
+def test_cost_db_shapes_and_positivity():
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    assert db.lat.shape == (sc.n_layers, 2)
+    assert (db.lat > 0).all()
+    assert (db.energy > 0).all()
+    # model offsets cover the range
+    assert db.model_slice(0).start == 0
+    assert db.model_slice(db.n_models - 1).stop == sc.n_layers
+
+
+def test_expected_latency_is_convex_combination():
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    e = expected_latency(db, np.array([1, 1]))
+    lo = db.lat.min(axis=1)
+    hi = db.lat.max(axis=1)
+    assert (e >= lo - 1e-15).all() and (e <= hi + 1e-15).all()
+
+
+def test_dataflow_affinity_structure():
+    """Transformers prefer NVDLA on latency; early convs prefer Shi-diannao."""
+    sc = get_scenario("dc3_lms_image_heavy")  # GPT-L, BERT-L, ResNet-50 b32
+    mcm = make_mcm("het_cb", n_pe=4096)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    gpt = db.model_slice(0)
+    assert db.lat[gpt, 0].sum() < db.lat[gpt, 1].sum()  # NVDLA wins GPT
+    # ResNet stem (first layer of model 2) prefers Shi-diannao
+    r50 = db.model_slice(2)
+    assert db.lat[r50.start, 1] < db.lat[r50.start, 0]

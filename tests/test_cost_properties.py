@@ -1,0 +1,86 @@
+"""Property-based tests (hypothesis) on cost-model invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_mcm
+from repro.core.chiplet import ChipletClass, Dataflow, PackageParams
+from repro.core.maestro import compute_cycles, l2_traffic_bytes, layer_cost
+from repro.core.workload import attn_layer, conv, gemm
+
+
+PKG = PackageParams()
+NV = ChipletClass(Dataflow.NVDLA, n_pe=256)
+SHI = ChipletClass(Dataflow.SHIDIANNAO, n_pe=256)
+
+
+@given(m=st.integers(1, 256), n=st.integers(1, 256), k=st.integers(1, 256),
+       b=st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_gemm_latency_positive_and_supra_ideal(m, n, k, b):
+    """Cycles are >= MACs / N_PE on every dataflow (can't beat the PEs)."""
+    l = gemm("g", M=m, N=n, K=k, B=b)
+    for cls in (NV, SHI):
+        cyc = compute_cycles(l, cls)
+        assert cyc >= l.macs / cls.n_pe
+
+
+@given(scale=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_latency_monotonic_in_batch(scale):
+    l1 = conv("c", N=1, C=32, K=64, Y=28, X=28, R=3)
+    l2 = conv("c", N=scale, C=32, K=64, Y=28, X=28, R=3)
+    for cls in (NV, SHI):
+        lat1, e1 = layer_cost(l1, cls, PKG)
+        lat2, e2 = layer_cost(l2, cls, PKG)
+        assert lat2 >= lat1
+        assert e2 >= e1
+        assert e2 == pytest.approx(scale * e1, rel=0.05)  # energy ~ additive
+
+
+@given(sl=st.sampled_from([64, 128, 256]), heads=st.integers(1, 16))
+@settings(max_examples=20, deadline=None)
+def test_attention_macs_scale_quadratically(sl, heads):
+    a1 = attn_layer("a", batch=1, heads=heads, sl_q=sl, sl_kv=sl, head_dim=64)
+    a2 = attn_layer("a", batch=1, heads=heads, sl_q=2 * sl, sl_kv=2 * sl,
+                    head_dim=64)
+    assert a2.macs == 4 * a1.macs
+
+
+def test_l2_traffic_ws_penalises_conv_window():
+    """WS re-reads inputs R*S times on convs, not on GEMMs."""
+    c = conv("c", N=1, C=64, K=64, Y=28, X=28, R=3)
+    g = gemm("g", M=784, N=64, K=576)
+    t_conv = l2_traffic_bytes(c, NV)
+    assert t_conv >= c.in_bytes * 9  # window re-fetch
+    t_gemm = l2_traffic_bytes(g, NV)
+    assert t_gemm < g.in_bytes * 2 + g.weight_bytes + g.out_bytes + 1
+
+
+@given(rows=st.integers(2, 6), cols=st.integers(2, 6))
+@settings(max_examples=30, deadline=None)
+def test_mcm_geometry_invariants(rows, cols):
+    mcm = make_mcm("het_cb", rows=rows, cols=cols, n_pe=256)
+    # hop metric: symmetric, triangle inequality on a sample
+    a, b, c = 0, mcm.n_chiplets // 2, mcm.n_chiplets - 1
+    assert mcm.hops(a, b) == mcm.hops(b, a)
+    assert mcm.hops(a, c) <= mcm.hops(a, b) + mcm.hops(b, c)
+    # DRAM ports on the left/right columns only
+    for p in mcm.dram_ports():
+        _, col = mcm.pos(p)
+        assert col in (0, cols - 1)
+    # neighbor lists are consistent with hop distance 1
+    for cid in range(mcm.n_chiplets):
+        for nb in mcm.neighbors(cid):
+            assert mcm.hops(cid, nb) == 1
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=25, deadline=None)
+def test_class_counts_sum_to_grid(seed):
+    rng = np.random.default_rng(seed)
+    rows, cols = int(rng.integers(2, 7)), int(rng.integers(2, 7))
+    pattern = rng.choice(["simba_nvdla", "simba_shi", "het_cb", "het_sides",
+                          "het_cross"])
+    mcm = make_mcm(str(pattern), rows=rows, cols=cols, n_pe=256)
+    assert mcm.class_counts().sum() == rows * cols

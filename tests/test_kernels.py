@@ -1,0 +1,114 @@
+"""Per-kernel tests: shape/dtype sweeps, interpret-mode kernel vs ref.py
+oracle (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import mha
+from repro.kernels.ssd_scan import gla
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 128, 1, 1, 64), (2, 256, 4, 2, 64), (1, 256, 8, 1, 128),
+    (2, 384, 6, 2, 64), (1, 512, 2, 2, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, S, Hq, Hkv, D, causal, dt):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + D), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dt)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dt)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dt)
+    out = mha(q, k, v, causal=causal, interpret=True)
+    ref = mha(q, k, v, causal=causal, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
+def test_flash_attention_block_shapes_sweep():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    ref = mha(q, k, v, causal=True, use_kernel=False)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256), (128, 256)]:
+        out = mha(q, k, v, causal=True, block_q=bq, block_k=bk,
+                  interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,L,H,N,P,chunk", [
+    (1, 128, 1, 16, 16, 64), (2, 256, 2, 64, 64, 128),
+    (1, 512, 4, 32, 64, 128), (1, 256, 2, 64, 64, 256),
+])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_ref(B, L, H, N, P, chunk, dt):
+    ks = jax.random.split(jax.random.PRNGKey(L + N), 4)
+    q = jax.random.normal(ks[0], (B, L, H, N), dt)
+    k = jax.random.normal(ks[1], (B, L, H, N), dt)
+    v = jax.random.normal(ks[2], (B, L, H, P), dt)
+    a = -jax.nn.softplus(jax.random.normal(ks[3], (B, L, H)))
+    out = gla(q, k, v, a, chunk=chunk, interpret=True)
+    ref = gla(q, k, v, a, chunk=chunk, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dt))
+
+
+def test_ssd_scan_state_carry_across_chunks():
+    """Decay ~ 1 (a ~ 0): output at position t is the running sum of kv —
+    checks the scratch state survives chunk boundaries."""
+    B, L, H, N, P = 1, 256, 1, 8, 8
+    q = jnp.ones((B, L, H, N)) / N
+    k = jnp.ones((B, L, H, N))
+    v = jnp.ones((B, L, H, P))
+    a = jnp.zeros((B, L, H))
+    out = gla(q, k, v, a, chunk=64, interpret=True)
+    expect = jnp.arange(1, L + 1, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out[0, :, 0, 0]),
+                               np.asarray(expect), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_scar_eval_kernel_matches_core_evaluator(seed):
+    """Property: kernel == jnp ref == numpy core evaluator on random plans."""
+    from repro.core import get_scenario, make_mcm
+    from repro.core.cost import BatchedModelCandidates, eval_model_candidates
+    from repro.core.maestro import build_cost_db
+    from repro.kernels.scar_eval import evaluate, pack_candidates
+
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    rng = np.random.default_rng(seed)
+    mi = int(rng.integers(0, db.n_models))
+    sl = db.model_slice(mi)
+    Lw = sl.stop - sl.start
+    B, S = 16, 4
+    seg_id = np.sort(rng.integers(0, S, (B, Lw)), axis=1)
+    for b in range(B):
+        _, inv = np.unique(seg_id[b], return_inverse=True)
+        seg_id[b] = inv
+    n_segs = seg_id.max(axis=1) + 1
+    chips = np.full((B, S), -1, dtype=np.int64)
+    for b in range(B):
+        chips[b, :n_segs[b]] = rng.choice(mcm.n_chiplets, n_segs[b],
+                                          replace=False)
+    cand = BatchedModelCandidates(model_idx=mi, start=sl.start, end=sl.stop,
+                                  seg_id=seg_id, chiplets=chips,
+                                  n_segs=n_segs)
+    lat_ref, e_ref = eval_model_candidates(db, mcm, cand, n_active=2)
+    args, Breal = pack_candidates(db, mcm, cand, n_active=2, pad_b=16)
+    out_k = np.asarray(evaluate(*args, block_b=16, interpret=True))[:Breal]
+    out_r = np.asarray(evaluate(*args, use_kernel=False))[:Breal]
+    np.testing.assert_allclose(out_k[:, 0], lat_ref, rtol=1e-5)
+    np.testing.assert_allclose(out_k[:, 1], e_ref, rtol=1e-5)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5)

@@ -1,0 +1,63 @@
+"""SCAR-on-TPU orchestrator tests: planning invariants + realized serving."""
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.scheduler import SearchConfig
+from repro.multimodel import ServeRequest, arch_to_workload, make_pod_mcm, plan
+from repro.models import get_arch
+
+
+def test_arch_to_workload_layer_graph():
+    m = arch_to_workload(get_arch("minitron-8b"), batch=4, seq=1024)
+    assert len(m.layers) == 32 * 5
+    assert m.total_macs > 0
+
+
+def test_pod_mcm_uses_tpu_constants():
+    mcm = make_pod_mcm(16, 16, "het_sides")
+    assert mcm.n_chiplets == 256
+    assert mcm.pkg.nop_bw == 50e9          # ICI link bandwidth
+    assert mcm.classes[0].n_pe == 131072
+
+
+def test_plan_places_all_models_disjointly():
+    reqs = [ServeRequest("minitron-8b", 8, 2048),
+            ServeRequest("qwen2-moe-a2.7b", 16, 2048),
+            ServeRequest("xlstm-350m", 32, 2048)]
+    pod = plan(reqs, rows=16, cols=16, pattern="het_sides",
+               cfg=SearchConfig(metric="edp"))
+    assert pod.outcome.edp > 0
+    archs_placed = {p.arch for p in pod.placements}
+    assert archs_placed == {r.arch for r in reqs}
+    # exclusivity within each window
+    by_window: dict = {}
+    for p in pod.placements:
+        used = by_window.setdefault(p.window, set())
+        assert not (used & set(p.chips)), "chip used twice in one window"
+        used.update(p.chips)
+    # chip paths are XY-contiguous
+    mcm = make_pod_mcm(16, 16, "het_sides")
+    for p in pod.placements:
+        for a, b in zip(p.chips, p.chips[1:]):
+            assert mcm.hops(a, b) == 1
+
+
+def test_transformers_prefer_tp_major_template():
+    reqs = [ServeRequest("command-r-35b", 8, 2048)]
+    pod = plan(reqs, rows=8, cols=8, pattern="het_sides",
+               cfg=SearchConfig(metric="latency"))
+    # a big-GEMM transformer should land on the WS/TP-major side
+    assert any(p.template == "tp-major" for p in pod.placements)
+
+
+@pytest.mark.slow
+def test_multimodel_serve_example_runs():
+    """End-to-end: plan + realize + execute on 8 emulated devices."""
+    out = subprocess.run(
+        [sys.executable, "examples/multimodel_serve.py"],
+        capture_output=True, text=True, timeout=540,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "realized and executed" in out.stdout

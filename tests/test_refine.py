@@ -1,0 +1,53 @@
+"""Beyond-paper refinement: never worse, always valid, deterministic."""
+import pytest
+
+from repro.core import (SearchConfig, get_scenario, make_mcm, run_config)
+from repro.core.refine import refine
+from repro.core.scheduler import get_cost_db
+from repro.core.cost import evaluate_schedule
+
+
+@pytest.fixture(scope="module")
+def base():
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    out = run_config(sc, "het_sides", n_pe=256,
+                     cfg=SearchConfig(metric="edp"))
+    return sc, mcm, out
+
+
+def test_refine_never_worse(base):
+    sc, mcm, out = base
+    ref = refine(sc, mcm, out, iters=300, seed=1)
+    assert ref.result.edp <= out.edp * (1 + 1e-12)
+
+
+def test_refined_schedule_is_valid(base):
+    sc, mcm, out = base
+    ref = refine(sc, mcm, out, iters=300, seed=2)
+    db = get_cost_db(sc, mcm)
+    # validate=True re-checks Theorems 1-2 and chiplet exclusivity
+    res = evaluate_schedule(db, mcm, [w.plan for w in ref.windows],
+                            validate=True)
+    assert res.latency == pytest.approx(ref.result.latency)
+    # coverage: every layer appears exactly once across windows
+    seen = set()
+    for w in ref.windows:
+        for p in w.plan.plans:
+            for li in range(p.start, p.end):
+                assert li not in seen
+                seen.add(li)
+    assert len(seen) == db.n_layers
+
+
+def test_refine_deterministic(base):
+    sc, mcm, out = base
+    r1 = refine(sc, mcm, out, iters=200, seed=7)
+    r2 = refine(sc, mcm, out, iters=200, seed=7)
+    assert r1.result.edp == r2.result.edp
+
+
+def test_refine_zero_iters_is_identity(base):
+    sc, mcm, out = base
+    ref = refine(sc, mcm, out, iters=0, seed=0)
+    assert ref.result.edp == pytest.approx(out.edp)
