@@ -1,12 +1,14 @@
 """Shared helpers for the benchmark suite."""
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
 
-from repro.core import (ALL_PATTERNS, SearchConfig, get_scenario, run_config)
+from repro.core import ALL_PATTERNS, SearchConfig
+from repro.core.portfolio import SweepJob, run_portfolio
 
 CONFIG_SET = [
     ("standalone_nvdla", "simba_nvdla", True),
@@ -23,17 +25,23 @@ def npe_for(scenario_name: str) -> int:
     return 4096 if scenario_name.startswith("dc") else 256
 
 
+def bench_processes() -> int:
+    """Benchmarks run the portfolio inline unless SCAR_PORTFOLIO_PROCS is
+    set: per-call wall times stay comparable across runs, and the in-process
+    CostDB cache is shared across the configs of one scenario."""
+    return int(os.environ.get("SCAR_PORTFOLIO_PROCS", "1"))
+
+
 def sweep(scenario_name: str, metric: str = "edp", configs=None,
           rows: int = 3, cols: int = 3, **cfg_kw) -> dict:
     """Run every MCM config on a scenario; returns {name: outcome}."""
-    sc = get_scenario(scenario_name)
-    out = {}
-    for name, pattern, standalone in (configs or CONFIG_SET):
-        cfg = SearchConfig(metric=metric, **cfg_kw)
-        out[name] = run_config(sc, pattern, rows=rows, cols=cols,
-                               n_pe=npe_for(scenario_name), cfg=cfg,
-                               standalone=standalone)
-    return out
+    jobs = [SweepJob(scenario=scenario_name, pattern=pattern, rows=rows,
+                     cols=cols, n_pe=npe_for(scenario_name),
+                     standalone=standalone,
+                     cfg=SearchConfig(metric=metric, **cfg_kw), label=name)
+            for name, pattern, standalone in (configs or CONFIG_SET)]
+    results = run_portfolio(jobs, processes=bench_processes())
+    return {r.job.name: r.outcome for r in results}
 
 
 def emit(name: str, us: float, derived: str) -> None:

@@ -173,28 +173,16 @@ def bench_windowing() -> None:
 
 def _schedule_with_assignment(sc, mcm, wa):
     """Run PROV/SEG/SCHED on a fixed window assignment."""
-    from repro.core.provision import provision
-    from repro.core.segmentation import top_k_segmentations
-    from repro.core.sched import build_candidates, combine_candidates
+    from repro.core.sched import combine_candidates
     from repro.core.cost import evaluate_schedule
-    from repro.core.scheduler import ScheduleOutcome, SearchConfig as SC
+    from repro.core.scheduler import (ScheduleOutcome, SearchConfig as SC,
+                                      build_window_sets)
     db = get_cost_db(sc, mcm)
     cfg = SC(metric="edp")
     prev_end: dict[int, int] = {}
     windows = []
     for ranges in wa.ranges:
-        alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
-                          metric="edp",
-                          max_nodes_per_model=cfg.max_nodes_per_model)
-        sets = []
-        for mi, (s, e) in sorted(ranges.items()):
-            segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
-                                       k=cfg.seg_top_k, cap=cfg.seg_cap)
-            sets.append(build_candidates(db, mcm, mi, (s, e), segs,
-                                         n_active=len(ranges),
-                                         prev_end=prev_end.get(mi),
-                                         path_cap=cfg.path_cap,
-                                         keep=cfg.keep_per_model))
+        sets = build_window_sets(db, mcm, cfg, ranges, prev_end)
         wr = combine_candidates(db, mcm, sets, prev_end, metric="edp",
                                 beam=cfg.beam)
         windows.append(wr)

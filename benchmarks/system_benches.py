@@ -56,6 +56,63 @@ def bench_scar_eval_throughput() -> None:
          f"per_candidate_ns={t_jx.us * 1e3 / B:.0f}")
 
 
+def bench_sched_throughput() -> None:
+    """Window-combination throughput: vectorized BeamEngine vs the reference
+    Python beam search on a 6x6 MCM (dc4, all windows).  Guards the >=5x
+    speedup target of the candidate-tensor engine and asserts bit-identical
+    plans while at it."""
+    import time as _time
+    from repro.core import SearchConfig, get_scenario, make_mcm
+    from repro.core.engine import BeamEngine, reference_combine
+    from repro.core.reconfig import greedy_pack
+    from repro.core.scheduler import build_window_sets, get_cost_db
+
+    sc = get_scenario("dc4_lms_seg_image")
+    mcm = make_mcm("het_cross", rows=6, cols=6, n_pe=4096)
+    cfg = SearchConfig(path_cap=64, seg_cap=128)
+    db = get_cost_db(sc, mcm)
+    wa = greedy_pack(db, mcm.class_counts(), cfg.n_splits)
+    prev_end: dict[int, int] = {}
+    windows = []
+    for ranges in wa.ranges:
+        sets = build_window_sets(db, mcm, cfg, ranges, prev_end)
+        windows.append((sets, dict(prev_end)))
+        r = reference_combine(db, mcm, sets, prev_end, metric=cfg.metric,
+                              beam=cfg.beam)
+        prev_end = dict(prev_end)
+        prev_end.update(r.result.end_chiplet)
+
+    engine = BeamEngine(beam=cfg.beam)
+    for sets, pe in windows:  # parity guard on live data
+        v = engine.combine(db, mcm, sets, pe, metric=cfg.metric)
+        r = reference_combine(db, mcm, sets, pe, metric=cfg.metric,
+                              beam=cfg.beam)
+        assert v.plan == r.plan, "vectorized beam diverged from reference"
+
+    def rate(fn) -> float:
+        t0 = _time.time()
+        n = 0
+        while _time.time() - t0 < 1.5:
+            for sets, pe in windows:
+                fn(sets, pe)
+            n += len(windows)
+        return n / (_time.time() - t0)
+
+    ref_rate = rate(lambda s, p: reference_combine(
+        db, mcm, s, p, metric=cfg.metric, beam=cfg.beam))
+    vec_rate = rate(lambda s, p: engine.combine(
+        db, mcm, s, p, metric=cfg.metric))
+    speedup = vec_rate / ref_rate
+    emit("sched_throughput_6x6", 1e6 / vec_rate,
+         f"combos_per_s={vec_rate:.1f};reference_per_s={ref_rate:.1f};"
+         f"speedup={speedup:.2f}x;target=5x")
+    # a real guard, not just a printout (typically ~10-13x; 5x leaves
+    # headroom for noisy CI machines)
+    assert speedup >= 5.0, (
+        f"vectorized beam regressed to {speedup:.2f}x vs reference "
+        f"(target >=5x)")
+
+
 def bench_kernel_agreement() -> None:
     """Kernel-vs-oracle max error at a production-ish tile (interpret mode)."""
     from repro.kernels.flash_attention import mha
@@ -137,5 +194,5 @@ def bench_roofline_table(path: str = "dryrun_results.jsonl") -> None:
              f"compute_fraction={frac:.3f}")
 
 
-ALL = [bench_scar_eval_throughput, bench_kernel_agreement,
-       bench_roofline_table]
+ALL = [bench_scar_eval_throughput, bench_sched_throughput,
+       bench_kernel_agreement, bench_roofline_table]

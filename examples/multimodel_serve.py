@@ -16,6 +16,8 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
+
+from repro.launch.mesh import auto_axis_types, mesh_context
 import jax.numpy as jnp
 import numpy as np
 
@@ -47,12 +49,11 @@ def main() -> None:
         coords = [divmod(c, cols) for c in pl_.chips]
         devs = np.array([devices[r, c] for r, c in coords])
         mesh = jax.sharding.Mesh(devs.reshape(len(devs), 1),
-                                 ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                                 ("data", "model"), **auto_axis_types(2))
         dims = ModelDims.create(cfg, tp=1)
         batch = max(req.batch, len(devs))
         specs = shd.make_specs(cfg, mesh, batch)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             params = init_params(cfg, jax.random.PRNGKey(0), dims)
             b = synth_batch(cfg, batch=batch, seq=req.seq)
             b.pop("labels", None)

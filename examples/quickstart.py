@@ -9,7 +9,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import SearchConfig, get_scenario, run_config
+from repro.core import SearchConfig, get_scenario
+from repro.core.portfolio import SweepJob, run_portfolio
 
 
 def main() -> None:
@@ -17,18 +18,18 @@ def main() -> None:
     print(f"scenario: {sc.name}  models: "
           f"{[(m.name, len(m)) for m in sc.models]}\n")
 
-    results = {}
-    for name, pattern, standalone in [
-        ("standalone NVDLA", "simba_nvdla", True),
-        ("Simba (NVDLA)", "simba_nvdla", False),
-        ("Simba (Shi-diannao)", "simba_shi", False),
-        ("Het-CB", "het_cb", False),
-        ("Het-Sides", "het_sides", False),
-        ("Het-Cross", "het_cross", False),
-    ]:
-        out = run_config(sc, pattern, n_pe=256, standalone=standalone,
-                         cfg=SearchConfig(metric="edp"))
-        results[name] = out
+    jobs = [SweepJob(scenario=sc.name, pattern=pattern, n_pe=256,
+                     standalone=standalone, cfg=SearchConfig(metric="edp"),
+                     label=name)
+            for name, pattern, standalone in [
+                ("standalone NVDLA", "simba_nvdla", True),
+                ("Simba (NVDLA)", "simba_nvdla", False),
+                ("Simba (Shi-diannao)", "simba_shi", False),
+                ("Het-CB", "het_cb", False),
+                ("Het-Sides", "het_sides", False),
+                ("Het-Cross", "het_cross", False),
+            ]]
+    results = {r.job.name: r.outcome for r in run_portfolio(jobs)}
 
     base = results["standalone NVDLA"].edp
     print(f"{'config':22s} {'latency':>10s} {'energy':>10s} "

@@ -1,0 +1,449 @@
+"""Vectorized candidate-tensor search engine unifying SCHED / EA / anneal.
+
+SCAR's hot path is window combination: pick one scored placement candidate
+per model subject to exclusive chiplet occupancy.  The seed implementation
+walked Python lists of per-candidate bitmasks one at a time; this module
+re-expresses the whole combination stack over padded numpy tensors so every
+search algorithm evaluates candidates in batched passes:
+
+* ``CandidateTensors`` packs a window's per-model ``ModelCandidateSet`` list
+  into ``[M, N, W]`` uint64 occupancy-mask words plus ``[M, N]`` latency /
+  energy tables (``W = ceil(n_chiplets / 64)`` words, so packages beyond 64
+  chiplets — e.g. 16x16 pods — keep exact masks).
+* ``BeamEngine`` is a fully vectorized beam search: beam x candidate
+  disjointness via one broadcast ``mask & masks == 0`` pass, stable top-k via
+  ``argsort``.  It reproduces the reference Python loop *bit-identically*
+  (same expansion budget accounting, same stable tie-breaking), verified by
+  ``tests/test_engine.py`` against ``reference_combine``.
+* ``EvolutionaryEngine`` keeps the paper's (mu + lambda) EA trajectory (same
+  RNG call sequence) but evaluates population fitness and overlap penalty in
+  one ``batched_fitness`` pass — no per-row Python ``_fitness`` calls.
+* ``AnnealEngine`` runs vectorized parallel simulated-annealing chains over
+  the same tensors (beyond-paper; selected with ``SearchConfig.algo =
+  "anneal"``).
+
+All engines satisfy the ``SearchEngine`` protocol and return the same
+``WindowSearchResult`` the scheduler consumed before, so ``scheduler.py``,
+``sched.py``, ``search.py`` and ``refine.py`` all route through here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import numpy as np
+
+from .chiplet import MCM
+from .cost import ModelWindowPlan, WindowPlan, WindowResult, evaluate_window
+from .maestro import CostDB
+
+_MASK64 = (1 << 64) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCandidateSet:
+    """Scored placement candidates of one model in one window.
+
+    Candidates are sorted by (tier, score) at build time: tier 0 are
+    scheduling-tree-rooted paths (DRAM ports / locality anchors), tier 1 the
+    unconstrained fallback roots consulted only when tier 0 is fully blocked
+    by exclusive occupancy.
+    """
+
+    model_idx: int
+    start: int
+    end: int
+    seg_ends_abs: list[tuple[int, ...]]     # per candidate
+    paths: list[tuple[int, ...]]
+    masks: list[int]
+    lat: np.ndarray
+    energy: np.ndarray
+    keep: int = 64                           # preferred expansion width
+    mask_words: np.ndarray | None = None     # [N, W] uint64 (lazy if None)
+
+    def words(self, n_words: int) -> np.ndarray:
+        """Packed occupancy words, computed at build time or on demand."""
+        mw = self.mask_words
+        if mw is None or mw.shape[1] < n_words:
+            mw = _pack_masks(self.masks, n_words)
+            object.__setattr__(self, "mask_words", mw)
+        return mw
+
+
+@dataclasses.dataclass
+class WindowSearchResult:
+    plan: WindowPlan
+    result: WindowResult
+    explored: list[tuple[float, float]]   # (lat, energy) cloud for Pareto
+
+
+def _pack_masks(masks: list[int], n_words: int) -> np.ndarray:
+    """Python-int occupancy masks -> [N, W] uint64 words."""
+    out = np.empty((len(masks), n_words), dtype=np.uint64)
+    for w in range(n_words):
+        shift = 64 * w
+        out[:, w] = np.array([(m >> shift) & _MASK64 for m in masks],
+                             dtype=np.uint64)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateTensors:
+    """A window's candidate sets as padded tensors (the engine currency).
+
+    ``masks``: [M, N_max, W] uint64 occupancy words (padding = all ones so a
+    padded candidate conflicts with everything).
+    ``lat``/``energy``: [M, N_max] float64 (+inf padding keeps padded rows
+    out of any argmin).  ``sizes``: [M] true candidate counts.
+    """
+
+    sets: tuple[ModelCandidateSet, ...]
+    masks: np.ndarray
+    lat: np.ndarray
+    energy: np.ndarray
+    sizes: np.ndarray
+    n_words: int
+
+    @classmethod
+    def from_sets(cls, sets: list[ModelCandidateSet],
+                  n_chiplets: int) -> "CandidateTensors":
+        n_words = max(1, (n_chiplets + 63) // 64)
+        m_models = len(sets)
+        sizes = np.array([len(cs.paths) for cs in sets], dtype=np.int64)
+        n_max = int(sizes.max()) if m_models else 0
+        masks = np.full((m_models, n_max, n_words), _MASK64, dtype=np.uint64)
+        lat = np.full((m_models, n_max), np.inf)
+        energy = np.full((m_models, n_max), np.inf)
+        for m, cs in enumerate(sets):
+            n = len(cs.paths)
+            masks[m, :n] = cs.words(n_words)
+            lat[m, :n] = cs.lat
+            energy[m, :n] = cs.energy
+        return cls(sets=tuple(sets), masks=masks, lat=lat, energy=energy,
+                   sizes=sizes, n_words=n_words)
+
+
+def metric_score(lat, energy, metric: str):
+    """Scalar or vectorized schedule metric (edp is the default)."""
+    if metric == "latency":
+        return lat
+    if metric == "energy":
+        return energy
+    return lat * energy
+
+
+def batched_fitness(ct: CandidateTensors, picks: np.ndarray, metric: str
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Population fitness in one batched pass.
+
+    ``picks``: [P, M] candidate index per model.  Returns ``(fitness, lmax,
+    esum, overlap)``, each [P].  Accumulates across the model axis in order
+    so floats match the scalar reference (``search._fitness``) bit-for-bit.
+    """
+    n_pop = picks.shape[0]
+    lmax = np.zeros(n_pop)
+    esum = np.zeros(n_pop)
+    overlap = np.zeros(n_pop, dtype=np.int64)
+    occ = np.zeros((n_pop, ct.n_words), dtype=np.uint64)
+    for m in range(len(ct.sets)):
+        idx = picks[:, m]
+        mw = ct.masks[m][idx]                                    # [P, W]
+        overlap += np.bitwise_count(occ & mw).sum(axis=1).astype(np.int64)
+        occ |= mw
+        lmax = np.maximum(lmax, ct.lat[m][idx])
+        esum = esum + ct.energy[m][idx]
+    base = metric_score(lmax, esum, metric)
+    return base * (1.0 + 10.0 * overlap), lmax, esum, overlap
+
+
+def _plans_from_picks(sets, picks) -> WindowPlan:
+    plans = []
+    for cs, ci in zip(sets, picks):
+        ci = int(ci)
+        plans.append(ModelWindowPlan(
+            model_idx=cs.model_idx, start=cs.start, end=cs.end,
+            seg_ends=cs.seg_ends_abs[ci], chiplets=cs.paths[ci],
+            pipelined=True))
+    return WindowPlan(plans=tuple(sorted(plans, key=lambda p: p.model_idx)))
+
+
+class SearchEngine(Protocol):
+    """One window-combination solver: pick one candidate per model."""
+
+    def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
+                prev_end: dict[int, int],
+                metric: str = "edp") -> WindowSearchResult: ...
+
+
+# ---------------------------------------------------------------------------
+# Beam search
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BeamEngine:
+    """Vectorized beam search over disjoint per-model path combinations.
+
+    Per model stage, disjointness of every (beam item, candidate) pair is one
+    broadcast AND over the packed mask words; the reference loop's per-item
+    ``keep`` width and the global expansion budget are reproduced with
+    cumulative-sum bookkeeping so results stay bit-identical to
+    ``reference_combine``.
+    """
+
+    beam: int = 64
+    max_expansions: int = 20000
+
+    def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
+                prev_end: dict[int, int],
+                metric: str = "edp") -> WindowSearchResult:
+        # order models by compute weight (largest first: hardest to place)
+        sets = sorted(sets, key=lambda s: -float(np.min(s.lat)))
+        n_words = max(1, (mcm.n_chiplets + 63) // 64)
+
+        b_mask = np.zeros((1, n_words), dtype=np.uint64)
+        b_lat = np.zeros(1)
+        b_energy = np.zeros(1)
+        b_picks = np.zeros((1, 0), dtype=np.int64)
+        explored: list[tuple[float, float]] = []
+        expansions = 0
+        for cs in sets:
+            n_cand = len(cs.paths)
+            cand_masks = cs.words(n_words)                        # [N, W]
+            if n_words == 1:
+                disjoint = (b_mask[:, 0, None]
+                            & cand_masks[None, :, 0]) == 0        # [B, N]
+            else:
+                disjoint = ((b_mask[:, None, :]
+                             & cand_masks[None, :, :]) == 0).all(axis=-1)
+            # per-beam-item expansion width (candidates are (tier, score)
+            # sorted, so "first keep disjoint" == "best keep disjoint")
+            if cs.keep < n_cand:
+                rank = np.add.accumulate(disjoint, axis=1, dtype=np.int32)
+                sel = disjoint & (rank <= cs.keep)
+            else:
+                sel = disjoint
+            total = int(np.count_nonzero(sel))
+            if total == 0:
+                raise RuntimeError(
+                    f"no disjoint placement for model {cs.model_idx} even "
+                    f"after scanning all {n_cand} candidates; "
+                    f"increase path_cap or reduce provisioned nodes")
+            if expansions + total > self.max_expansions:
+                # global expansion budget, row-major acceptance order; the
+                # first acceptance of a stage always goes through
+                flat_sel = sel.ravel()
+                before = np.cumsum(flat_sel) - flat_sel
+                okf = flat_sel & ((expansions + before < self.max_expansions)
+                                  | (before == 0))
+                sel = okf.reshape(sel.shape)
+                total = int(np.count_nonzero(sel))
+            expansions += total
+            rows, cand_idx = np.nonzero(sel)
+            new_lat = np.maximum(b_lat[rows], cs.lat[cand_idx])
+            new_energy = b_energy[rows] + cs.energy[cand_idx]
+            order = np.argsort(metric_score(new_lat, new_energy, metric),
+                               kind="stable")[:self.beam]
+            rows, cand_idx = rows[order], cand_idx[order]
+            b_mask = b_mask[rows] | cand_masks[cand_idx]
+            b_lat, b_energy = new_lat[order], new_energy[order]
+            b_picks = np.concatenate(
+                [b_picks[rows], cand_idx[:, None]], axis=1)
+            explored.extend(zip(b_lat.tolist(), b_energy.tolist()))
+
+        plan = _plans_from_picks(sets, b_picks[0])
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        return WindowSearchResult(plan=plan, result=result, explored=explored)
+
+
+def reference_combine(db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
+                      prev_end: dict[int, int], metric: str = "edp",
+                      beam: int = 64,
+                      max_expansions: int = 20000) -> WindowSearchResult:
+    """Reference Python beam search (the seed implementation).
+
+    Kept as the oracle for ``BeamEngine`` parity tests and as the baseline
+    for ``bench_sched_throughput``; not used on the scheduling hot path.
+    """
+    sets = sorted(sets, key=lambda s: -float(np.min(s.lat)))
+    # beam items: (mask, lat_max, energy_sum, [choice indices])
+    items: list[tuple[int, float, float, list[int]]] = [(0, 0.0, 0.0, [])]
+    explored: list[tuple[float, float]] = []
+    expansions = 0
+    for cs in sets:
+        nxt: list[tuple[int, float, float, list[int]]] = []
+        for mask, lmax, esum, picks in items:
+            found = 0
+            for ci in range(len(cs.paths)):
+                if (expansions >= max_expansions or found >= cs.keep) and nxt:
+                    break
+                if mask & cs.masks[ci]:
+                    continue
+                expansions += 1
+                found += 1
+                nl = max(lmax, float(cs.lat[ci]))
+                ne = esum + float(cs.energy[ci])
+                nxt.append((mask | cs.masks[ci], nl, ne, picks + [ci]))
+        if not nxt:
+            raise RuntimeError(
+                f"no disjoint placement for model {cs.model_idx} even after "
+                f"scanning all {len(cs.paths)} candidates; "
+                f"increase path_cap or reduce provisioned nodes")
+        nxt.sort(key=lambda it: metric_score(it[1], it[2], metric))
+        explored.extend((l, e) for _, l, e, _ in nxt[:beam])
+        items = nxt[:beam]
+
+    plan = _plans_from_picks(sets, items[0][3])
+    result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+    return WindowSearchResult(plan=plan, result=result, explored=explored)
+
+
+# ---------------------------------------------------------------------------
+# Evolutionary search
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EvolutionaryEngine:
+    """(mu + lambda) EA with uniform crossover and overlap-penalty fitness.
+
+    The RNG call sequence matches the paper-faithful seed implementation, so
+    seeded runs reproduce its trajectory exactly; the whole population is
+    scored per generation with one ``batched_fitness`` pass.
+    """
+
+    population: int = 10
+    generations: int = 4
+    mutation_rate: float = 0.3
+    seed: int = 0
+
+    def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
+                prev_end: dict[int, int],
+                metric: str = "edp") -> WindowSearchResult:
+        rng = np.random.default_rng(self.seed)
+        ct = CandidateTensors.from_sets(sets, mcm.n_chiplets)
+        n_models = len(sets)
+        sizes = np.array([len(cs.paths) for cs in sets])
+        pop = np.stack([rng.integers(0, sizes)
+                        for _ in range(self.population)])
+        pop[0] = 0  # seed with per-model greedy best
+        explored: list[tuple[float, float]] = []
+
+        fit, lmax, esum, _ = batched_fitness(ct, pop, metric)
+        for _ in range(self.generations):
+            children = []
+            for _ in range(self.population):
+                i, j = rng.integers(0, self.population, size=2)
+                a = pop[i] if fit[i] < fit[j] else pop[j]
+                k, l = rng.integers(0, self.population, size=2)
+                b = pop[k] if fit[k] < fit[l] else pop[l]
+                xover = rng.random(n_models) < 0.5
+                child = np.where(xover, a, b)
+                mut = rng.random(n_models) < self.mutation_rate
+                child = np.where(mut, rng.integers(0, sizes), child)
+                children.append(child)
+            cpop = np.stack(children)
+            cfit, clmax, cesum, _ = batched_fitness(ct, cpop, metric)
+            allp = np.concatenate([pop, cpop])
+            allf = np.concatenate([fit, cfit])
+            order = np.argsort(allf, kind="stable")[:self.population]
+            pop, fit = allp[order], allf[order]
+            lmax = np.concatenate([lmax, clmax])[order]
+            esum = np.concatenate([esum, cesum])[order]
+            explored.extend(zip(lmax.tolist(), esum.tolist()))
+
+        best = pop[0]
+        _, _, _, overlap = batched_fitness(ct, best[None, :], metric)
+        if int(overlap[0]) > 0:
+            # repair residual overlap greedily via the beam combiner
+            res = BeamEngine().combine(db, mcm, sets, prev_end, metric=metric)
+            res.explored.extend(explored)
+            return res
+
+        plan = _plans_from_picks(sets, best)
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        return WindowSearchResult(plan=plan, result=result, explored=explored)
+
+
+# ---------------------------------------------------------------------------
+# Simulated annealing (beyond-paper)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AnnealEngine:
+    """Parallel simulated-annealing chains over the candidate tensors.
+
+    ``chains`` independent walkers mutate one model's pick per step; all
+    proposals are scored with a single ``batched_fitness`` call per step.
+    Chain 0 starts from the per-model greedy best, the rest from random
+    picks.  Any residual occupancy overlap is repaired with the beam engine,
+    so the result is always a valid window plan.
+    """
+
+    iters: int = 200
+    chains: int = 24
+    temperature: float = 0.05
+    seed: int = 0
+
+    def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
+                prev_end: dict[int, int],
+                metric: str = "edp") -> WindowSearchResult:
+        rng = np.random.default_rng(self.seed)
+        ct = CandidateTensors.from_sets(sets, mcm.n_chiplets)
+        n_models = len(sets)
+        n_chains = self.chains
+        picks = np.stack([rng.integers(0, ct.sizes)
+                          for _ in range(n_chains)])
+        picks[0] = 0
+        fit, lmax, esum, _ = batched_fitness(ct, picks, metric)
+        best_picks, best_fit = picks.copy(), fit.copy()
+        explored: list[tuple[float, float]] = list(
+            zip(lmax.tolist(), esum.tolist()))
+        rows = np.arange(n_chains)
+        for it in range(self.iters):
+            t = self.temperature * (1.0 - it / max(1, self.iters))
+            col = rng.integers(0, n_models, size=n_chains)
+            new_val = rng.integers(0, ct.sizes[col])
+            prop = picks.copy()
+            prop[rows, col] = new_val
+            pfit, plm, pes, _ = batched_fitness(ct, prop, metric)
+            with np.errstate(over="ignore"):
+                accept = (pfit < fit) | (
+                    rng.random(n_chains)
+                    < np.exp(-(pfit / fit - 1.0) / max(t, 1e-9)))
+            picks = np.where(accept[:, None], prop, picks)
+            fit = np.where(accept, pfit, fit)
+            improved = fit < best_fit
+            best_picks = np.where(improved[:, None], picks, best_picks)
+            best_fit = np.where(improved, fit, best_fit)
+            explored.extend(zip(plm[accept].tolist(), pes[accept].tolist()))
+
+        best = best_picks[int(np.argmin(best_fit))]
+        _, _, _, overlap = batched_fitness(ct, best[None, :], metric)
+        if int(overlap[0]) > 0:
+            res = BeamEngine().combine(db, mcm, sets, prev_end, metric=metric)
+            res.explored.extend(explored)
+            return res
+        plan = _plans_from_picks(sets, best)
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        return WindowSearchResult(plan=plan, result=result, explored=explored)
+
+
+def get_engine(cfg, seed: int = 0) -> SearchEngine:
+    """Engine factory keyed on ``SearchConfig.algo``.
+
+    ``seed`` is the per-window seed (``cfg.seed + window_index``) so
+    stochastic engines decorrelate across windows like the seed code did.
+    """
+    algo = cfg.algo
+    if algo in ("brute", "beam"):
+        return BeamEngine(beam=cfg.beam)
+    if algo == "evolutionary":
+        return EvolutionaryEngine(population=cfg.ea_population,
+                                  generations=cfg.ea_generations,
+                                  seed=seed)
+    if algo == "anneal":
+        return AnnealEngine(iters=cfg.anneal_iters,
+                            chains=cfg.anneal_chains,
+                            temperature=cfg.anneal_temperature,
+                            seed=seed)
+    raise KeyError(f"unknown search algo {algo!r}; "
+                   "have brute|beam|evolutionary|anneal")

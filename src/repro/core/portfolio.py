@@ -1,0 +1,135 @@
+"""Portfolio runner: multi-scenario sweeps over scenario x MCM x metric.
+
+Benchmarks, examples and future scaling studies all need the same outer
+loop — run the SCAR pipeline across a grid of (scenario, MCM pattern/size,
+optimisation metric, search config) points.  This module makes that loop a
+first-class, process-parallel subsystem instead of a hand-rolled ``for`` in
+every caller:
+
+* ``SweepJob`` is one picklable grid point (pattern name + mesh size + cfg
+  overrides, never live objects, so jobs ship cheaply to workers).
+* ``run_portfolio`` executes a job list inline (``processes<=1``) or on a
+  spawn-based process pool; each worker rebuilds its own ``CostDB`` cache.
+* ``sweep_grid`` builds the full cross product for you.
+
+Results come back as ``SweepResult`` records carrying the full
+``ScheduleOutcome`` plus wall time, in the same order as the submitted jobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import Optional
+
+from .scenarios import get_scenario
+from .scheduler import ScheduleOutcome, SearchConfig, run_config
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepJob:
+    """One (scenario, MCM, metric) pipeline run; picklable by construction."""
+
+    scenario: str
+    pattern: str
+    rows: int = 3
+    cols: int = 3
+    n_pe: int = 4096
+    standalone: bool = False
+    cfg: Optional[SearchConfig] = None
+    label: Optional[str] = None          # caller-facing name for the point
+
+    @property
+    def name(self) -> str:
+        if self.label is not None:
+            return self.label
+        tag = "standalone_" if self.standalone else ""
+        metric = (self.cfg or SearchConfig()).metric
+        return (f"{self.scenario}/{tag}{self.pattern}"
+                f"_{self.rows}x{self.cols}/{metric}")
+
+
+@dataclasses.dataclass
+class SweepResult:
+    job: SweepJob
+    outcome: ScheduleOutcome
+    wall_s: float
+
+
+def _run_job(job: SweepJob) -> SweepResult:
+    t0 = time.time()
+    sc = get_scenario(job.scenario)
+    outcome = run_config(sc, job.pattern, rows=job.rows, cols=job.cols,
+                         n_pe=job.n_pe, cfg=job.cfg,
+                         standalone=job.standalone)
+    return SweepResult(job=job, outcome=outcome, wall_s=time.time() - t0)
+
+
+def _init_worker(path: list[str]) -> None:
+    # spawn workers re-import ``repro`` from scratch; inherit the parent's
+    # sys.path so PYTHONPATH-less installs (pip install -e .) and source
+    # checkouts (PYTHONPATH=src) both resolve
+    for p in reversed(path):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+
+def default_processes() -> int:
+    """Worker count: $SCAR_PORTFOLIO_PROCS, else min(n_cpu, 8)."""
+    env = os.environ.get("SCAR_PORTFOLIO_PROCS")
+    if env is not None:
+        return max(1, int(env))
+    return max(1, min(os.cpu_count() or 1, 8))
+
+
+def run_portfolio(jobs: list[SweepJob],
+                  processes: Optional[int] = None) -> list[SweepResult]:
+    """Run every job; results align with the input order.
+
+    ``processes``: None -> ``default_processes()``; <=1 -> inline in this
+    process (no pool, easiest to debug); otherwise a spawn-based pool, which
+    sidesteps fork-safety issues with an already-initialised JAX runtime in
+    the parent.
+    """
+    if processes is None:
+        processes = default_processes()
+    processes = min(processes, len(jobs)) if jobs else 1
+    if processes <= 1:
+        return [_run_job(j) for j in jobs]
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    with ProcessPoolExecutor(max_workers=processes, mp_context=ctx,
+                             initializer=_init_worker,
+                             initargs=(list(sys.path),)) as pool:
+        return list(pool.map(_run_job, jobs))
+
+
+def sweep_grid(scenarios: list[str], patterns: list[str],
+               metrics: list[str] = ("edp",), rows: int = 3, cols: int = 3,
+               n_pe: Optional[int] = None,
+               standalone_patterns: list[str] = (),
+               **cfg_kw) -> list[SweepJob]:
+    """Cross product scenario x pattern x metric -> job list.
+
+    ``n_pe=None`` follows the paper's sizing: 4096 PEs for datacenter
+    scenarios, 256 for AR/VR.  ``standalone_patterns`` adds the
+    no-pipelining baseline runs for the named patterns.
+    """
+    jobs = []
+    for scn in scenarios:
+        npe = n_pe if n_pe is not None else (
+            4096 if scn.startswith("dc") else 256)
+        for metric in metrics:
+            for pat in standalone_patterns:
+                jobs.append(SweepJob(scenario=scn, pattern=pat, rows=rows,
+                                     cols=cols, n_pe=npe, standalone=True,
+                                     cfg=SearchConfig(metric=metric,
+                                                      **cfg_kw)))
+            for pat in patterns:
+                jobs.append(SweepJob(scenario=scn, pattern=pat, rows=rows,
+                                     cols=cols, n_pe=npe,
+                                     cfg=SearchConfig(metric=metric,
+                                                      **cfg_kw)))
+    return jobs

@@ -8,24 +8,31 @@ schedule and applies accept-if-better local moves over the *whole* schedule
 (cross-window effects included via data-locality anchors):
 
   * ``boundary``: shift one model's segment boundary by one layer;
-  * ``relocate``: move one segment of one model to any free chiplet
-    (drops the contiguity heuristic; comm costs follow the hop metric);
+  * ``relocate``: move one segment of one model to the best free chiplet —
+    all free targets are scored in one ``eval_model_candidates`` batched
+    pass over the candidate tensors (drops the contiguity heuristic; comm
+    costs follow the hop metric);
   * ``rewindow``: move one layer between a model's adjacent windows
     (undoes greedy-packing decisions the per-window search can't).
 
 Simulated-annealing acceptance with a small temperature escapes per-window
-local minima; the result is validated against Theorems 1-2 on every accept.
+local minima; every accept is validated against Theorems 1-2.  Schedule
+metrics are maintained *incrementally*: a move touching window ``w`` only
+re-evaluates ``w`` plus the windows whose data-locality anchor it feeds,
+instead of the whole schedule.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import numpy as np
 
 from .chiplet import MCM
-from .cost import ModelWindowPlan, WindowPlan, evaluate_schedule
+from .cost import (BatchedModelCandidates, ModelWindowPlan, WindowPlan,
+                   WindowResult, eval_model_candidates, evaluate_schedule,
+                   evaluate_window)
+from .engine import metric_score
 from .maestro import CostDB
 from .scheduler import ScheduleOutcome, get_cost_db
 
@@ -44,7 +51,70 @@ def _to_plans(windows: list[list[ModelWindowPlan]]) -> list[WindowPlan]:
             for ps in windows if ps]
 
 
-def _try_boundary(rng, windows, db):
+@dataclasses.dataclass
+class _Move:
+    windows: list[list[ModelWindowPlan]]
+    touched: tuple[int, ...]                 # window indices with new plans
+
+
+class _IncrementalEvaluator:
+    """Schedule metrics with per-move incremental window re-evaluation.
+
+    A window's result depends only on its own plans and the data-locality
+    anchors (``prev_end``) of each of its models, i.e. the *previous* window
+    containing that model.  Changing window ``w`` therefore invalidates only
+    ``w`` itself and, per model in ``w``, the next window containing that
+    model — everything else is served from cache.  Totals are recomputed as
+    the same ordered ``float(sum(...))`` as ``evaluate_schedule``, so the
+    annealer sees bit-identical metrics at a fraction of the cost.
+    """
+
+    def __init__(self, db: CostDB, mcm: MCM,
+                 windows: list[list[ModelWindowPlan]]):
+        self.db, self.mcm = db, mcm
+        self.results: list[WindowResult] = []
+        prev_end: dict[int, int] = {}
+        for ps in windows:
+            res = evaluate_window(db, mcm, _to_plans([ps])[0], prev_end,
+                                  validate=True)
+            self.results.append(res)
+            prev_end = dict(prev_end)
+            prev_end.update(res.end_chiplet)
+
+    def _affected(self, windows, touched: tuple[int, ...]) -> list[int]:
+        aff = set(touched)
+        for w in touched:
+            for m in {p.model_idx for p in windows[w]}:
+                for w2 in range(w + 1, len(windows)):
+                    if any(p.model_idx == m for p in windows[w2]):
+                        aff.add(w2)
+                        break
+        return sorted(aff)
+
+    def prev_end_at(self, w: int, results=None) -> dict[int, int]:
+        results = self.results if results is None else results
+        pe: dict[int, int] = {}
+        for i in range(w):
+            pe.update(results[i].end_chiplet)
+        return pe
+
+    def propose(self, mv: _Move) -> tuple[list[WindowResult], float, float]:
+        """Evaluate a move; raises ValueError if any touched plan is invalid."""
+        results = list(self.results)
+        for w in self._affected(mv.windows, mv.touched):
+            plan = _to_plans([mv.windows[w]])[0]
+            results[w] = evaluate_window(
+                self.db, self.mcm, plan, self.prev_end_at(w, results),
+                validate=True)
+        lat = float(sum(r.latency for r in results))
+        energy = float(sum(r.energy for r in results))
+        return results, lat, energy
+
+    def accept(self, results: list[WindowResult]) -> None:
+        self.results = results
+
+
+def _try_boundary(rng, windows, ctx) -> _Move | None:
     w = rng.integers(len(windows))
     ps = windows[w]
     if not ps:
@@ -62,11 +132,17 @@ def _try_boundary(rng, windows, db):
         return None
     ends[si] = new_end
     new = dataclasses.replace(p, seg_ends=tuple(ends))
-    out = _clone_windows_replace(windows, w, i, new)
-    return out
+    return _Move(_clone_windows_replace(windows, w, i, new), (int(w),))
 
 
-def _try_relocate(rng, windows, db, mcm):
+def _try_relocate(rng, windows, ctx) -> _Move | None:
+    """Move one segment to the best free chiplet (batched screening).
+
+    Every free target is scored in one vectorized ``eval_model_candidates``
+    pass; the winner becomes the proposal, which the annealer still accepts
+    or rejects on the exact schedule-level metric.
+    """
+    db, mcm, ev, metric = ctx
     w = int(rng.integers(len(windows)))
     ps = windows[w]
     if not ps:
@@ -78,13 +154,44 @@ def _try_relocate(rng, windows, db, mcm):
     if not free:
         return None
     si = int(rng.integers(p.n_segments))
-    chips = list(p.chiplets)
-    chips[si] = int(rng.choice(free))
-    new = dataclasses.replace(p, chiplets=tuple(chips))
-    return _clone_windows_replace(windows, w, i, new)
+    if len(free) <= 4:
+        # tiny meshes: batched screening costs more than it saves — keep the
+        # seed's random-walk proposal
+        new_chips = list(p.chiplets)
+        new_chips[si] = int(rng.choice(free))
+        new = dataclasses.replace(p, chiplets=tuple(new_chips))
+        return _Move(_clone_windows_replace(windows, w, i, new), (w,))
+
+    n_free = len(free)
+    lw = p.end - p.start
+    seg_id_row = np.zeros(lw, dtype=np.int64)
+    prev = p.start
+    for s_idx, e_abs in enumerate(p.seg_ends):
+        seg_id_row[prev - p.start:e_abs - p.start] = s_idx
+        prev = e_abs
+    chips = np.tile(np.asarray(p.chiplets, dtype=np.int64), (n_free, 1))
+    chips[:, si] = free
+    cand = BatchedModelCandidates(
+        model_idx=p.model_idx, start=p.start, end=p.end,
+        seg_id=np.tile(seg_id_row, (n_free, 1)), chiplets=chips,
+        n_segs=np.full(n_free, p.n_segments, dtype=np.int64))
+    lat, energy = eval_model_candidates(
+        db, mcm, cand, n_active=len(ps),
+        prev_end=ev.prev_end_at(w).get(p.model_idx),
+        pipelined=p.pipelined)
+    # sample among the screened top-k: pure argmin starves the annealer of
+    # proposal diversity and gets stuck re-proposing one target
+    score = metric_score(lat, energy, metric)
+    k = min(4, n_free)
+    top = np.argpartition(score, k - 1)[:k]
+    pick = int(top[int(rng.integers(k))])
+    new_chips = list(p.chiplets)
+    new_chips[si] = free[pick]
+    new = dataclasses.replace(p, chiplets=tuple(new_chips))
+    return _Move(_clone_windows_replace(windows, w, i, new), (w,))
 
 
-def _try_rewindow(rng, windows, db):
+def _try_rewindow(rng, windows, ctx) -> _Move | None:
     """Move one boundary layer between a model's adjacent windows."""
     w = int(rng.integers(len(windows)))
     ps = windows[w]
@@ -118,7 +225,7 @@ def _try_rewindow(rng, windows, db):
     out = _clone_windows(windows)
     out[w][i] = new_p
     out[w2][j] = new_q
-    return out
+    return _Move(out, (w, w2))
 
 
 def _shrink_tail(p: ModelWindowPlan) -> ModelWindowPlan:
@@ -167,35 +274,35 @@ def refine(sc, mcm: MCM, outcome: ScheduleOutcome, metric: str = "edp",
     windows = _from_window_plans([w.plan for w in outcome.windows])
     if not windows:
         return outcome
-    cur_plans = _to_plans(windows)
-    cur = evaluate_schedule(db, mcm, cur_plans, validate=True)
-    best_windows, best = windows, cur
+    ev = _IncrementalEvaluator(db, mcm, windows)
+    ctx = (db, mcm, ev, metric)
+    cur_m = metric_score(float(sum(r.latency for r in ev.results)),
+                         float(sum(r.energy for r in ev.results)), metric)
+    best_windows, best_m = windows, cur_m
     moves = [_try_boundary, _try_relocate, _try_rewindow]
     for it in range(iters):
-        mv = moves[int(rng.integers(len(moves)))]
+        mv_fn = moves[int(rng.integers(len(moves)))]
         try:
-            cand = (mv(rng, windows, db) if mv is not _try_relocate
-                    else mv(rng, windows, db, mcm))
-            if cand is None:
+            mv = mv_fn(rng, windows, ctx)
+            if mv is None:
                 continue
-            plans = _to_plans(cand)
-            res = evaluate_schedule(db, mcm, plans, validate=True)
+            results, lat, energy = ev.propose(mv)
         except (ValueError, IndexError):
             continue
         t = temperature * (1.0 - it / iters)
-        cur_m, new_m = cur.metric(metric), res.metric(metric)
+        new_m = metric_score(lat, energy, metric)
         accept = new_m < cur_m or (
             t > 0 and rng.random() < math.exp(-(new_m / cur_m - 1.0)
                                               / max(t, 1e-9)))
         if accept:
-            windows, cur = cand, res
-            if res.metric(metric) < best.metric(metric):
-                best_windows, best = cand, res
+            windows, cur_m = mv.windows, new_m
+            ev.accept(results)
+            if new_m < best_m:
+                best_windows, best_m = mv.windows, new_m
     final_plans = _to_plans(best_windows)
     final = evaluate_schedule(db, mcm, final_plans, validate=True)
     wrs = []
-    from .sched import WindowSearchResult
-    from .cost import evaluate_window
+    from .engine import WindowSearchResult
     prev_end: dict[int, int] = {}
     for wp in final_plans:
         res = evaluate_window(db, mcm, wp, prev_end)

@@ -6,20 +6,26 @@ with a direct DRAM interface (left/right package columns) or (ii) the model's
 ending chiplet from the previous window (cross-window data locality).  A
 constrained DFS enumerates self-avoiding paths (one chiplet per segment,
 exclusive occupancy), per-model candidates are scored with the vectorised
-cost model, and a beam search combines disjoint per-model paths into the
-window schedule.
+cost model, and the vectorized beam engine (``engine.BeamEngine``) combines
+disjoint per-model paths into the window schedule.
+
+This module owns candidate *construction*; the combination search lives in
+``engine.py`` (``ModelCandidateSet`` / ``WindowSearchResult`` are re-exported
+here for backward compatibility).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import numpy as np
 
 from .chiplet import MCM
-from .cost import (BatchedModelCandidates, ModelWindowPlan, WindowPlan,
-                   WindowResult, eval_model_candidates, evaluate_window)
+from .cost import BatchedModelCandidates, eval_model_candidates
+from .engine import BeamEngine, ModelCandidateSet, WindowSearchResult
 from .maestro import CostDB
+
+__all__ = ["enumerate_paths", "build_candidates", "combine_candidates",
+           "ModelCandidateSet", "WindowSearchResult"]
 
 
 def enumerate_paths(mcm: MCM, length: int, starts: list[int],
@@ -60,21 +66,6 @@ def _path_mask(path: tuple[int, ...]) -> int:
     for c in path:
         m |= 1 << c
     return m
-
-
-@dataclasses.dataclass(frozen=True)
-class ModelCandidateSet:
-    """Scored placement candidates of one model in one window."""
-
-    model_idx: int
-    start: int
-    end: int
-    seg_ends_abs: list[tuple[int, ...]]     # per candidate
-    paths: list[tuple[int, ...]]
-    masks: list[int]
-    lat: np.ndarray
-    energy: np.ndarray
-    keep: int = 64                           # preferred expansion width
 
 
 def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
@@ -147,19 +138,19 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
     # first ``keep`` per beam item and falls back deeper (eventually into the
     # unconstrained-root tier) only when blocked by exclusive occupancy.
     order = np.lexsort((score, np.asarray(tiers)))
+    n_words = max(1, (mcm.n_chiplets + 63) // 64)
+    words = np.zeros((B, n_words), dtype=np.uint64)
+    for si in range(S):
+        c = chips[:, si]
+        v = c >= 0
+        words[v, c[v] // 64] |= np.uint64(1) << (c[v] % 64).astype(np.uint64)
     return ModelCandidateSet(
         model_idx=model_idx, start=start, end=end,
         seg_ends_abs=[all_seg_ends[i] for i in order],
         paths=[all_paths[i] for i in order],
         masks=[_path_mask(all_paths[i]) for i in order],
-        lat=lat[order], energy=energy[order], keep=keep)
-
-
-@dataclasses.dataclass
-class WindowSearchResult:
-    plan: WindowPlan
-    result: WindowResult
-    explored: list[tuple[float, float]]   # (lat, energy) cloud for Pareto
+        lat=lat[order], energy=energy[order], keep=keep,
+        mask_words=words[order])
 
 
 def combine_candidates(db: CostDB, mcm: MCM,
@@ -168,53 +159,11 @@ def combine_candidates(db: CostDB, mcm: MCM,
                        metric: str = "edp",
                        beam: int = 64,
                        max_expansions: int = 20000) -> WindowSearchResult:
-    """Beam search over disjoint per-model path combinations."""
-    # order models by compute weight (largest first: hardest to place)
-    sets = sorted(sets, key=lambda s: -float(np.min(s.lat)))
-    # beam items: (mask, lat_max, energy_sum, [choice indices])
-    items: list[tuple[int, float, float, list[int]]] = [(0, 0.0, 0.0, [])]
-    explored: list[tuple[float, float]] = []
-    expansions = 0
-    for cs in sets:
-        nxt: list[tuple[int, float, float, list[int]]] = []
-        for mask, lmax, esum, picks in items:
-            found = 0
-            for ci in range(len(cs.paths)):
-                if (expansions >= max_expansions or found >= cs.keep) and nxt:
-                    break
-                if mask & cs.masks[ci]:
-                    continue
-                expansions += 1
-                found += 1
-                nl = max(lmax, float(cs.lat[ci]))
-                ne = esum + float(cs.energy[ci])
-                nxt.append((mask | cs.masks[ci], nl, ne, picks + [ci]))
-        if not nxt:
-            raise RuntimeError(
-                f"no disjoint placement for model {cs.model_idx} even after "
-                f"scanning all {len(cs.paths)} candidates; "
-                f"increase path_cap or reduce provisioned nodes")
+    """Beam search over disjoint per-model path combinations.
 
-        def key(it):
-            _, l, e, _ = it
-            if metric == "latency":
-                return l
-            if metric == "energy":
-                return e
-            return l * e
-
-        nxt.sort(key=key)
-        explored.extend((l, e) for _, l, e, _ in nxt[:beam])
-        items = nxt[:beam]
-
-    best = items[0]
-    _, _, _, picks = best
-    plans = []
-    for cs, ci in zip(sets, picks):
-        plans.append(ModelWindowPlan(
-            model_idx=cs.model_idx, start=cs.start, end=cs.end,
-            seg_ends=cs.seg_ends_abs[ci], chiplets=cs.paths[ci],
-            pipelined=True))
-    plan = WindowPlan(plans=tuple(sorted(plans, key=lambda p: p.model_idx)))
-    result = evaluate_window(db, mcm, plan, prev_end, validate=True)
-    return WindowSearchResult(plan=plan, result=result, explored=explored)
+    Backward-compatible wrapper around the vectorized ``engine.BeamEngine``
+    (bit-identical results to the original Python loop; see
+    ``engine.reference_combine`` for the oracle).
+    """
+    return BeamEngine(beam=beam, max_expansions=max_expansions).combine(
+        db, mcm, sets, prev_end, metric=metric)

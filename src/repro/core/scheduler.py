@@ -19,10 +19,10 @@ from .chiplet import MCM, PackageParams, make_mcm
 from .cost import (ModelWindowPlan, ScheduleResult, WindowPlan,
                    evaluate_schedule)
 from .maestro import CostDB, build_cost_db
+from .engine import WindowSearchResult, get_engine
 from .reconfig import WindowAssignment, greedy_pack, uniform_pack
 from .provision import provision
-from .sched import WindowSearchResult, build_candidates, combine_candidates
-from .search import evolutionary_combine
+from .sched import build_candidates
 from .segmentation import top_k_segmentations
 from .workload import Scenario
 
@@ -32,7 +32,7 @@ class SearchConfig:
     metric: str = "edp"                 # latency | energy | edp
     n_splits: int = 4                   # paper default (5 windows)
     packing: str = "greedy"             # greedy | uniform (ablation)
-    algo: str = "brute"                 # brute | evolutionary
+    algo: str = "brute"                 # brute|beam | evolutionary | anneal
     seg_top_k: int = 4
     seg_cap: int = 512
     path_cap: int = 128
@@ -41,6 +41,9 @@ class SearchConfig:
     max_nodes_per_model: Optional[int] = 6   # Heuristic 2 user cap
     ea_population: int = 10             # paper Sec. V-A
     ea_generations: int = 4
+    anneal_iters: int = 200             # algo="anneal" knobs (beyond-paper)
+    anneal_chains: int = 24
+    anneal_temperature: float = 0.05
     seed: int = 0
     refine_iters: int = 0               # beyond-paper anneal refinement
 
@@ -73,6 +76,28 @@ def get_cost_db(sc: Scenario, mcm: MCM) -> CostDB:
     return _DB_CACHE[key]
 
 
+def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
+                      ranges: dict[int, tuple[int, int]],
+                      prev_end: dict[int, int]) -> list:
+    """PROV + SEG + candidate construction for one window (the stage feeding
+    the search engine).  Shared by ``schedule``, benchmarks, and tests so
+    they all measure the exact production pipeline."""
+    alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
+                      metric=cfg.metric,
+                      max_nodes_per_model=cfg.max_nodes_per_model)
+    sets = []
+    n_active = len(ranges)
+    for mi, (s, e) in sorted(ranges.items()):
+        segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
+                                   k=cfg.seg_top_k, cap=cfg.seg_cap,
+                                   metric=cfg.metric)
+        sets.append(build_candidates(
+            db, mcm, mi, (s, e), segs, n_active=n_active,
+            prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
+            keep=cfg.keep_per_model, metric=cfg.metric))
+    return sets
+
+
 def schedule(sc: Scenario, mcm: MCM,
              cfg: Optional[SearchConfig] = None) -> ScheduleOutcome:
     """Run the full SCAR pipeline and return the optimised schedule."""
@@ -90,28 +115,9 @@ def schedule(sc: Scenario, mcm: MCM,
     prev_end: dict[int, int] = {}
     explored: list[tuple[float, float]] = []
     for w, ranges in enumerate(wa.ranges):
-        alloc = provision(db, counts, ranges, mcm.n_chiplets,
-                          metric=cfg.metric,
-                          max_nodes_per_model=cfg.max_nodes_per_model)
-        sets = []
-        n_active = len(ranges)
-        for mi, (s, e) in sorted(ranges.items()):
-            segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
-                                       k=cfg.seg_top_k, cap=cfg.seg_cap,
-                                       metric=cfg.metric)
-            sets.append(build_candidates(
-                db, mcm, mi, (s, e), segs, n_active=n_active,
-                prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
-                keep=cfg.keep_per_model, metric=cfg.metric))
-        if cfg.algo == "evolutionary":
-            wr = evolutionary_combine(db, mcm, sets, prev_end,
-                                      metric=cfg.metric,
-                                      population=cfg.ea_population,
-                                      generations=cfg.ea_generations,
-                                      seed=cfg.seed + w)
-        else:
-            wr = combine_candidates(db, mcm, sets, prev_end,
-                                    metric=cfg.metric, beam=cfg.beam)
+        sets = build_window_sets(db, mcm, cfg, ranges, prev_end)
+        engine = get_engine(cfg, seed=cfg.seed + w)
+        wr = engine.combine(db, mcm, sets, prev_end, metric=cfg.metric)
         window_results.append(wr)
         explored.extend(wr.explored)
         prev_end = dict(prev_end)

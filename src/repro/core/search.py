@@ -6,19 +6,27 @@ The paper uses brute force on the 3x3 MCM and an evolutionary algorithm
 segment->chiplet mapping choice.  Per-model candidates are pre-scored
 vectorised (``ModelCandidateSet``); the search picks one candidate per model
 subject to exclusive chiplet occupancy.
+
+The EA itself now lives in ``engine.EvolutionaryEngine`` (population fitness
+and overlap penalty evaluated in one batched tensor pass).  This module keeps
+the backward-compatible ``evolutionary_combine`` entry point and the scalar
+``_fitness`` reference the engine's batched fitness is tested against.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .chiplet import MCM
-from .cost import ModelWindowPlan, WindowPlan, evaluate_window
+from .engine import (EvolutionaryEngine, ModelCandidateSet,
+                     WindowSearchResult)
 from .maestro import CostDB
-from .sched import ModelCandidateSet, WindowSearchResult, combine_candidates
+
+__all__ = ["evolutionary_combine"]
 
 
 def _fitness(sets: list[ModelCandidateSet], picks: np.ndarray,
              metric: str) -> float:
+    """Scalar reference for ``engine.batched_fitness`` (kept for tests)."""
     lmax, esum = 0.0, 0.0
     mask = 0
     overlap = 0
@@ -44,64 +52,12 @@ def evolutionary_combine(db: CostDB, mcm: MCM,
                          population: int = 10, generations: int = 4,
                          mutation_rate: float = 0.3,
                          seed: int = 0) -> WindowSearchResult:
-    """(mu + lambda) EA with uniform crossover and overlap-penalty fitness."""
-    rng = np.random.default_rng(seed)
-    n_models = len(sets)
-    sizes = np.array([len(cs.paths) for cs in sets])
-    pop = np.stack([rng.integers(0, sizes) for _ in range(population)])
-    pop[0] = 0  # seed with per-model greedy best
-    explored: list[tuple[float, float]] = []
+    """(mu + lambda) EA with uniform crossover and overlap-penalty fitness.
 
-    def eval_pop(p):
-        return np.array([_fitness(sets, row, metric) for row in p])
-
-    fit = eval_pop(pop)
-    for _ in range(generations):
-        children = []
-        for _ in range(population):
-            i, j = rng.integers(0, population, size=2)
-            a = pop[i] if fit[i] < fit[j] else pop[j]
-            k, l = rng.integers(0, population, size=2)
-            b = pop[k] if fit[k] < fit[l] else pop[l]
-            xover = rng.random(n_models) < 0.5
-            child = np.where(xover, a, b)
-            mut = rng.random(n_models) < mutation_rate
-            child = np.where(mut, rng.integers(0, sizes), child)
-            children.append(child)
-        cpop = np.stack(children)
-        cfit = eval_pop(cpop)
-        allp = np.concatenate([pop, cpop])
-        allf = np.concatenate([fit, cfit])
-        order = np.argsort(allf, kind="stable")[:population]
-        pop, fit = allp[order], allf[order]
-        for row in pop:
-            lmax = max(float(cs.lat[int(ci)]) for cs, ci in zip(sets, row))
-            esum = sum(float(cs.energy[int(ci)]) for cs, ci in zip(sets, row))
-            explored.append((lmax, esum))
-
-    best = pop[0]
-    if _fitness(sets, best, metric) >= 10.0 * min(fit):
-        pass  # overlap penalty may still be active; fall through to repair
-    # repair any residual overlap greedily via the beam combiner
-    mask = 0
-    ok = True
-    for cs, ci in zip(sets, best):
-        if mask & cs.masks[int(ci)]:
-            ok = False
-            break
-        mask |= cs.masks[int(ci)]
-    if not ok:
-        res = combine_candidates(db, mcm, sets, prev_end, metric=metric)
-        res.explored.extend(explored)
-        return res
-
-    plans = []
-    for cs, ci in zip(sets, best):
-        ci = int(ci)
-        plans.append(ModelWindowPlan(
-            model_idx=cs.model_idx, start=cs.start, end=cs.end,
-            seg_ends=cs.seg_ends_abs[ci], chiplets=cs.paths[ci],
-            pipelined=True))
-    plan = WindowPlan(plans=tuple(sorted(plans, key=lambda p: p.model_idx)))
-    result = evaluate_window(db, mcm, plan, prev_end, validate=True)
-    return WindowSearchResult(plan=plan, result=result, explored=explored)
+    Backward-compatible wrapper around ``engine.EvolutionaryEngine``; an
+    overlapping best individual falls back to a beam-search repair inside the
+    engine.
+    """
+    return EvolutionaryEngine(population=population, generations=generations,
+                              mutation_rate=mutation_rate, seed=seed).combine(
+        db, mcm, sets, prev_end, metric=metric)

@@ -10,19 +10,33 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def mesh_context(mesh: jax.sharding.Mesh):
+    """``jax.set_mesh(mesh)`` where available; on older jax the ``Mesh``
+    resource-env context manager is the equivalent ambient-mesh scope."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def auto_axis_types(n: int) -> dict:
+    """``axis_types`` kwarg for mesh constructors, or {} on jax versions
+    that predate ``jax.sharding.AxisType`` (explicit-sharding rollout)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...],
               axes: tuple[str, ...]) -> jax.sharding.Mesh:
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def make_test_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
@@ -34,4 +48,4 @@ def make_test_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
             model = m
             break
     return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+                         **auto_axis_types(2))

@@ -1,14 +1,12 @@
 """Engine tests: packing (Thm 2), provisioning (Eq 2), segmentation (Thm 1),
-scheduling validity, batched-vs-reference evaluator equivalence."""
+scheduling validity.  Randomised property variants of these invariants live
+in ``test_cost_properties.py`` (hypothesis-gated)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (SearchConfig, get_scenario, make_mcm, run_config,
                         schedule, standalone_schedule)
-from repro.core.cost import (BatchedModelCandidates, ModelWindowPlan,
-                             WindowPlan, eval_model_candidates,
-                             evaluate_window)
+from repro.core.cost import (ModelWindowPlan, WindowPlan, evaluate_window)
 from repro.core.maestro import build_cost_db
 from repro.core.provision import provision
 from repro.core.reconfig import (greedy_pack, uniform_pack,
@@ -96,62 +94,9 @@ def test_provision_proportional_to_share(small):
 
 # ------------------------------ SEG ----------------------------------------
 
-@given(n_layers=st.integers(1, 12), max_segs=st.integers(1, 5))
-@settings(max_examples=50, deadline=None)
-def test_segmentations_are_valid_partitions(n_layers, max_segs):
-    for se in enumerate_segmentations(n_layers, max_segs, cap=512):
-        assert se[-1] == n_layers          # covers the slice (Theorem 1)
-        assert len(se) <= max(1, min(max_segs, n_layers))
-        assert all(b < a for b, a in zip(se, se[1:]))  # strictly increasing
-
-
 def test_segmentation_count_small_case():
     # 4 layers, up to 3 segments: C(3,0)+C(3,1)+C(3,2) = 1+3+3 = 7
     assert len(enumerate_segmentations(4, 3, cap=512)) == 7
-
-
-# ------------------------- batched evaluator --------------------------------
-
-@given(seed=st.integers(0, 10_000))
-@settings(max_examples=30, deadline=None)
-def test_batched_eval_matches_reference(seed):
-    sc = get_scenario("xr10_vr_gaming")
-    mcm = make_mcm("het_cb", n_pe=256)
-    db = build_cost_db(sc, mcm.classes, mcm.pkg)
-    rng = np.random.default_rng(seed)
-    mi = int(rng.integers(0, db.n_models))
-    sl = db.model_slice(mi)
-    Lw = sl.stop - sl.start
-    n_seg = int(rng.integers(1, min(4, Lw) + 1))
-    cuts = np.sort(rng.choice(np.arange(1, Lw), size=n_seg - 1,
-                              replace=False)) if n_seg > 1 else np.array([], int)
-    seg_ends_rel = np.concatenate([cuts, [Lw]]).astype(int)
-    # random self-avoiding path
-    path = [int(rng.choice(mcm.dram_ports()))]
-    while len(path) < n_seg:
-        nbrs = [c for c in mcm.neighbors(path[-1]) if c not in path]
-        if not nbrs:
-            return  # dead end; skip this example
-        path.append(int(rng.choice(nbrs)))
-
-    plan = ModelWindowPlan(model_idx=mi, start=sl.start, end=sl.stop,
-                           seg_ends=tuple(sl.start + e for e in seg_ends_rel),
-                           chiplets=tuple(path), pipelined=True)
-    ref = evaluate_window(db, mcm, WindowPlan((plan,)), validate=True)
-
-    seg_id = np.zeros((1, Lw), dtype=np.int64)
-    prev = 0
-    for si, e in enumerate(seg_ends_rel):
-        seg_id[0, prev:e] = si
-        prev = e
-    chips = np.full((1, n_seg), -1, dtype=np.int64)
-    chips[0, :] = path
-    cand = BatchedModelCandidates(model_idx=mi, start=sl.start, end=sl.stop,
-                                  seg_id=seg_id, chiplets=chips,
-                                  n_segs=np.array([n_seg]))
-    lat, energy = eval_model_candidates(db, mcm, cand, n_active=1)
-    np.testing.assert_allclose(lat[0], ref.per_model_latency[mi], rtol=1e-12)
-    np.testing.assert_allclose(energy[0], ref.energy, rtol=1e-12)
 
 
 # --------------------------- end-to-end ------------------------------------

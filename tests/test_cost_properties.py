@@ -1,11 +1,21 @@
-"""Property-based tests (hypothesis) on cost-model invariants."""
+"""Property-based tests (hypothesis) on cost-model, engine, and kernel
+invariants.  The whole module is skipped when hypothesis is not installed
+(optional extra: ``pip install -e .[property]``); every property here is also
+covered deterministically by the seeded tests in the other modules."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import make_mcm
+from repro.core import get_scenario, make_mcm
 from repro.core.chiplet import ChipletClass, Dataflow, PackageParams
-from repro.core.maestro import compute_cycles, l2_traffic_bytes, layer_cost
+from repro.core.cost import (BatchedModelCandidates, ModelWindowPlan,
+                             WindowPlan, eval_model_candidates,
+                             evaluate_window)
+from repro.core.maestro import (build_cost_db, compute_cycles,
+                                l2_traffic_bytes, layer_cost)
+from repro.core.segmentation import enumerate_segmentations
 from repro.core.workload import attn_layer, conv, gemm
 
 
@@ -84,3 +94,95 @@ def test_class_counts_sum_to_grid(seed):
                           "het_cross"])
     mcm = make_mcm(str(pattern), rows=rows, cols=cols, n_pe=256)
     assert mcm.class_counts().sum() == rows * cols
+
+
+# --------------------------- SEG (Theorem 1) --------------------------------
+
+@given(n_layers=st.integers(1, 12), max_segs=st.integers(1, 5))
+@settings(max_examples=50, deadline=None)
+def test_segmentations_are_valid_partitions(n_layers, max_segs):
+    for se in enumerate_segmentations(n_layers, max_segs, cap=512):
+        assert se[-1] == n_layers          # covers the slice (Theorem 1)
+        assert len(se) <= max(1, min(max_segs, n_layers))
+        assert all(b < a for b, a in zip(se, se[1:]))  # strictly increasing
+
+
+# ------------------------- batched evaluator --------------------------------
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_batched_eval_matches_reference(seed):
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    rng = np.random.default_rng(seed)
+    mi = int(rng.integers(0, db.n_models))
+    sl = db.model_slice(mi)
+    Lw = sl.stop - sl.start
+    n_seg = int(rng.integers(1, min(4, Lw) + 1))
+    cuts = np.sort(rng.choice(np.arange(1, Lw), size=n_seg - 1,
+                              replace=False)) if n_seg > 1 else np.array([], int)
+    seg_ends_rel = np.concatenate([cuts, [Lw]]).astype(int)
+    # random self-avoiding path
+    path = [int(rng.choice(mcm.dram_ports()))]
+    while len(path) < n_seg:
+        nbrs = [c for c in mcm.neighbors(path[-1]) if c not in path]
+        if not nbrs:
+            return  # dead end; skip this example
+        path.append(int(rng.choice(nbrs)))
+
+    plan = ModelWindowPlan(model_idx=mi, start=sl.start, end=sl.stop,
+                           seg_ends=tuple(sl.start + e for e in seg_ends_rel),
+                           chiplets=tuple(path), pipelined=True)
+    ref = evaluate_window(db, mcm, WindowPlan((plan,)), validate=True)
+
+    seg_id = np.zeros((1, Lw), dtype=np.int64)
+    prev = 0
+    for si, e in enumerate(seg_ends_rel):
+        seg_id[0, prev:e] = si
+        prev = e
+    chips = np.full((1, n_seg), -1, dtype=np.int64)
+    chips[0, :] = path
+    cand = BatchedModelCandidates(model_idx=mi, start=sl.start, end=sl.stop,
+                                  seg_id=seg_id, chiplets=chips,
+                                  n_segs=np.array([n_seg]))
+    lat, energy = eval_model_candidates(db, mcm, cand, n_active=1)
+    np.testing.assert_allclose(lat[0], ref.per_model_latency[mi], rtol=1e-12)
+    np.testing.assert_allclose(energy[0], ref.energy, rtol=1e-12)
+
+
+# ------------------------- scar_eval kernel ---------------------------------
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_scar_eval_kernel_matches_core_evaluator(seed):
+    """Property: kernel == jnp ref == numpy core evaluator on random plans."""
+    from repro.kernels.scar_eval import evaluate, pack_candidates
+
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    db = build_cost_db(sc, mcm.classes, mcm.pkg)
+    rng = np.random.default_rng(seed)
+    mi = int(rng.integers(0, db.n_models))
+    sl = db.model_slice(mi)
+    Lw = sl.stop - sl.start
+    B, S = 16, 4
+    seg_id = np.sort(rng.integers(0, S, (B, Lw)), axis=1)
+    for b in range(B):
+        _, inv = np.unique(seg_id[b], return_inverse=True)
+        seg_id[b] = inv
+    n_segs = seg_id.max(axis=1) + 1
+    chips = np.full((B, S), -1, dtype=np.int64)
+    for b in range(B):
+        chips[b, :n_segs[b]] = rng.choice(mcm.n_chiplets, n_segs[b],
+                                          replace=False)
+    cand = BatchedModelCandidates(model_idx=mi, start=sl.start, end=sl.stop,
+                                  seg_id=seg_id, chiplets=chips,
+                                  n_segs=n_segs)
+    lat_ref, e_ref = eval_model_candidates(db, mcm, cand, n_active=2)
+    args, Breal = pack_candidates(db, mcm, cand, n_active=2, pad_b=16)
+    out_k = np.asarray(evaluate(*args, block_b=16, interpret=True))[:Breal]
+    out_r = np.asarray(evaluate(*args, use_kernel=False))[:Breal]
+    np.testing.assert_allclose(out_k[:, 0], lat_ref, rtol=1e-5)
+    np.testing.assert_allclose(out_k[:, 1], e_ref, rtol=1e-5)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5)

@@ -4,6 +4,8 @@ failure recovery."""
 import os
 
 import jax
+
+from repro.launch.mesh import auto_axis_types, mesh_context
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -56,8 +58,7 @@ def test_checkpoint_elastic_restore_new_sharding(tmp_path):
     t = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
     ckpt.save(str(tmp_path), 1, t)
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((n,), ("data",), **auto_axis_types(1))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("data" if 8 % n == 0 else None, None))}
     restored, _ = ckpt.restore(str(tmp_path), t, shardings=sh)
@@ -98,10 +99,9 @@ def test_watchdog_flags_stragglers():
 def test_compressed_psum_close_to_exact():
     from repro.distributed.compress import compressed_psum
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((n,), ("pod",), **auto_axis_types(1))
     x = jax.random.normal(jax.random.PRNGKey(0), (1024,))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         out = compressed_psum(x, mesh, axis="pod")
     exact = x * n  # replicated input summed n times
     rel = float(jnp.max(jnp.abs(out - exact)) / jnp.max(jnp.abs(exact)))

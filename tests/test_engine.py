@@ -1,0 +1,186 @@
+"""Candidate-tensor search engine tests: vectorized-vs-reference parity,
+batched fitness correctness, EA determinism and overlap-repair fallback,
+anneal engine validity, engine selection."""
+import numpy as np
+import pytest
+
+from repro.core import SCENARIO_NAMES, SearchConfig, get_scenario, make_mcm, schedule
+from repro.core.engine import (AnnealEngine, BeamEngine, CandidateTensors,
+                               EvolutionaryEngine, ModelCandidateSet,
+                               batched_fitness, get_engine, reference_combine)
+from repro.core.reconfig import greedy_pack
+from repro.core.scheduler import build_window_sets, get_cost_db
+from repro.core.search import _fitness, evolutionary_combine
+
+
+def _window_sets(sc, mcm, cfg):
+    """Per-window candidate sets exactly as the scheduler builds them."""
+    db = get_cost_db(sc, mcm)
+    wa = greedy_pack(db, mcm.class_counts(), cfg.n_splits)
+    prev_end: dict[int, int] = {}
+    out = []
+    for ranges in wa.ranges:
+        sets = build_window_sets(db, mcm, cfg, ranges, prev_end)
+        out.append((sets, dict(prev_end)))
+        wr = reference_combine(db, mcm, sets, prev_end, metric=cfg.metric,
+                               beam=cfg.beam)
+        prev_end = dict(prev_end)
+        prev_end.update(wr.result.end_chiplet)
+    return db, out
+
+
+# ------------------------- beam parity (oracle) -----------------------------
+
+@pytest.mark.parametrize("scenario", SCENARIO_NAMES)
+def test_beam_engine_bit_identical_to_reference(scenario):
+    """Every window of every 3x3 paper scenario: same best WindowPlan, same
+    metrics, same explored cloud as the reference Python beam search."""
+    npe = 4096 if scenario.startswith("dc") else 256
+    sc = get_scenario(scenario)
+    mcm = make_mcm("het_sides", n_pe=npe)
+    cfg = SearchConfig()
+    db, windows = _window_sets(sc, mcm, cfg)
+    engine = BeamEngine(beam=cfg.beam)
+    for sets, prev_end in windows:
+        ref = reference_combine(db, mcm, sets, prev_end, metric=cfg.metric,
+                                beam=cfg.beam)
+        vec = engine.combine(db, mcm, sets, prev_end, metric=cfg.metric)
+        assert vec.plan == ref.plan
+        assert vec.result.latency == ref.result.latency
+        assert vec.result.energy == ref.result.energy
+        assert vec.explored == ref.explored
+
+
+def test_beam_engine_respects_expansion_budget():
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    cfg = SearchConfig()
+    db, windows = _window_sets(sc, mcm, cfg)
+    sets, prev_end = windows[0]
+    for budget in (1, 7, 50):
+        ref = reference_combine(db, mcm, sets, prev_end, max_expansions=budget)
+        vec = BeamEngine(max_expansions=budget).combine(db, mcm, sets,
+                                                        prev_end)
+        assert vec.plan == ref.plan
+        assert vec.explored == ref.explored
+
+
+# --------------------------- batched fitness --------------------------------
+
+def test_batched_fitness_matches_scalar_reference():
+    sc = get_scenario("xr7_ar_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    cfg = SearchConfig()
+    db, windows = _window_sets(sc, mcm, cfg)
+    sets, _ = windows[0]
+    ct = CandidateTensors.from_sets(sets, mcm.n_chiplets)
+    rng = np.random.default_rng(0)
+    sizes = np.array([len(cs.paths) for cs in sets])
+    picks = np.stack([rng.integers(0, sizes) for _ in range(64)])
+    for metric in ("latency", "energy", "edp"):
+        fit, _, _, _ = batched_fitness(ct, picks, metric)
+        expect = np.array([_fitness(sets, row, metric) for row in picks])
+        assert (fit == expect).all()   # bit-identical, not just close
+
+
+# ------------------------------ EA ------------------------------------------
+
+def test_ea_seeded_determinism():
+    sc = get_scenario("dc4_lms_seg_image")
+    mcm = make_mcm("het_cross", rows=6, cols=6, n_pe=4096)
+    cfg = SearchConfig(algo="evolutionary", seed=11, path_cap=64, seg_cap=128)
+    out1 = schedule(sc, mcm, cfg)
+    out2 = schedule(sc, mcm, cfg)
+    assert out1.result.latency == out2.result.latency
+    assert out1.result.energy == out2.result.energy
+    assert [w.plan for w in out1.windows] == [w.plan for w in out2.windows]
+
+
+def test_ea_overlap_repair_fallback():
+    """A population that can only propose overlapping picks must fall back to
+    the beam-engine repair and still return a valid plan."""
+    sc = get_scenario("xr9_social")
+    mcm = make_mcm("het_sides", n_pe=256)
+    cfg = SearchConfig()
+    db, windows = _window_sets(sc, mcm, cfg)
+    sets, prev_end = next((s, p) for s, p in windows if len(s) >= 2)
+    a, b = sets[0], sets[1]
+
+    def truncate(cs, idx):
+        return ModelCandidateSet(
+            model_idx=cs.model_idx, start=cs.start, end=cs.end,
+            seg_ends_abs=[cs.seg_ends_abs[i] for i in idx],
+            paths=[cs.paths[i] for i in idx],
+            masks=[cs.masks[i] for i in idx],
+            lat=cs.lat[list(idx)], energy=cs.energy[list(idx)], keep=cs.keep)
+
+    # model B's pick 0 overlaps model A's only candidate; pick 1 is disjoint
+    overlap_i = next(i for i, m in enumerate(b.masks) if m & a.masks[0])
+    disjoint_i = next(i for i, m in enumerate(b.masks)
+                      if not (m & a.masks[0]))
+    ta = truncate(a, [0])
+    tb = truncate(b, [overlap_i, disjoint_i])
+    # population of one, no mutation: the EA can never leave picks == (0, 0)
+    eng = EvolutionaryEngine(population=1, generations=2, mutation_rate=0.0,
+                             seed=0)
+    res = eng.combine(db, mcm, [ta, tb], prev_end, metric="edp")
+    res.plan.validate()
+    beam = BeamEngine().combine(db, mcm, [ta, tb], prev_end, metric="edp")
+    assert res.plan == beam.plan          # repaired via the beam engine
+    assert res.result.latency == beam.result.latency
+
+
+def test_evolutionary_combine_wrapper_matches_engine():
+    sc = get_scenario("xr9_social")
+    mcm = make_mcm("het_cb", n_pe=256)
+    cfg = SearchConfig()
+    db, windows = _window_sets(sc, mcm, cfg)
+    sets, prev_end = windows[0]
+    w = evolutionary_combine(db, mcm, sets, prev_end, seed=3)
+    e = EvolutionaryEngine(seed=3).combine(db, mcm, sets, prev_end)
+    assert w.plan == e.plan
+
+
+# ----------------------------- anneal ---------------------------------------
+
+def test_anneal_engine_valid_and_deterministic():
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    cfg = SearchConfig(algo="anneal", seed=5)
+    out1 = schedule(sc, mcm, cfg)
+    out2 = schedule(sc, mcm, cfg)
+    assert out1.result.latency == out2.result.latency
+    assert out1.result.energy == out2.result.energy
+    for wr in out1.windows:
+        wr.plan.validate()
+
+
+def test_anneal_no_worse_than_greedy_seed():
+    """Chain 0 starts from the per-model greedy picks, so the annealed window
+    metric can never exceed the greedy-pick metric."""
+    sc = get_scenario("xr7_ar_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    cfg = SearchConfig()
+    db, windows = _window_sets(sc, mcm, cfg)
+    sets, prev_end = windows[0]
+    ct = CandidateTensors.from_sets(sets, mcm.n_chiplets)
+    greedy = np.zeros((1, len(sets)), dtype=np.int64)
+    gfit, _, _, goverlap = batched_fitness(ct, greedy, "edp")
+    res = AnnealEngine(iters=100, chains=8, seed=0).combine(
+        db, mcm, sets, prev_end, metric="edp")
+    res.plan.validate()
+    if int(goverlap[0]) == 0:
+        assert res.result.edp <= float(gfit[0]) * (1 + 1e-12)
+
+
+# --------------------------- engine factory ---------------------------------
+
+def test_get_engine_selects_algo():
+    assert isinstance(get_engine(SearchConfig(algo="brute")), BeamEngine)
+    assert isinstance(get_engine(SearchConfig(algo="beam")), BeamEngine)
+    ea = get_engine(SearchConfig(algo="evolutionary"), seed=7)
+    assert isinstance(ea, EvolutionaryEngine) and ea.seed == 7
+    an = get_engine(SearchConfig(algo="anneal"), seed=9)
+    assert isinstance(an, AnnealEngine) and an.seed == 9
+    with pytest.raises(KeyError):
+        get_engine(SearchConfig(algo="gradient_descent"))

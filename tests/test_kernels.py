@@ -1,10 +1,10 @@
 """Per-kernel tests: shape/dtype sweeps, interpret-mode kernel vs ref.py
-oracle (deliverable c)."""
+oracle (deliverable c).  The randomised scar_eval-vs-core-evaluator property
+lives in ``test_cost_properties.py`` (hypothesis-gated)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import mha
 from repro.kernels.ssd_scan import gla
@@ -76,10 +76,10 @@ def test_ssd_scan_state_carry_across_chunks():
                                np.asarray(expect), rtol=1e-5)
 
 
-@given(seed=st.integers(0, 1000))
-@settings(max_examples=10, deadline=None)
-def test_scar_eval_kernel_matches_core_evaluator(seed):
-    """Property: kernel == jnp ref == numpy core evaluator on random plans."""
+def test_scar_eval_kernel_matches_core_evaluator_seeded():
+    """Kernel == jnp ref == numpy core evaluator on a seeded random plan
+    batch (the hypothesis sweep of this property is in
+    test_cost_properties.py)."""
     from repro.core import get_scenario, make_mcm
     from repro.core.cost import BatchedModelCandidates, eval_model_candidates
     from repro.core.maestro import build_cost_db
@@ -88,7 +88,7 @@ def test_scar_eval_kernel_matches_core_evaluator(seed):
     sc = get_scenario("xr10_vr_gaming")
     mcm = make_mcm("het_sides", n_pe=256)
     db = build_cost_db(sc, mcm.classes, mcm.pkg)
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(7)
     mi = int(rng.integers(0, db.n_models))
     sl = db.model_slice(mi)
     Lw = sl.stop - sl.start

@@ -1,0 +1,54 @@
+"""Portfolio sweep runner: grid construction, inline and process-parallel
+execution, result ordering and parity."""
+import numpy as np
+import pytest
+
+from repro.core import SearchConfig
+from repro.core.portfolio import (SweepJob, run_portfolio, sweep_grid)
+
+
+def test_sweep_grid_cross_product_and_paper_npe():
+    jobs = sweep_grid(["dc1_lms", "xr8_outdoors"], ["het_sides", "het_cb"],
+                      metrics=["edp", "latency"],
+                      standalone_patterns=["simba_nvdla"])
+    # 2 scenarios x 2 metrics x (2 patterns + 1 standalone)
+    assert len(jobs) == 12
+    by_scn = {j.scenario: j for j in jobs}
+    assert by_scn["dc1_lms"].n_pe == 4096      # datacenter sizing
+    assert by_scn["xr8_outdoors"].n_pe == 256  # AR/VR sizing
+    assert sum(j.standalone for j in jobs) == 4
+    assert len({j.name for j in jobs}) == len(jobs)  # names are unique
+
+
+def test_run_portfolio_inline_order_and_outcomes():
+    jobs = sweep_grid(["xr10_vr_gaming"], ["het_sides", "simba_nvdla"],
+                      standalone_patterns=["simba_nvdla"])
+    results = run_portfolio(jobs, processes=1)
+    assert [r.job for r in results] == jobs
+    for r in results:
+        assert r.outcome.edp > 0
+        assert r.wall_s >= 0
+    # het beats the standalone baseline on this scenario (paper direction)
+    het = results[[j.pattern for j in jobs].index("het_sides") ].outcome
+    sa = results[0].outcome
+    assert het.edp < sa.edp
+
+
+def test_run_portfolio_process_parallel_matches_inline():
+    jobs = sweep_grid(["xr10_vr_gaming", "xr8_outdoors"], ["het_cb"])
+    ser = run_portfolio(jobs, processes=1)
+    par = run_portfolio(jobs, processes=2)
+    assert [r.job.name for r in par] == [r.job.name for r in ser]
+    for a, b in zip(par, ser):
+        assert a.outcome.result.latency == b.outcome.result.latency
+        assert a.outcome.result.energy == b.outcome.result.energy
+
+
+def test_sweep_job_custom_label_and_cfg():
+    job = SweepJob(scenario="xr8_outdoors", pattern="het_cross", n_pe=256,
+                   cfg=SearchConfig(metric="latency", algo="anneal", seed=2),
+                   label="my_point")
+    assert job.name == "my_point"
+    (res,) = run_portfolio([job], processes=1)
+    assert res.outcome.config.algo == "anneal"
+    assert np.isfinite(res.outcome.result.latency)
