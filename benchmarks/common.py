@@ -7,7 +7,7 @@ import time
 
 sys.path.insert(0, "src")
 
-from repro.core import ALL_PATTERNS, SearchConfig
+from repro.core import SearchConfig
 from repro.core.portfolio import SweepJob, run_portfolio
 
 CONFIG_SET = [
@@ -44,9 +44,31 @@ def sweep(scenario_name: str, metric: str = "edp", configs=None,
     return {r.job.name: r.outcome for r in results}
 
 
+# Every emit() is also recorded here so the harness can dump machine-readable
+# BENCH_<name>.json files (benchmarks/run.py --json-dir) for the CI
+# bench-regression gate (benchmarks/compare.py).
+RESULTS: list[dict] = []
+
+
+def _parse_derived(derived: str) -> dict:
+    """'k1=v1;k2=v2' -> dict with numeric coercion ('10.23x' -> 10.23)."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v[:-1] if v.endswith("x") else v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def emit(name: str, us: float, derived: str) -> None:
     """CSV row per harness contract: name,us_per_call,derived."""
     print(f"{name},{us:.1f},{derived}")
+    RESULTS.append({"name": name, "us_per_call": round(us, 1),
+                    "derived": _parse_derived(derived)})
 
 
 class timer:

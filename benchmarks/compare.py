@@ -1,0 +1,136 @@
+"""Bench-regression gate: compare BENCH_*.json runs against a baseline.
+
+CI runs the benchmark harness with ``--json-dir``, then::
+
+    python -m benchmarks.compare --baseline benchmarks/baselines \\
+        --current bench-out [--tolerance 0.15]
+
+Every ``BENCH_<name>.json`` in the baseline directory must have a matching
+current file.  A baseline file opts metrics into the gate via its ``gate``
+object, mapping a metric key to a direction::
+
+    {"name": "...", "us_per_call": ..., "derived": {...},
+     "gate": {"speedup": "higher", "cached_us": "lower"}}
+
+Keys resolve against ``derived`` first, then the top level (so
+``us_per_call`` itself can be gated).  ``higher`` fails when the current
+value drops more than ``tolerance`` below baseline; ``lower`` fails when it
+rises more than ``tolerance`` above.  Gating dimensionless factors
+(speedups) rather than raw wall times keeps the gate meaningful across CI
+machine generations — commit a new baseline alongside any intentional
+change.
+
+Exit status: 0 clean, 1 on any regression or missing current file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_rows(directory: str) -> dict[str, dict]:
+    rows = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        with open(path) as fh:
+            row = json.load(fh)
+        rows[row.get("name", os.path.basename(path))] = row
+    return rows
+
+
+def metric_value(row: dict, key: str):
+    if key in row.get("derived", {}):
+        return row["derived"][key]
+    return row.get(key)
+
+
+def check_row(name: str, base: dict, cur: dict, tolerance: float) -> list[str]:
+    problems = []
+    for key, direction in base.get("gate", {}).items():
+        bval, cval = metric_value(base, key), metric_value(cur, key)
+        if not isinstance(bval, (int, float)):
+            problems.append(
+                f"{name}.{key}: baseline value {bval!r} is not numeric; "
+                "fix the baseline file"
+            )
+            continue
+        if not isinstance(cval, (int, float)):
+            problems.append(f"{name}.{key}: missing from current run")
+            continue
+        if direction == "higher":
+            floor = bval * (1.0 - tolerance)
+            if cval < floor:
+                problems.append(
+                    f"{name}.{key}: {cval:.4g} < {floor:.4g} "
+                    f"(baseline {bval:.4g} - {tolerance:.0%})"
+                )
+        elif direction == "lower":
+            ceil = bval * (1.0 + tolerance)
+            if cval > ceil:
+                problems.append(
+                    f"{name}.{key}: {cval:.4g} > {ceil:.4g} "
+                    f"(baseline {bval:.4g} + {tolerance:.0%})"
+                )
+        else:
+            problems.append(
+                f"{name}.{key}: unknown gate direction {direction!r} "
+                "(use 'higher'|'lower')"
+            )
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--baseline",
+        required=True,
+        help="directory of committed BENCH_*.json baselines",
+    )
+    ap.add_argument(
+        "--current",
+        required=True,
+        help="directory of BENCH_*.json from this run",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.15,
+        help="allowed relative regression (default 0.15)",
+    )
+    args = ap.parse_args()
+
+    base_rows = load_rows(args.baseline)
+    cur_rows = load_rows(args.current)
+    if not base_rows:
+        print(f"no BENCH_*.json baselines under {args.baseline}", file=sys.stderr)
+        sys.exit(1)
+
+    problems: list[str] = []
+    for name, base in base_rows.items():
+        cur = cur_rows.get(name)
+        if cur is None:
+            problems.append(f"{name}: no BENCH_{name}.json in current run")
+            continue
+        problems.extend(check_row(name, base, cur, args.tolerance))
+        for key in base.get("gate", {}):
+            bval, cval = metric_value(base, key), metric_value(cur, key)
+            print(f"{name}.{key}: baseline={bval} current={cval}")
+    for name in sorted(set(cur_rows) - set(base_rows)):
+        print(f"note: {name} has no baseline (not gated)")
+
+    if problems:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"bench gate OK ({len(base_rows)} baselines, "
+        f"tolerance {args.tolerance:.0%})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,7 @@ import numpy as np
 from .common import emit, npe_for, sweep, timer
 from repro.core import (SCENARIO_NAMES, ARVR, DATACENTER, SearchConfig,
                         get_scenario, make_mcm, run_config, schedule)
-from repro.core.maestro import build_cost_db
-from repro.core.reconfig import greedy_pack, layer_optimal_assignments
+from repro.core.reconfig import layer_optimal_assignments
 from repro.core.scheduler import get_cost_db
 
 

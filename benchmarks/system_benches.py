@@ -113,6 +113,79 @@ def bench_sched_throughput() -> None:
         f"(target >=5x)")
 
 
+def bench_candidate_construction() -> None:
+    """Path-construction throughput: batched frontier expansion vs the
+    recursive DFS oracle (``sched.enumerate_paths``).
+
+    Bitwise path-set parity is asserted on the 6x6 package (the largest mesh
+    the DFS swept in production), then both builders run the same 16x16
+    coverage workload — window lengths 6..9 at a pod-scale candidate cap —
+    which is the regime that used to gate portfolio sweeps at 6x6.  Guards
+    the >=5x construction speedup target and exact 16x16 parity (the
+    default frontier bound keeps this workload exhaustive).
+    """
+    import time as _time
+    from repro.core import make_mcm
+    from repro.core.paths import frontier_paths, path_cache_clear
+    from repro.core.sched import enumerate_paths
+
+    mcm6 = make_mcm("het_cross", rows=6, cols=6, n_pe=4096)
+    ports6 = mcm6.dram_ports()
+    fallback6 = [c for c in range(mcm6.n_chiplets) if c not in ports6]
+    for starts in (ports6, fallback6):
+        for length in range(1, 7):
+            for cap in (64, 512):
+                ref = enumerate_paths(mcm6, length, list(starts), cap=cap)
+                got, _ = frontier_paths(6, 6, length, starts, cap=cap)
+                assert [tuple(map(int, r)) for r in got] == ref, (
+                    f"frontier builder diverged from DFS oracle on 6x6 "
+                    f"(length={length} cap={cap})")
+
+    mcm16 = make_mcm("het_cb", rows=16, cols=16, n_pe=4096)
+    ports16 = mcm16.dram_ports()
+    lengths, cap = (6, 7, 8, 9), 100_000
+
+    def run_dfs() -> int:
+        return sum(len(enumerate_paths(mcm16, lng, list(ports16), cap=cap))
+                   for lng in lengths)
+
+    def run_vec() -> int:
+        path_cache_clear()                 # time cold builds, not cache hits
+        return sum(frontier_paths(16, 16, lng, ports16, cap=cap)[0].shape[0]
+                   for lng in lengths)
+
+    def best_of(fn, n=3) -> float:
+        times = []
+        for _ in range(n):
+            t0 = _time.perf_counter()
+            fn()
+            times.append(_time.perf_counter() - t0)
+        return min(times)
+
+    # 16x16 parity first (also warms numpy)
+    for lng in lengths:
+        ref = enumerate_paths(mcm16, lng, list(ports16), cap=cap)
+        got, _ = frontier_paths(16, 16, lng, ports16, cap=cap)
+        assert [tuple(map(int, r)) for r in got] == ref, (
+            f"frontier builder diverged from DFS oracle on 16x16 "
+            f"(length={lng})")
+    n_paths = run_vec()
+
+    t_dfs = best_of(run_dfs)
+    t_vec = best_of(run_vec)
+    with timer() as t_warm:                # production steady state: cached
+        sum(frontier_paths(16, 16, lng, ports16, cap=cap)[0].shape[0]
+            for lng in lengths)
+    speedup = t_dfs / t_vec
+    emit("candidate_construction_16x16", t_vec * 1e6,
+         f"dfs_ms={t_dfs * 1e3:.1f};vec_ms={t_vec * 1e3:.1f};"
+         f"paths={n_paths};speedup={speedup:.2f}x;"
+         f"cached_us={t_warm.us:.1f};target=5x")
+    assert speedup >= 5.0, (
+        f"frontier construction regressed to {speedup:.2f}x vs the DFS "
+        f"oracle (target >=5x)")
+
+
 def bench_kernel_agreement() -> None:
     """Kernel-vs-oracle max error at a production-ish tile (interpret mode)."""
     from repro.kernels.flash_attention import mha
@@ -176,7 +249,7 @@ def bench_roofline_table(path: str = "dryrun_results.jsonl") -> None:
     if not os.path.exists(path):
         emit("roofline_table", 0.0, "missing_dryrun_results")
         return
-    recs = [json.loads(l) for l in open(path)]
+    recs = [json.loads(line) for line in open(path)]
     for r in recs:
         if "error" in r or not r["mesh"].startswith("single"):
             continue
@@ -195,4 +268,5 @@ def bench_roofline_table(path: str = "dryrun_results.jsonl") -> None:
 
 
 ALL = [bench_scar_eval_throughput, bench_sched_throughput,
-       bench_kernel_agreement, bench_roofline_table]
+       bench_candidate_construction, bench_kernel_agreement,
+       bench_roofline_table]

@@ -12,7 +12,7 @@ from benchmarks.system_benches import model_flops, roofline_terms
 
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl"
-    recs = [json.loads(l) for l in open(path)]
+    recs = [json.loads(line) for line in open(path)]
     print(f"{'arch':22s} {'shape':12s} {'mesh':6s} {'compute_s':>10s} "
           f"{'memory_s':>10s} {'collect_s':>10s} {'bottleneck':>10s} "
           f"{'MF-ratio':>8s}")

@@ -14,7 +14,7 @@ PEAK, HBM, LINK = 197e12, 819e9, 50e9
 
 def load(path):
     try:
-        return [json.loads(l) for l in open(path)]
+        return [json.loads(line) for line in open(path)]
     except FileNotFoundError:
         return []
 

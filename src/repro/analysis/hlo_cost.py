@@ -174,7 +174,6 @@ def _conv_flops(op: Op, comp: Computation) -> float:
         if rhs:
             kelems, _, _, _ = _shape_elems_bytes(rhs[0])
             # approx: per output element, 2*K_total/out_features work
-            m = re.search(r"dim_labels=\S*?->\S*", op.line)
             return 2.0 * out_elems * max(kelems, 1) ** 0.5  # coarse
     return 2.0 * out_elems
 

@@ -48,26 +48,87 @@ class ModelCandidateSet:
     scheduling-tree-rooted paths (DRAM ports / locality anchors), tier 1 the
     unconstrained fallback roots consulted only when tier 0 is fully blocked
     by exclusive occupancy.
+
+    Two interchangeable representations are supported.  The hot path
+    (``sched.build_candidates``) fills the *tensor* fields — ``chips`` /
+    ``n_segs`` / ``seg_arr`` / ``mask_words`` — and never materialises a
+    Python object per candidate; the legacy *list* fields (``paths`` /
+    ``masks`` / ``seg_ends_abs``) may be passed instead (tests, ad-hoc
+    construction) and either form is derived lazily from the other on first
+    access, cached on the instance.
     """
 
     model_idx: int
     start: int
     end: int
-    seg_ends_abs: list[tuple[int, ...]]     # per candidate
-    paths: list[tuple[int, ...]]
-    masks: list[int]
     lat: np.ndarray
     energy: np.ndarray
+    seg_ends_abs: list[tuple[int, ...]] | None = None   # per candidate
+    paths: list[tuple[int, ...]] | None = None
+    masks: list[int] | None = None
     keep: int = 64                           # preferred expansion width
     mask_words: np.ndarray | None = None     # [N, W] uint64 (lazy if None)
+    chips: np.ndarray | None = None          # [N, S] int16, -1 padded
+    n_segs: np.ndarray | None = None         # [N]
+    seg_arr: np.ndarray | None = None        # [N, S] abs layer ends, -1 pad
+
+    @property
+    def n_cands(self) -> int:
+        """Candidate count (representation-independent)."""
+        return int(self.lat.shape[0])
 
     def words(self, n_words: int) -> np.ndarray:
         """Packed occupancy words, computed at build time or on demand."""
         mw = self.mask_words
         if mw is None or mw.shape[1] < n_words:
-            mw = _pack_masks(self.masks, n_words)
+            mw = _pack_masks(self.mask_ints(), n_words)
             object.__setattr__(self, "mask_words", mw)
         return mw
+
+    def path(self, i: int) -> tuple[int, ...]:
+        """Candidate ``i``'s chiplet path as a tuple (single-row unpack)."""
+        if self.paths is not None:
+            return self.paths[i]
+        row = self.chips[i]
+        return tuple(int(c) for c in row[: int(self.n_segs[i])])
+
+    def seg_end(self, i: int) -> tuple[int, ...]:
+        """Candidate ``i``'s absolute segment ends as a tuple."""
+        if self.seg_ends_abs is not None:
+            return self.seg_ends_abs[i]
+        row = self.seg_arr[i]
+        return tuple(int(e) for e in row[: int(self.n_segs[i])])
+
+    def path_list(self) -> list[tuple[int, ...]]:
+        """All paths as tuples (materialised lazily, cached)."""
+        if self.paths is None:
+            object.__setattr__(
+                self, "paths", [self.path(i) for i in range(self.n_cands)])
+        return self.paths
+
+    def mask_ints(self) -> list[int]:
+        """Occupancy masks as Python ints (materialised lazily, cached).
+
+        Only the scalar oracles (``reference_combine``, ``search._fitness``)
+        need this form; the engines stay on ``mask_words``.
+        """
+        if self.masks is None:
+            mw = self.mask_words
+            if mw is not None:
+                ints = [0] * mw.shape[0]
+                for w in range(mw.shape[1]):
+                    shift = 64 * w
+                    col = mw[:, w].tolist()
+                    ints = [m | (v << shift) for m, v in zip(ints, col)]
+            else:                            # list-form set without masks
+                ints = []
+                for p in self.path_list():
+                    m = 0
+                    for c in p:
+                        m |= 1 << int(c)
+                    ints.append(m)
+            object.__setattr__(self, "masks", ints)
+        return self.masks
 
 
 @dataclasses.dataclass
@@ -109,13 +170,13 @@ class CandidateTensors:
                   n_chiplets: int) -> "CandidateTensors":
         n_words = max(1, (n_chiplets + 63) // 64)
         m_models = len(sets)
-        sizes = np.array([len(cs.paths) for cs in sets], dtype=np.int64)
+        sizes = np.array([cs.n_cands for cs in sets], dtype=np.int64)
         n_max = int(sizes.max()) if m_models else 0
         masks = np.full((m_models, n_max, n_words), _MASK64, dtype=np.uint64)
         lat = np.full((m_models, n_max), np.inf)
         energy = np.full((m_models, n_max), np.inf)
         for m, cs in enumerate(sets):
-            n = len(cs.paths)
+            n = cs.n_cands
             masks[m, :n] = cs.words(n_words)
             lat[m, :n] = cs.lat
             energy[m, :n] = cs.energy
@@ -162,7 +223,7 @@ def _plans_from_picks(sets, picks) -> WindowPlan:
         ci = int(ci)
         plans.append(ModelWindowPlan(
             model_idx=cs.model_idx, start=cs.start, end=cs.end,
-            seg_ends=cs.seg_ends_abs[ci], chiplets=cs.paths[ci],
+            seg_ends=cs.seg_end(ci), chiplets=cs.path(ci),
             pipelined=True))
     return WindowPlan(plans=tuple(sorted(plans, key=lambda p: p.model_idx)))
 
@@ -207,7 +268,7 @@ class BeamEngine:
         explored: list[tuple[float, float]] = []
         expansions = 0
         for cs in sets:
-            n_cand = len(cs.paths)
+            n_cand = cs.n_cands
             cand_masks = cs.words(n_words)                        # [N, W]
             if n_words == 1:
                 disjoint = (b_mask[:, 0, None]
@@ -270,23 +331,24 @@ def reference_combine(db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
     explored: list[tuple[float, float]] = []
     expansions = 0
     for cs in sets:
+        cs_masks = cs.mask_ints()
         nxt: list[tuple[int, float, float, list[int]]] = []
         for mask, lmax, esum, picks in items:
             found = 0
-            for ci in range(len(cs.paths)):
+            for ci in range(cs.n_cands):
                 if (expansions >= max_expansions or found >= cs.keep) and nxt:
                     break
-                if mask & cs.masks[ci]:
+                if mask & cs_masks[ci]:
                     continue
                 expansions += 1
                 found += 1
                 nl = max(lmax, float(cs.lat[ci]))
                 ne = esum + float(cs.energy[ci])
-                nxt.append((mask | cs.masks[ci], nl, ne, picks + [ci]))
+                nxt.append((mask | cs_masks[ci], nl, ne, picks + [ci]))
         if not nxt:
             raise RuntimeError(
                 f"no disjoint placement for model {cs.model_idx} even after "
-                f"scanning all {len(cs.paths)} candidates; "
+                f"scanning all {cs.n_cands} candidates; "
                 f"increase path_cap or reduce provisioned nodes")
         nxt.sort(key=lambda it: metric_score(it[1], it[2], metric))
         explored.extend((l, e) for _, l, e, _ in nxt[:beam])
@@ -321,7 +383,7 @@ class EvolutionaryEngine:
         rng = np.random.default_rng(self.seed)
         ct = CandidateTensors.from_sets(sets, mcm.n_chiplets)
         n_models = len(sets)
-        sizes = np.array([len(cs.paths) for cs in sets])
+        sizes = np.array([cs.n_cands for cs in sets])
         pop = np.stack([rng.integers(0, sizes)
                         for _ in range(self.population)])
         pop[0] = 0  # seed with per-model greedy best
@@ -333,8 +395,8 @@ class EvolutionaryEngine:
             for _ in range(self.population):
                 i, j = rng.integers(0, self.population, size=2)
                 a = pop[i] if fit[i] < fit[j] else pop[j]
-                k, l = rng.integers(0, self.population, size=2)
-                b = pop[k] if fit[k] < fit[l] else pop[l]
+                p, q = rng.integers(0, self.population, size=2)
+                b = pop[p] if fit[p] < fit[q] else pop[q]
                 xover = rng.random(n_models) < 0.5
                 child = np.where(xover, a, b)
                 mut = rng.random(n_models) < self.mutation_rate

@@ -24,7 +24,7 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Optional
 
-from .scenarios import get_scenario
+from .scenarios import get_scenario, mesh_shape
 from .scheduler import ScheduleOutcome, SearchConfig, run_config
 
 
@@ -110,26 +110,37 @@ def sweep_grid(scenarios: list[str], patterns: list[str],
                metrics: list[str] = ("edp",), rows: int = 3, cols: int = 3,
                n_pe: Optional[int] = None,
                standalone_patterns: list[str] = (),
+               meshes: Optional[list] = None,
                **cfg_kw) -> list[SweepJob]:
-    """Cross product scenario x pattern x metric -> job list.
+    """Cross product scenario x mesh x pattern x metric -> job list.
 
     ``n_pe=None`` follows the paper's sizing: 4096 PEs for datacenter
     scenarios, 256 for AR/VR.  ``standalone_patterns`` adds the
-    no-pipelining baseline runs for the named patterns.
+    no-pipelining baseline runs for the named patterns.  ``meshes`` adds a
+    mesh-size axis: a list of ``(rows, cols)`` pairs or preset names from
+    ``scenarios.MESH_PRESETS`` (``"8x8"``, ``"16x16"``, ...); when given it
+    overrides the scalar ``rows``/``cols``.
     """
+    if meshes is None:
+        mesh_list = [(rows, cols)]
+    else:
+        mesh_list = [mesh_shape(m) if isinstance(m, str) else tuple(m)
+                     for m in meshes]
     jobs = []
     for scn in scenarios:
         npe = n_pe if n_pe is not None else (
             4096 if scn.startswith("dc") else 256)
-        for metric in metrics:
-            for pat in standalone_patterns:
-                jobs.append(SweepJob(scenario=scn, pattern=pat, rows=rows,
-                                     cols=cols, n_pe=npe, standalone=True,
-                                     cfg=SearchConfig(metric=metric,
-                                                      **cfg_kw)))
-            for pat in patterns:
-                jobs.append(SweepJob(scenario=scn, pattern=pat, rows=rows,
-                                     cols=cols, n_pe=npe,
-                                     cfg=SearchConfig(metric=metric,
-                                                      **cfg_kw)))
+        for mrows, mcols in mesh_list:
+            for metric in metrics:
+                for pat in standalone_patterns:
+                    jobs.append(SweepJob(scenario=scn, pattern=pat,
+                                         rows=mrows, cols=mcols, n_pe=npe,
+                                         standalone=True,
+                                         cfg=SearchConfig(metric=metric,
+                                                          **cfg_kw)))
+                for pat in patterns:
+                    jobs.append(SweepJob(scenario=scn, pattern=pat,
+                                         rows=mrows, cols=mcols, n_pe=npe,
+                                         cfg=SearchConfig(metric=metric,
+                                                          **cfg_kw)))
     return jobs

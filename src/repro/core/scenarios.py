@@ -30,6 +30,28 @@ SCENARIO_NAMES = [name for name, _, _ in _TABLE_II]
 DATACENTER = [n for n, uc, _ in _TABLE_II if uc == "datacenter"]
 ARVR = [n for n, uc, _ in _TABLE_II if uc == "arvr"]
 
+# Mesh configurations the sweeps run at.  The paper evaluates 3x3 and 6x6
+# packages; 8x8 and 16x16 extend toward pod-scale MCMs (MCMComm / Scope
+# territory) now that candidate construction and window combination are both
+# vectorized.  ``LARGE_MESHES`` is what the nightly smoke sweep and the
+# construction benchmark exercise.
+MESH_PRESETS: dict[str, tuple[int, int]] = {
+    "3x3": (3, 3),
+    "6x6": (6, 6),
+    "8x8": (8, 8),
+    "16x16": (16, 16),
+}
+LARGE_MESHES = ("8x8", "16x16")
+
+
+def mesh_shape(preset: str) -> tuple[int, int]:
+    """(rows, cols) for a named mesh preset (``"8x8"`` -> ``(8, 8)``)."""
+    try:
+        return MESH_PRESETS[preset]
+    except KeyError:
+        raise KeyError(f"unknown mesh preset {preset!r}; "
+                       f"have {sorted(MESH_PRESETS)}") from None
+
 
 def get_scenario(name: str) -> Scenario:
     for sname, _, spec in _TABLE_II:

@@ -3,15 +3,18 @@
 The search space is a forest of scheduling trees: tree nodes are chiplets,
 edges are XY-mesh adjacencies, subtree roots are constrained to (i) chiplets
 with a direct DRAM interface (left/right package columns) or (ii) the model's
-ending chiplet from the previous window (cross-window data locality).  A
-constrained DFS enumerates self-avoiding paths (one chiplet per segment,
-exclusive occupancy), per-model candidates are scored with the vectorised
-cost model, and the vectorized beam engine (``engine.BeamEngine``) combines
-disjoint per-model paths into the window schedule.
+ending chiplet from the previous window (cross-window data locality).  The
+path space is enumerated by the batched frontier expansion in ``paths.py``
+(all self-avoiding paths grown one hop per level as padded tensors, served
+from a per-process LRU cache); per-model candidates are scored with the
+vectorised cost model, and the vectorized beam engine (``engine.BeamEngine``)
+combines disjoint per-model paths into the window schedule.
 
 This module owns candidate *construction*; the combination search lives in
 ``engine.py`` (``ModelCandidateSet`` / ``WindowSearchResult`` are re-exported
-here for backward compatibility).
+here for backward compatibility).  ``enumerate_paths`` — the original
+recursive DFS — is kept as the parity oracle for the frontier builder,
+mirroring how ``engine.reference_combine`` anchors the vectorized beam.
 """
 from __future__ import annotations
 
@@ -23,6 +26,7 @@ from .chiplet import MCM
 from .cost import BatchedModelCandidates, eval_model_candidates
 from .engine import BeamEngine, ModelCandidateSet, WindowSearchResult
 from .maestro import CostDB
+from .paths import frontier_paths
 
 __all__ = ["enumerate_paths", "build_candidates", "combine_candidates",
            "ModelCandidateSet", "WindowSearchResult"]
@@ -34,6 +38,10 @@ def enumerate_paths(mcm: MCM, length: int, starts: list[int],
 
     The enumeration budget is split evenly across the valid start positions
     (the scheduling-tree roots) so every subtree contributes candidates.
+
+    This is the scalar *oracle*: ``paths.frontier_paths`` reproduces its
+    output bit-for-bit (same start pool, budget split and emission order)
+    and is what the production pipeline runs; see ``tests/test_candidates``.
     """
     paths: list[tuple[int, ...]] = []
     per_start = max(1, cap // max(1, len(starts)))
@@ -61,13 +69,6 @@ def enumerate_paths(mcm: MCM, length: int, starts: list[int],
     return paths
 
 
-def _path_mask(path: tuple[int, ...]) -> int:
-    m = 0
-    for c in path:
-        m |= 1 << c
-    return m
-
-
 def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
                      rng_range: tuple[int, int],
                      segmentations: list[tuple[int, ...]],
@@ -75,8 +76,16 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
                      prev_end: Optional[int],
                      path_cap: int = 256,
                      keep: int = 64,
-                     metric: str = "edp") -> ModelCandidateSet:
-    """Enumerate (segmentation x path) candidates for one model, keep top-k."""
+                     metric: str = "edp",
+                     frontier_cap: Optional[int] = None) -> ModelCandidateSet:
+    """Enumerate (segmentation x path) candidates for one model, keep top-k.
+
+    Fully tensorised: path pools come out of ``paths.frontier_paths`` as
+    ``[N, L]`` int16 / ``[N, W]`` uint64 arrays, per-segmentation blocks are
+    assembled with broadcasts, and the resulting ``ModelCandidateSet``
+    carries the tensors straight through to the search engines — no Python
+    tuple is built per candidate anywhere on this path.
+    """
     start, end = rng_range
     starts = list(mcm.dram_ports())
     if prev_end is not None and prev_end not in starts:
@@ -92,40 +101,62 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
     if (Lw,) not in segmentations:
         segmentations = list(segmentations) + [(Lw,)]
 
-    all_seg_ends: list[tuple[int, ...]] = []
-    all_paths: list[tuple[int, ...]] = []
-    tiers: list[int] = []
-    by_len: dict[int, list[list[tuple[int, ...]]]] = {}
+    by_len: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
     for seg in segmentations:
         n_seg = len(seg)
         if n_seg not in by_len:
             by_len[n_seg] = [
-                enumerate_paths(mcm, n_seg, starts, cap=path_cap),
-                enumerate_paths(mcm, n_seg, fallback_starts, cap=path_cap),
+                frontier_paths(mcm.rows, mcm.cols, n_seg, starts,
+                               cap=path_cap, frontier_cap=frontier_cap),
+                frontier_paths(mcm.rows, mcm.cols, n_seg, fallback_starts,
+                               cap=path_cap, frontier_cap=frontier_cap),
             ]
-        for tier, pool in enumerate(by_len[n_seg]):
-            for path in pool:
-                all_seg_ends.append(tuple(start + e for e in seg))
-                all_paths.append(path)
-                tiers.append(tier)
-    if not all_paths:
+
+    # One block per (segmentation, tier): every path of that length paired
+    # with the segmentation's layer split.  Blocks are concatenated in the
+    # same (seg, tier, path) order the DFS-era assembly used, so the final
+    # (tier, score) lexsort yields an identical candidate ordering.
+    S = 0
+    blocks: list[tuple[tuple[int, ...], int, np.ndarray, np.ndarray]] = []
+    for seg in segmentations:
+        for tier, (pool, pool_words) in enumerate(by_len[len(seg)]):
+            if pool.shape[0] == 0:
+                continue
+            blocks.append((seg, tier, pool, pool_words))
+            S = max(S, len(seg))
+    if not blocks:
         raise RuntimeError(f"no placement candidates for model {model_idx}")
 
-    B = len(all_paths)
-    S = max(len(p) for p in all_paths)
-    seg_id = np.zeros((B, Lw), dtype=np.int64)
-    chips = np.full((B, S), -1, dtype=np.int64)
-    n_segs = np.zeros(B, dtype=np.int64)
-    for b, (se, path) in enumerate(zip(all_seg_ends, all_paths)):
-        prev_abs = start
-        for si, e_abs in enumerate(se):
-            seg_id[b, prev_abs - start:e_abs - start] = si
-            prev_abs = e_abs
-        chips[b, :len(path)] = path
-        n_segs[b] = len(path)
+    chips_parts, words_parts, tier_parts = [], [], []
+    segid_parts, segarr_parts, nseg_parts = [], [], []
+    for seg, tier, pool, pool_words in blocks:
+        n_seg = len(seg)
+        n_paths = pool.shape[0]
+        blk = np.full((n_paths, S), -1, dtype=np.int16)
+        blk[:, :n_seg] = pool
+        chips_parts.append(blk)
+        words_parts.append(pool_words)
+        tier_parts.append(np.full(n_paths, tier, dtype=np.int64))
+        seg_rel = np.asarray(seg, dtype=np.int64)
+        seg_row = np.repeat(np.arange(n_seg, dtype=np.int64),
+                            np.diff(np.concatenate([[0], seg_rel])))
+        segid_parts.append(np.broadcast_to(seg_row, (n_paths, Lw)))
+        ends_row = np.full(S, -1, dtype=np.int64)
+        ends_row[:n_seg] = start + seg_rel
+        segarr_parts.append(np.broadcast_to(ends_row, (n_paths, S)))
+        nseg_parts.append(np.full(n_paths, n_seg, dtype=np.int64))
+
+    chips = np.concatenate(chips_parts)                    # [B, S] int16
+    words = np.concatenate(words_parts)                    # [B, W] uint64
+    tiers = np.concatenate(tier_parts)
+    seg_id = np.concatenate(segid_parts)                   # [B, Lw]
+    seg_arr = np.concatenate(segarr_parts)                 # [B, S]
+    n_segs = np.concatenate(nseg_parts)
 
     cand = BatchedModelCandidates(model_idx=model_idx, start=start, end=end,
-                                  seg_id=seg_id, chiplets=chips, n_segs=n_segs)
+                                  seg_id=seg_id,
+                                  chiplets=chips.astype(np.int64),
+                                  n_segs=n_segs)
     lat, energy = eval_model_candidates(db, mcm, cand, n_active=n_active,
                                         prev_end=prev_end)
     if metric == "latency":
@@ -137,20 +168,12 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
     # Keep ALL candidates sorted by (tier, score); the combiner expands the
     # first ``keep`` per beam item and falls back deeper (eventually into the
     # unconstrained-root tier) only when blocked by exclusive occupancy.
-    order = np.lexsort((score, np.asarray(tiers)))
-    n_words = max(1, (mcm.n_chiplets + 63) // 64)
-    words = np.zeros((B, n_words), dtype=np.uint64)
-    for si in range(S):
-        c = chips[:, si]
-        v = c >= 0
-        words[v, c[v] // 64] |= np.uint64(1) << (c[v] % 64).astype(np.uint64)
+    order = np.lexsort((score, tiers))
     return ModelCandidateSet(
         model_idx=model_idx, start=start, end=end,
-        seg_ends_abs=[all_seg_ends[i] for i in order],
-        paths=[all_paths[i] for i in order],
-        masks=[_path_mask(all_paths[i]) for i in order],
         lat=lat[order], energy=energy[order], keep=keep,
-        mask_words=words[order])
+        mask_words=words[order], chips=chips[order],
+        n_segs=n_segs[order], seg_arr=seg_arr[order])
 
 
 def combine_candidates(db: CostDB, mcm: MCM,

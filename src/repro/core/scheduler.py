@@ -13,9 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import numpy as np
-
-from .chiplet import MCM, PackageParams, make_mcm
+from .chiplet import MCM, make_mcm
 from .cost import (ModelWindowPlan, ScheduleResult, WindowPlan,
                    evaluate_schedule)
 from .maestro import CostDB, build_cost_db
@@ -36,6 +34,9 @@ class SearchConfig:
     seg_top_k: int = 4
     seg_cap: int = 512
     path_cap: int = 128
+    frontier_cap: Optional[int] = None  # path-builder frontier bound (None =
+    #                                     paths.DEFAULT heuristic; large
+    #                                     meshes stratified-sample above it)
     keep_per_model: int = 48
     beam: int = 48
     max_nodes_per_model: Optional[int] = 6   # Heuristic 2 user cap
@@ -94,7 +95,8 @@ def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
         sets.append(build_candidates(
             db, mcm, mi, (s, e), segs, n_active=n_active,
             prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
-            keep=cfg.keep_per_model, metric=cfg.metric))
+            keep=cfg.keep_per_model, metric=cfg.metric,
+            frontier_cap=cfg.frontier_cap))
     return sets
 
 

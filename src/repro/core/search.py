@@ -31,7 +31,7 @@ def _fitness(sets: list[ModelCandidateSet], picks: np.ndarray,
     mask = 0
     overlap = 0
     for cs, ci in zip(sets, picks):
-        m = cs.masks[int(ci)]
+        m = cs.mask_ints()[int(ci)]
         overlap += bin(mask & m).count("1")
         mask |= m
         lmax = max(lmax, float(cs.lat[int(ci)]))

@@ -148,7 +148,7 @@ class Model:
 
     @property
     def total_macs(self) -> int:
-        return sum(l.macs for l in self.layers)
+        return sum(lyr.macs for lyr in self.layers)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,9 +9,8 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Iterator, Optional
+from typing import Iterator
 
-import jax
 import numpy as np
 
 from repro.models.config import ArchConfig

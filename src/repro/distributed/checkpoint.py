@@ -19,7 +19,6 @@ Properties required at scale:
 from __future__ import annotations
 
 import hashlib
-import io
 import os
 import re
 import shutil

@@ -68,7 +68,6 @@ def compressed_psum(x: jax.Array, mesh, axis: str = "pod") -> jax.Array:
     axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     if axis_size == 1:
         return x
-    others = tuple(a for a in mesh.axis_names if a != axis)
     spec = P()  # replicated input/output along every axis
 
     @partial(shard_map, mesh=mesh, in_specs=spec, out_specs=spec,

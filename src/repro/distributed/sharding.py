@@ -17,10 +17,9 @@ already sharded and divisible by the ``data`` axis is sharded over ``data``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ArchConfig
@@ -185,7 +184,6 @@ def param_specs(cfg: ArchConfig, params) -> Any:
 
 def _validated(spec: P, shape: tuple[int, ...]) -> P:
     fixed = []
-    mesh_sizes = {"model": None}  # validated at mesh-apply time instead
     for i, s in enumerate(spec):
         fixed.append(s)
     return P(*fixed) if len(spec) <= len(shape) else P(*list(spec)[:len(shape)])

@@ -4,7 +4,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import ssd_scan
 from .ref import ssd_scan_ref
@@ -20,7 +19,6 @@ def gla(q, k, v, a, *, chunk: int = 128, interpret: bool = False,
     kf = k.transpose(0, 2, 1, 3).reshape(B * H, L, N)
     vf = v.transpose(0, 2, 1, 3).reshape(B * H, L, P)
     af = a.transpose(0, 2, 1).reshape(B * H, L)
-    f = ssd_scan if use_kernel else ssd_scan_ref
     if use_kernel:
         of = ssd_scan(qf, kf, vf, af, chunk=chunk, interpret=interpret)
     else:

@@ -1,9 +1,6 @@
 """Oracle: the model-layer chunked GLA implementation itself."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.models.layers import gla_chunked
 
 

@@ -16,7 +16,6 @@ allocation) for every model input of the cell's step function.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ re-analyses the roofline terms, and appends hypothesis -> before/after
 records to hillclimb_results.jsonl.
 """
 import json
-import time
 import traceback
 
 from repro.launch import cells as cellmod

@@ -6,9 +6,6 @@ recovery is "restore pytrees, continue".
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 

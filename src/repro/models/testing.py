@@ -11,7 +11,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .config import ArchConfig, BlockKind, MoEConfig, SSMConfig
+from .config import ArchConfig, MoEConfig, SSMConfig
 
 
 def reduced(cfg: ArchConfig, n_super: int = 2) -> ArchConfig:

@@ -9,14 +9,14 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from .blocks import BlockCtx, block_apply, block_cache, block_init
-from .config import ArchConfig, BlockKind, MLPKind
-from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+from .config import ArchConfig, BlockKind
+from .layers import dense_init, rmsnorm, rmsnorm_init
 
 Params = dict
 Array = jax.Array
@@ -75,7 +75,8 @@ def init_params(cfg: ArchConfig, key: Array, dims: ModelDims,
             layers[f"p{pi}"] = jax.vmap(lambda k: {})(
                 jax.random.split(keys[pi], n_super))
             continue
-        init_one = lambda k, _kind=kind: block_init(k, cfg, ctx, dtype, _kind)
+        def init_one(k, _kind=kind):
+            return block_init(k, cfg, ctx, dtype, _kind)
         layers[f"p{pi}"] = jax.vmap(init_one)(
             jax.random.split(keys[pi], n_super))
     params: Params = {

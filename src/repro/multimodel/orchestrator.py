@@ -32,7 +32,7 @@ from repro.core.chiplet import MCM, ChipletClass, Dataflow, PackageParams
 from repro.core.scheduler import SearchConfig, schedule
 from repro.core.workload import Model, Scenario, transformer_layers
 from repro.models import ModelDims, get_arch
-from repro.models.config import ArchConfig, BlockKind
+from repro.models.config import ArchConfig
 
 # v5e-flavoured package constants for the pod-as-MCM cost model.
 TPU_PKG = PackageParams(
@@ -55,8 +55,9 @@ TPU_NPE = 131072
 
 def tpu_chip_classes() -> tuple[ChipletClass, ChipletClass]:
     """TP-major (WS analogue) and batch-major (OS analogue) templates."""
-    mk = lambda df: ChipletClass(df, n_pe=TPU_NPE, bw_noc=819e9,
-                                 bw_mem=819e9, sz_mem=16 * 2**30)
+    def mk(df):
+        return ChipletClass(df, n_pe=TPU_NPE, bw_noc=819e9,
+                            bw_mem=819e9, sz_mem=16 * 2**30)
     return mk(Dataflow.NVDLA), mk(Dataflow.SHIDIANNAO)
 
 
@@ -137,7 +138,6 @@ def realize(plan_: PodPlan, requests: list[ServeRequest], devices=None,
     from repro.distributed import sharding as shd
     from repro.models.steps import make_prefill_step
     from repro.models.testing import reduced, synth_batch
-    import jax.numpy as jnp
 
     devices = devices if devices is not None else np.array(
         jax.devices()).reshape(plan_.rows, plan_.cols)

@@ -8,7 +8,7 @@ sharding rule that applies to params applies to the state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,8 @@ def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def init_state(cfg: AdamWConfig, params) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, cfg.moment_dtype)
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),
@@ -46,8 +47,8 @@ def init_state(cfg: AdamWConfig, params) -> dict:
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def apply_updates(cfg: AdamWConfig, params, grads, state) -> tuple[Any, dict]:

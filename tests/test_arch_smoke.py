@@ -43,7 +43,7 @@ def test_train_step_decreases_loss_and_updates(arch):
     for _ in range(3):
         params, state, metrics = step(params, state, batch)
         losses.append(float(metrics["loss"]))
-    assert all(np.isfinite(l) for l in losses)
+    assert all(np.isfinite(x) for x in losses)
     assert losses[-1] < losses[0]  # memorizes a fixed tiny batch
     assert int(state["step"]) == 3
 
@@ -86,6 +86,6 @@ def test_prefill_decode_matches_full_forward(arch):
 
 def test_param_count_matches_config_estimate(arch):
     cfg, dims, params = arch
-    actual = sum(np.prod(l.shape) for l in jax.tree.leaves(params))
+    actual = sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(params))
     est = cfg.param_count()
     assert 0.5 * est < actual < 2.0 * est

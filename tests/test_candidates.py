@@ -1,0 +1,213 @@
+"""Candidate-construction tests: the batched frontier-expansion path builder
+(``paths.frontier_paths``) against the recursive DFS oracle
+(``sched.enumerate_paths``), budget-split semantics, degenerate meshes, the
+per-process LRU cache, and tensor-form ``build_candidates`` parity with a
+straightforward list-based reconstruction."""
+import numpy as np
+import pytest
+
+from repro.core import SearchConfig, get_scenario, make_mcm
+from repro.core.paths import (frontier_paths, path_cache_clear,
+                              path_cache_info)
+from repro.core.reconfig import greedy_pack
+from repro.core.scheduler import build_window_sets, get_cost_db
+from repro.core.sched import enumerate_paths
+
+
+def _tuples(paths_arr: np.ndarray) -> list[tuple[int, ...]]:
+    return [tuple(int(c) for c in row) for row in paths_arr]
+
+
+def _mask_of(path, n_words: int) -> int:
+    m = 0
+    for c in path:
+        m |= 1 << int(c)
+    return m
+
+
+# ------------------- oracle parity (6x6, the paper's big mesh) --------------
+
+@pytest.mark.parametrize("length", range(1, 8))
+@pytest.mark.parametrize("cap", [1, 7, 64, 512])
+def test_frontier_matches_dfs_oracle_6x6(length, cap):
+    """Identical path *sequence* (not just set) under the same budget, from
+    both the scheduling-tree roots and the fallback roots."""
+    mcm = make_mcm("het_cross", rows=6, cols=6, n_pe=4096)
+    ports = mcm.dram_ports()
+    fallback = [c for c in range(mcm.n_chiplets) if c not in ports]
+    for starts in (ports, fallback):
+        ref = enumerate_paths(mcm, length, list(starts), cap=cap)
+        got, words = frontier_paths(6, 6, length, starts, cap=cap)
+        assert _tuples(got) == ref
+        # occupancy words match engine.py packing exactly
+        n_words = words.shape[1]
+        for row, wrow in zip(got, words):
+            expect = _mask_of(row, n_words)
+            packed = sum(int(v) << (64 * w) for w, v in enumerate(wrow))
+            assert packed == expect
+
+
+def test_budget_split_semantics_match_dfs():
+    """cap // len(starts) uses the *raw* start list (duplicates included),
+    while enumeration runs over the deduplicated pool — exactly like the
+    DFS oracle."""
+    mcm = make_mcm("het_cb", rows=4, cols=4, n_pe=256)
+    ports = mcm.dram_ports()
+    dup_starts = [ports[0]] + ports          # duplicate first root
+    for cap in (1, 5, len(dup_starts), 64):
+        ref = enumerate_paths(mcm, 4, list(dup_starts), cap=cap)
+        got, _ = frontier_paths(4, 4, 4, dup_starts, cap=cap)
+        assert _tuples(got) == ref
+    # per-start allocation: a cap below the start count still yields one
+    # path per start (budget floor of 1), bit-identical to the oracle
+    tiny_ref = enumerate_paths(mcm, 3, list(ports), cap=2)
+    tiny_got, _ = frontier_paths(4, 4, 3, ports, cap=2)
+    assert _tuples(tiny_got) == tiny_ref
+    assert len(tiny_got) == len(ports)
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 8), (8, 1), (2, 2), (1, 1)])
+def test_degenerate_meshes(rows, cols):
+    """1xN chains (dead-end heavy) and the 2x2 all-ports package."""
+    mcm = make_mcm("simba_nvdla", rows=rows, cols=cols, n_pe=256)
+    ports = mcm.dram_ports()
+    fallback = [c for c in range(mcm.n_chiplets) if c not in ports]
+    for starts in (ports, fallback):
+        for length in range(1, rows * cols + 2):
+            ref = enumerate_paths(mcm, length, list(starts), cap=64)
+            got, _ = frontier_paths(rows, cols, length, starts, cap=64)
+            assert _tuples(got) == ref, (rows, cols, length, len(starts))
+    # longer than any self-avoiding path -> empty, not an error
+    too_long, _ = frontier_paths(rows, cols, rows * cols + 1, ports, cap=64)
+    assert too_long.shape[0] == 0
+
+
+def test_empty_starts_and_zero_length():
+    got, words = frontier_paths(3, 3, 4, [], cap=64)
+    assert got.shape[0] == 0 and words.shape[0] == 0
+    got, _ = frontier_paths(3, 3, 0, [0, 2], cap=64)
+    assert got.shape[0] == 0
+
+
+def test_stratified_sampling_bounds_frontier_and_keeps_all_starts():
+    """With a tiny frontier_cap the builder must still return up to
+    per_start paths for every start, each one a valid self-avoiding path
+    drawn from the exhaustive set."""
+    mcm = make_mcm("het_cb", rows=6, cols=6, n_pe=256)
+    ports = mcm.dram_ports()
+    cap = 120                                # per_start = 10
+    full = set(enumerate_paths(mcm, 6, list(ports), cap=10**9))
+    got, _ = frontier_paths(6, 6, 6, ports, cap=cap, frontier_cap=64)
+    tuples = _tuples(got)
+    assert 0 < len(tuples) <= cap
+    assert set(tuples) <= full               # sampled, never invented
+    assert len(set(t[0] for t in tuples)) == len(ports)  # every root lives
+    per_start = cap // len(ports)
+    counts = {s: 0 for s in ports}
+    for t in tuples:
+        counts[t[0]] += 1
+    assert all(c <= per_start for c in counts.values())
+
+
+def test_list_form_set_derives_masks_from_paths():
+    """A legacy list-form ModelCandidateSet without masks still packs
+    occupancy words (masks derived from paths on demand)."""
+    from repro.core.engine import CandidateTensors, ModelCandidateSet
+    cs = ModelCandidateSet(
+        model_idx=0, start=0, end=2, lat=np.array([1.0, 2.0]),
+        energy=np.array([3.0, 4.0]), seg_ends_abs=[(1, 2), (1, 2)],
+        paths=[(0, 1), (3, 4)])
+    assert cs.mask_ints() == [0b11, 0b11000]
+    ct = CandidateTensors.from_sets([cs], 9)
+    assert ct.masks[0, 0, 0] == np.uint64(0b11)
+    assert ct.masks[0, 1, 0] == np.uint64(0b11000)
+
+
+# ------------------------------ LRU cache -----------------------------------
+
+def test_path_cache_hits_and_readonly():
+    path_cache_clear()
+    a1, w1 = frontier_paths(5, 5, 4, [0, 4], cap=64)
+    info = path_cache_info()
+    assert info["misses"] == 1 and info["hits"] == 0
+    a2, w2 = frontier_paths(5, 5, 4, [0, 4], cap=64)
+    assert a2 is a1 and w2 is w1             # served from cache
+    assert path_cache_info()["hits"] == 1
+    assert not a1.flags.writeable and not w1.flags.writeable
+    with pytest.raises(ValueError):
+        a1[0, 0] = 0
+    # different cap -> different key
+    frontier_paths(5, 5, 4, [0, 4], cap=32)
+    assert path_cache_info()["misses"] == 2
+    path_cache_clear()
+    assert path_cache_info() == {"size": 0, "maxsize": 256,
+                                 "hits": 0, "misses": 0}
+
+
+# ------------------- tensor build_candidates reconstruction -----------------
+
+def test_build_candidates_tensor_form_matches_list_reconstruction():
+    """The tensor assembly in ``sched.build_candidates`` must order
+    (segmentation x tier x path) blocks and pack masks exactly like the
+    original list-based construction over ``enumerate_paths``."""
+    sc = get_scenario("xr7_ar_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    cfg = SearchConfig()
+    db = get_cost_db(sc, mcm)
+    wa = greedy_pack(db, mcm.class_counts(), cfg.n_splits)
+    sets = build_window_sets(db, mcm, cfg, wa.ranges[0], {})
+    n_words = max(1, (mcm.n_chiplets + 63) // 64)
+    for cs in sets:
+        assert cs.chips is not None          # tensor-form on the hot path
+        assert cs.chips.dtype == np.int16
+        paths = cs.path_list()
+        masks = cs.mask_ints()
+        assert len(paths) == len(masks) == cs.n_cands
+        words = cs.words(n_words)
+        for i, (p, m) in enumerate(zip(paths, masks)):
+            assert m == _mask_of(p, n_words)
+            assert sum(int(v) << (64 * w)
+                       for w, v in enumerate(words[i])) == m
+            se = cs.seg_end(i)
+            assert len(se) == len(p)         # one chiplet per segment
+            assert cs.start < se[-1] <= cs.end
+        # candidates are (tier, score)-sorted with tier-0 paths rooted at
+        # scheduling-tree roots (DRAM ports or the locality anchor)
+        roots = set(mcm.dram_ports())
+        tier0 = [p for p in paths if p[0] in roots]
+        assert paths[:len(tier0)] == tier0
+
+
+def test_schedule_identical_across_list_and_tensor_paths():
+    """End-to-end determinism guard: two runs (cold vs warm path cache)
+    produce identical schedules."""
+    from repro.core import schedule
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    cfg = SearchConfig(seed=3)
+    path_cache_clear()
+    out1 = schedule(sc, mcm, cfg)
+    out2 = schedule(sc, mcm, cfg)            # warm cache
+    assert out1.result.latency == out2.result.latency
+    assert out1.result.energy == out2.result.energy
+    assert [w.plan for w in out1.windows] == [w.plan for w in out2.windows]
+
+
+def test_large_mesh_candidates_feasible():
+    """8x8 and 16x16 pods: construction stays bounded and the scheduler's
+    candidate sets are non-empty with exact multi-word masks."""
+    sc = get_scenario("xr7_ar_gaming")
+    cfg = SearchConfig(path_cap=256, seg_cap=64)
+    for rows in (8, 16):
+        mcm = make_mcm("het_cb", rows=rows, cols=rows, n_pe=256)
+        db = get_cost_db(sc, mcm)
+        wa = greedy_pack(db, mcm.class_counts(), cfg.n_splits)
+        sets = build_window_sets(db, mcm, cfg, wa.ranges[0], {})
+        n_words = max(1, (mcm.n_chiplets + 63) // 64)
+        assert n_words == (1 if rows == 8 else 4)
+        for cs in sets:
+            assert cs.n_cands > 0
+            words = cs.words(n_words)
+            assert words.shape == (cs.n_cands, n_words)
+            # every path stays inside the mesh
+            assert cs.chips.max() < mcm.n_chiplets

@@ -5,26 +5,26 @@ import pytest
 from repro.core import OpType, get_scenario, make_mcm
 from repro.core.maestro import build_cost_db, expected_latency
 from repro.core.modelzoo import REGISTRY, get_model
-from repro.core.workload import Layer, attn_layer, conv, gemm
+from repro.core.workload import attn_layer, conv, gemm
 
 
 def test_gemm_macs_and_bytes():
-    l = gemm("g", M=128, N=256, K=512, B=4)
-    assert l.macs == 4 * 128 * 256 * 512
-    assert l.weight_bytes == 512 * 256
-    assert l.in_bytes == 4 * 128 * 512
-    assert l.out_bytes == 4 * 128 * 256
+    lay = gemm("g", M=128, N=256, K=512, B=4)
+    assert lay.macs == 4 * 128 * 256 * 512
+    assert lay.weight_bytes == 512 * 256
+    assert lay.in_bytes == 4 * 128 * 512
+    assert lay.out_bytes == 4 * 128 * 256
 
 
 def test_conv_macs():
-    l = conv("c", N=2, C=64, K=128, Y=56, X=56, R=3)
-    assert l.macs == 2 * 64 * 128 * 56 * 56 * 9
+    lay = conv("c", N=2, C=64, K=128, Y=56, X=56, R=3)
+    assert lay.macs == 2 * 64 * 128 * 56 * 56 * 9
 
 
 def test_attn_layer_fuses_score_and_context():
-    l = attn_layer("a", batch=2, heads=8, sl_q=128, sl_kv=128, head_dim=64)
-    assert l.macs == 2 * 8 * 128 * 128 * 64 * 2
-    assert l.weight_bytes == 0
+    lay = attn_layer("a", batch=2, heads=8, sl_q=128, sl_kv=128, head_dim=64)
+    assert lay.macs == 2 * 8 * 128 * 128 * 64 * 2
+    assert lay.weight_bytes == 0
 
 
 def test_gpt_l_layer_count_matches_table_iii():
@@ -38,7 +38,7 @@ def test_bert_l_layer_count_matches_table_iii():
 def test_unet_has_23_convs():
     m = get_model("u-net")
     assert len(m) == 23
-    assert all(l.op == OpType.CONV for l in m.layers)
+    assert all(lay.op == OpType.CONV for lay in m.layers)
 
 
 @pytest.mark.parametrize("name", sorted(REGISTRY))
@@ -46,10 +46,10 @@ def test_every_zoo_model_builds_with_batch(name):
     m = get_model(name, batch=4)
     assert len(m.layers) > 0
     assert m.total_macs > 0
-    for l in m.layers:
-        assert l.macs >= 0
-        assert l.in_bytes > 0
-        assert l.out_bytes > 0
+    for lay in m.layers:
+        assert lay.macs >= 0
+        assert lay.in_bytes > 0
+        assert lay.out_bytes > 0
 
 
 def test_batch_scales_macs():

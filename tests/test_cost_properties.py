@@ -29,10 +29,10 @@ SHI = ChipletClass(Dataflow.SHIDIANNAO, n_pe=256)
 @settings(max_examples=60, deadline=None)
 def test_gemm_latency_positive_and_supra_ideal(m, n, k, b):
     """Cycles are >= MACs / N_PE on every dataflow (can't beat the PEs)."""
-    l = gemm("g", M=m, N=n, K=k, B=b)
+    lay = gemm("g", M=m, N=n, K=k, B=b)
     for cls in (NV, SHI):
-        cyc = compute_cycles(l, cls)
-        assert cyc >= l.macs / cls.n_pe
+        cyc = compute_cycles(lay, cls)
+        assert cyc >= lay.macs / cls.n_pe
 
 
 @given(scale=st.integers(1, 6))

@@ -75,7 +75,7 @@ def test_batched_fitness_matches_scalar_reference():
     sets, _ = windows[0]
     ct = CandidateTensors.from_sets(sets, mcm.n_chiplets)
     rng = np.random.default_rng(0)
-    sizes = np.array([len(cs.paths) for cs in sets])
+    sizes = np.array([cs.n_cands for cs in sets])
     picks = np.stack([rng.integers(0, sizes) for _ in range(64)])
     for metric in ("latency", "energy", "edp"):
         fit, _, _, _ = batched_fitness(ct, picks, metric)
@@ -107,17 +107,20 @@ def test_ea_overlap_repair_fallback():
     a, b = sets[0], sets[1]
 
     def truncate(cs, idx):
+        # list-form construction: exercises the legacy representation the
+        # tensor accessors are derived from
         return ModelCandidateSet(
             model_idx=cs.model_idx, start=cs.start, end=cs.end,
-            seg_ends_abs=[cs.seg_ends_abs[i] for i in idx],
-            paths=[cs.paths[i] for i in idx],
-            masks=[cs.masks[i] for i in idx],
+            seg_ends_abs=[cs.seg_end(i) for i in idx],
+            paths=[cs.path(i) for i in idx],
+            masks=[cs.mask_ints()[i] for i in idx],
             lat=cs.lat[list(idx)], energy=cs.energy[list(idx)], keep=cs.keep)
 
     # model B's pick 0 overlaps model A's only candidate; pick 1 is disjoint
-    overlap_i = next(i for i, m in enumerate(b.masks) if m & a.masks[0])
-    disjoint_i = next(i for i, m in enumerate(b.masks)
-                      if not (m & a.masks[0]))
+    overlap_i = next(i for i, m in enumerate(b.mask_ints())
+                     if m & a.mask_ints()[0])
+    disjoint_i = next(i for i, m in enumerate(b.mask_ints())
+                      if not (m & a.mask_ints()[0]))
     ta = truncate(a, [0])
     tb = truncate(b, [overlap_i, disjoint_i])
     # population of one, no mutation: the EA can never leave picks == (0, 0)

@@ -1,7 +1,6 @@
 """Portfolio sweep runner: grid construction, inline and process-parallel
 execution, result ordering and parity."""
 import numpy as np
-import pytest
 
 from repro.core import SearchConfig
 from repro.core.portfolio import (SweepJob, run_portfolio, sweep_grid)
