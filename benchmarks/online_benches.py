@@ -1,0 +1,77 @@
+"""Online-subsystem benchmarks: re-plan latency and warm-vs-cold speedup."""
+from __future__ import annotations
+
+import statistics
+
+from .common import emit, timer
+
+
+def _plans(epoch):
+    if epoch.outcome is None:
+        return None
+    return tuple(wr.plan for wr in epoch.outcome.windows)
+
+
+def bench_online_rescheduling() -> None:
+    """Trace-driven re-scheduling on 6x6 datacenter churn.
+
+    Replays the ``dc_churn_6x6`` preset twice — cold oracle (every epoch
+    re-planned from scratch, caches cleared) then warm incremental
+    (persistent CostDB/path caches + plan/window/candidate memoisation) —
+    asserts per-epoch *bit-identical* plans, and guards the >=3x median
+    re-plan speedup the warm path must keep delivering.
+    """
+    from repro.core import SearchConfig, get_trace
+    from repro.online.metrics import qos_report
+    from repro.online.simulator import simulate
+
+    trace = get_trace("dc_churn_6x6")
+    kw = dict(pattern="het_cross", rows=6, cols=6, n_pe=4096,
+              cfg=SearchConfig(path_cap=64, seg_cap=128))
+    with timer() as t_cold:
+        cold = simulate(trace, mode="cold", **kw)
+    with timer() as t_warm:
+        warm = simulate(trace, mode="warm", **kw)
+
+    assert len(cold.epochs) == len(warm.epochs)
+    for ec, ew in zip(cold.epochs, warm.epochs):
+        assert _plans(ec) == _plans(ew), (
+            f"warm re-plan diverged from the cold oracle in epoch "
+            f"[{ec.t_start}, {ec.t_end})")
+
+    cold_ms = [e.replan_wall_s * 1e3 for e in cold.epochs if e.outcome]
+    warm_ms = [e.replan_wall_s * 1e3 for e in warm.epochs if e.outcome]
+    cold_med = statistics.median(cold_ms)
+    warm_med = statistics.median(warm_ms)
+    speedup = cold_med / warm_med
+    rep = qos_report(warm)
+    emit("online_rescheduling_6x6", warm_med * 1e3,
+         f"warm_speedup={speedup:.2f}x;cold_median_ms={cold_med:.2f};"
+         f"warm_median_ms={warm_med:.3f};replans={len(warm_ms)};"
+         f"memo_hits={warm.n_memo_hits};"
+         f"overhead_ratio={rep.overhead_ratio:.4f};"
+         f"cold_wall_s={t_cold.us / 1e6:.1f};"
+         f"warm_wall_s={t_warm.us / 1e6:.1f};target=3x")
+    assert speedup >= 3.0, (
+        f"warm incremental re-scheduling regressed to {speedup:.2f}x vs the "
+        f"cold oracle (target >=3x)")
+
+
+def bench_online_cadence() -> None:
+    """AR/VR frame-cadence replay: deadline-miss rates at paper rates."""
+    from repro.core import SearchConfig, get_trace
+    from repro.online.metrics import qos_report
+    from repro.online.simulator import simulate
+
+    trace = get_trace("xr8_cadence")
+    with timer() as t:
+        sim = simulate(trace, pattern="het_sides", rows=3, cols=3, n_pe=256,
+                       cfg=SearchConfig())
+    rep = qos_report(sim)
+    parts = [f"{m.model}:p99={m.p99_latency:.3g},miss={m.miss_rate:.2f}"
+             for m in rep.per_model]
+    emit("online_cadence_xr8", t.us,
+         f"frames={len(sim.frames)};" + ";".join(parts))
+
+
+ALL = [bench_online_rescheduling, bench_online_cadence]

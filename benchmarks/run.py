@@ -40,8 +40,8 @@ def main() -> None:
                     help="write per-bench BENCH_<name>.json files here")
     args = ap.parse_args()
 
-    from . import paper_benches, system_benches
-    benches = paper_benches.ALL + system_benches.ALL
+    from . import online_benches, paper_benches, system_benches
+    benches = paper_benches.ALL + system_benches.ALL + online_benches.ALL
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0

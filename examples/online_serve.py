@@ -1,0 +1,67 @@
+"""Online serving demo: replay a dynamic trace through the SCAR scheduler.
+
+Datacenter churn (tenants arriving/departing, incremental re-scheduling at
+every epoch boundary) or AR/VR frame cadences (models firing at their paper
+Hz with one-period deadlines):
+
+    PYTHONPATH=src python examples/online_serve.py --trace dc_churn_smoke
+    PYTHONPATH=src python examples/online_serve.py --trace xr8_cadence \\
+        --pattern het_sides --rows 3 --cols 3 --n-pe 256
+
+``--mode cold`` runs the from-scratch oracle instead of the warm
+incremental path (same plans, slower — useful for sanity checks).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import TRACE_PRESETS, SearchConfig, get_trace
+from repro.online import qos_report, simulate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default="dc_churn_smoke",
+                    choices=sorted(TRACE_PRESETS))
+    ap.add_argument("--pattern", default="het_cross")
+    ap.add_argument("--rows", type=int, default=6)
+    ap.add_argument("--cols", type=int, default=6)
+    ap.add_argument("--n-pe", type=int, default=4096)
+    ap.add_argument("--mode", default="warm", choices=["warm", "cold"])
+    ap.add_argument("--path-cap", type=int, default=64)
+    ap.add_argument("--seg-cap", type=int, default=128)
+    args = ap.parse_args()
+
+    trace = get_trace(args.trace)
+    print(f"trace {trace.name}: kind={trace.kind} horizon={trace.horizon}s "
+          f"events={trace.n_events}")
+    sim = simulate(trace, pattern=args.pattern, rows=args.rows,
+                   cols=args.cols, n_pe=args.n_pe, mode=args.mode,
+                   cfg=SearchConfig(path_cap=args.path_cap,
+                                    seg_cap=args.seg_cap))
+    if trace.kind == "churn":
+        for e in sim.epochs:
+            mix = ",".join(f"{name}" for _, name, _ in e.tenants) or "<idle>"
+            tag = "memo" if e.memo_hit else f"{e.replan_wall_s * 1e3:.1f}ms"
+            print(f"  [{e.t_start:7.2f}s -> {e.t_end:7.2f}s] "
+                  f"{len(e.tenants)} tenants ({mix}) "
+                  f"iters={e.iterations:7.1f} replan={tag}")
+    rep = qos_report(sim)
+    print(f"\nQoS ({rep.mode}): epochs={rep.n_epochs} "
+          f"replans={rep.n_replans} memo_hits={rep.n_memo_hits} "
+          f"replan_wall={rep.replan_wall_s:.2f}s "
+          f"overhead={rep.overhead_ratio:.2%}")
+    print(f"energy={rep.total_energy:.4g}J busy={rep.busy_s:.2f}s "
+          f"aggregate_edp={rep.aggregate_edp:.4g}")
+    for m in rep.per_model:
+        miss = "" if m.miss_rate is None else f"  miss_rate={m.miss_rate:.2%}"
+        print(f"  {m.model:12s} n={m.n_samples:8.1f} "
+              f"p50={m.p50_latency * 1e3:7.2f}ms "
+              f"p99={m.p99_latency * 1e3:7.2f}ms{miss}")
+
+
+if __name__ == "__main__":
+    main()

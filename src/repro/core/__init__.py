@@ -6,8 +6,10 @@ from .cost import (ModelWindowPlan, ScheduleResult, WindowPlan, WindowResult,
 from .maestro import CostDB, build_cost_db, expected_latency
 from .reconfig import greedy_pack, uniform_pack, validate_assignment
 from .provision import provision
-from .scheduler import (ScheduleOutcome, SearchConfig, run_config, schedule,
+from .scheduler import (ScheduleOutcome, SearchConfig, final_anchors,
+                        run_config, schedule, schedule_incremental,
                         standalone_schedule)
-from .scenarios import ARVR, DATACENTER, SCENARIO_NAMES, all_scenarios, get_scenario
+from .scenarios import (ARVR, DATACENTER, SCENARIO_NAMES, TRACE_PRESETS,
+                        all_scenarios, get_scenario, get_trace)
 from .workload import Layer, Model, OpType, Scenario
 from .refine import refine

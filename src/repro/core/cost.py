@@ -202,10 +202,17 @@ def evaluate_window(db: CostDB, mcm: MCM, wp: WindowPlan,
 
 def evaluate_schedule(db: CostDB, mcm: MCM,
                       windows: Sequence[WindowPlan],
-                      validate: bool = False) -> ScheduleResult:
-    """Lat(Sc) = sum over windows; E(Sc) = sum (Sec. III-E/F)."""
+                      validate: bool = False,
+                      prev_end: Optional[dict[int, int]] = None
+                      ) -> ScheduleResult:
+    """Lat(Sc) = sum over windows; E(Sc) = sum (Sec. III-E/F).
+
+    ``prev_end`` seeds the cross-window data-locality anchors before the
+    first window — the online re-scheduler uses it to account activations a
+    persisting tenant left on-package at the previous epoch boundary.
+    """
     results = []
-    prev_end: dict[int, int] = {}
+    prev_end = dict(prev_end) if prev_end else {}
     for wp in windows:
         res = evaluate_window(db, mcm, wp, prev_end, validate=validate)
         results.append(res)

@@ -7,13 +7,17 @@ first-class, process-parallel subsystem instead of a hand-rolled ``for`` in
 every caller:
 
 * ``SweepJob`` is one picklable grid point (pattern name + mesh size + cfg
-  overrides, never live objects, so jobs ship cheaply to workers).
+  overrides, never live objects, so jobs ship cheaply to workers);
+  ``TraceJob`` is its online analogue (a ``scenarios.TRACE_PRESETS`` trace
+  replayed through ``repro.online.simulate``).
 * ``run_portfolio`` executes a job list inline (``processes<=1``) or on a
-  spawn-based process pool; each worker rebuilds its own ``CostDB`` cache.
-* ``sweep_grid`` builds the full cross product for you.
+  spawn-based process pool; jobs are dispatched grouped by CostDB affinity
+  so identical (scenario/trace, MCM) points share one worker's warm caches.
+* ``sweep_grid`` / ``trace_sweep_grid`` build the full cross products.
 
 Results come back as ``SweepResult`` records carrying the full
-``ScheduleOutcome`` plus wall time, in the same order as the submitted jobs.
+``ScheduleOutcome`` plus wall time (``TraceResult`` with a ``QoSReport`` for
+trace jobs), in the same order as the submitted jobs.
 """
 from __future__ import annotations
 
@@ -58,13 +62,70 @@ class SweepResult:
     wall_s: float
 
 
-def _run_job(job: SweepJob) -> SweepResult:
+@dataclasses.dataclass(frozen=True)
+class TraceJob:
+    """One online-trace replay (preset name -> ``repro.online.simulate``).
+
+    The portfolio treats traces like scenarios: a picklable grid point that
+    workers expand locally.  ``mode`` selects the warm incremental
+    re-scheduler or the cold from-scratch oracle."""
+
+    trace: str                           # scenarios.TRACE_PRESETS name
+    pattern: str
+    rows: int = 6
+    cols: int = 6
+    n_pe: int = 4096
+    mode: str = "warm"
+    cfg: Optional[SearchConfig] = None
+    label: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        if self.label is not None:
+            return self.label
+        return (f"{self.trace}/{self.pattern}_{self.rows}x{self.cols}"
+                f"/{self.mode}")
+
+
+@dataclasses.dataclass
+class TraceResult:
+    """QoS report of one trace replay (the ``SweepResult`` analogue)."""
+
+    job: TraceJob
+    report: "object"                     # repro.online.metrics.QoSReport
+    wall_s: float
+
+
+def _run_job(job):
     t0 = time.time()
+    if isinstance(job, TraceJob):
+        # lazy: repro.online depends on repro.core, so importing it at
+        # module load would be circular
+        from repro.online.metrics import qos_report
+        from repro.online.simulator import simulate
+        from .scenarios import get_trace
+        sim = simulate(get_trace(job.trace), pattern=job.pattern,
+                       rows=job.rows, cols=job.cols, n_pe=job.n_pe,
+                       cfg=job.cfg, mode=job.mode)
+        return TraceResult(job=job, report=qos_report(sim),
+                           wall_s=time.time() - t0)
     sc = get_scenario(job.scenario)
     outcome = run_config(sc, job.pattern, rows=job.rows, cols=job.cols,
                          n_pe=job.n_pe, cfg=job.cfg,
                          standalone=job.standalone)
     return SweepResult(job=job, outcome=outcome, wall_s=time.time() - t0)
+
+
+def _db_affinity(job) -> tuple:
+    """Grouping key: jobs sharing it want the same per-worker CostDB/path
+    caches (same scenario-or-trace, package geometry and PE budget)."""
+    src = job.trace if isinstance(job, TraceJob) else job.scenario
+    return (src, job.pattern, job.rows, job.cols, job.n_pe)
+
+
+def _run_batch(batch: list) -> list:
+    """Worker-side: run one affinity group in order (shared warm caches)."""
+    return [_run_job(j) for j in batch]
 
 
 def _init_worker(path: list[str]) -> None:
@@ -84,26 +145,52 @@ def default_processes() -> int:
     return max(1, min(os.cpu_count() or 1, 8))
 
 
-def run_portfolio(jobs: list[SweepJob],
-                  processes: Optional[int] = None) -> list[SweepResult]:
-    """Run every job; results align with the input order.
+def run_portfolio(jobs: list,
+                  processes: Optional[int] = None) -> list:
+    """Run every job (``SweepJob`` or ``TraceJob``); results align with the
+    input order.
 
     ``processes``: None -> ``default_processes()``; <=1 -> inline in this
     process (no pool, easiest to debug); otherwise a spawn-based pool, which
     sidesteps fork-safety issues with an already-initialised JAX runtime in
     the parent.
+
+    Jobs are submitted grouped by ``_db_affinity`` in contiguous chunks, so
+    jobs sharing a (scenario/trace, MCM) land on the same worker and hit its
+    per-process CostDB/path caches instead of every worker rebuilding the
+    same database (the old round-robin ``chunksize=1`` dispatch paid the
+    build once per worker per grid point).
     """
     if processes is None:
         processes = default_processes()
     processes = min(processes, len(jobs)) if jobs else 1
     if processes <= 1:
         return [_run_job(j) for j in jobs]
+    import math
     import multiprocessing as mp
+    groups: dict[tuple, list[int]] = {}
+    for i, j in enumerate(jobs):
+        groups.setdefault(_db_affinity(j), []).append(i)
+    # one pool task per affinity group, but split oversized groups into
+    # fair-share sub-chunks so a sweep whose jobs all share one (scenario,
+    # MCM) — e.g. a metric or warm/cold mode axis — still parallelises
+    # (the caches are per-process, so every sub-chunk re-warms its own)
+    cap = max(1, math.ceil(len(jobs) / processes))
+    batches = []
+    for idxs in groups.values():
+        for s in range(0, len(idxs), cap):
+            batches.append(idxs[s:s + cap])
     ctx = mp.get_context("spawn")
     with ProcessPoolExecutor(max_workers=processes, mp_context=ctx,
                              initializer=_init_worker,
                              initargs=(list(sys.path),)) as pool:
-        return list(pool.map(_run_job, jobs))
+        outs = list(pool.map(_run_batch,
+                             [[jobs[i] for i in idxs] for idxs in batches]))
+    results: list = [None] * len(jobs)
+    for idxs, out in zip(batches, outs):
+        for i, r in zip(idxs, out):
+            results[i] = r
+    return results
 
 
 def sweep_grid(scenarios: list[str], patterns: list[str],
@@ -143,4 +230,30 @@ def sweep_grid(scenarios: list[str], patterns: list[str],
                                          rows=mrows, cols=mcols, n_pe=npe,
                                          cfg=SearchConfig(metric=metric,
                                                           **cfg_kw)))
+    return jobs
+
+
+def trace_sweep_grid(traces: list[str], patterns: list[str],
+                     rows: int = 6, cols: int = 6, n_pe: int = 4096,
+                     modes: tuple[str, ...] = ("warm",),
+                     meshes: Optional[list] = None,
+                     **cfg_kw) -> list[TraceJob]:
+    """Cross product trace x mesh x pattern x mode -> online job list.
+
+    The online analogue of ``sweep_grid``: sweeps dynamic traces (preset
+    names from ``scenarios.TRACE_PRESETS``) instead of static scenarios.
+    """
+    if meshes is None:
+        mesh_list = [(rows, cols)]
+    else:
+        mesh_list = [mesh_shape(m) if isinstance(m, str) else tuple(m)
+                     for m in meshes]
+    jobs = []
+    for tr in traces:
+        for mrows, mcols in mesh_list:
+            for pat in patterns:
+                for mode in modes:
+                    jobs.append(TraceJob(trace=tr, pattern=pat, rows=mrows,
+                                         cols=mcols, n_pe=n_pe, mode=mode,
+                                         cfg=SearchConfig(**cfg_kw)))
     return jobs

@@ -53,10 +53,64 @@ def mesh_shape(preset: str) -> tuple[int, int]:
                        f"have {sorted(MESH_PRESETS)}") from None
 
 
+# Online trace presets (the dynamic analogue of the static Table II rows).
+# Values are the generator parameters of ``repro.online.traces``; build one
+# with ``get_trace``.  Times are simulated seconds.  ``dc_churn_6x6`` is the
+# bench/fixture workload (datacenter tenants on a 6x6 package);
+# ``dc_churn_smoke`` is the short nightly/CI variant; the ``*_cadence``
+# presets replay Table II AR/VR scenarios at their paper frame rates.
+# Tenant zoo the churn presets sample from: a 4-entry subset of the full
+# Table II datacenter zoo (``repro.online.traces.DC_TENANT_ZOO``, the
+# generator default), chosen so realistic mix recurrence shows up within a
+# bench-sized horizon.  Changing it invalidates the committed fixtures and
+# the online bench baseline — regenerate both together.
+_DC_CHURN_ZOO = (("gpt-l", 1), ("bert-l", 3), ("bert-base", 24),
+                 ("resnet-50", 32))
+TRACE_PRESETS: dict[str, dict] = {
+    "dc_churn_6x6": dict(kind="churn", seed=17, horizon=60.0,
+                         arrival_rate=1.0, mean_lifetime=2.5, max_active=3,
+                         zoo=_DC_CHURN_ZOO),
+    "dc_churn_smoke": dict(kind="churn", seed=3, horizon=10.0,
+                           arrival_rate=1.0, mean_lifetime=2.0, max_active=2,
+                           zoo=_DC_CHURN_ZOO),
+    "xr8_cadence": dict(kind="cadence", scenario="xr8_outdoors", horizon=0.5),
+    "xr6_cadence": dict(kind="cadence", scenario="xr6_ar_assistant",
+                        horizon=0.5),
+}
+
+
+def get_trace(preset: str):
+    """Build the named online trace preset (a ``repro.online.traces.Trace``).
+
+    Imported lazily: ``repro.online`` depends on this package, so the trace
+    generators can't be imported at module load without a cycle.
+    """
+    from repro.online.traces import frame_cadence_trace, poisson_churn_trace
+    try:
+        spec = dict(TRACE_PRESETS[preset])
+    except KeyError:
+        raise KeyError(f"unknown trace preset {preset!r}; "
+                       f"have {sorted(TRACE_PRESETS)}") from None
+    kind = spec.pop("kind")
+    if kind == "churn":
+        return poisson_churn_trace(name=preset, **spec)
+    return frame_cadence_trace(name=preset, **spec)
+
+
 def get_scenario(name: str) -> Scenario:
     for sname, _, spec in _TABLE_II:
         if sname == name:
             return Scenario(sname, tuple(get_model(m, b) for m, b in spec))
+    raise KeyError(f"unknown scenario {name!r}; have {SCENARIO_NAMES}")
+
+
+def scenario_spec(name: str) -> list[tuple[str, int]]:
+    """Table II row as (model-zoo key, batch) pairs — the zoo keys the
+    online layer needs to rebuild models, vs the display names on
+    ``Model.name``."""
+    for sname, _, spec in _TABLE_II:
+        if sname == name:
+            return list(spec)
     raise KeyError(f"unknown scenario {name!r}; have {SCENARIO_NAMES}")
 
 

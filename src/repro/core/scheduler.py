@@ -10,6 +10,7 @@ homogeneous MCM; just pass a homogeneous pattern).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -42,9 +43,11 @@ class SearchConfig:
     max_nodes_per_model: Optional[int] = 6   # Heuristic 2 user cap
     ea_population: int = 10             # paper Sec. V-A
     ea_generations: int = 4
-    anneal_iters: int = 200             # algo="anneal" knobs (beyond-paper)
-    anneal_chains: int = 24
-    anneal_temperature: float = 0.05
+    anneal_iters: int = 200             # algo="anneal" knobs (beyond-paper);
+    anneal_chains: int = 48             # tuned on 6x6/8x8 dc4 via
+    anneal_temperature: float = 0.05    # bench_engine_comparison: 48 chains
+    #                                     edges out 24 at modest cost; more
+    #                                     iters / hotter chains don't pay
     seed: int = 0
     refine_iters: int = 0               # beyond-paper anneal refinement
 
@@ -64,47 +67,109 @@ class ScheduleOutcome:
         return self.result.edp
 
 
-_DB_CACHE: dict[tuple, CostDB] = {}
+# Per-process CostDB memo.  LRU-bounded so long online traces (one distinct
+# active set per churn epoch) can't grow it without bound.
+_DB_CACHE: "collections.OrderedDict[tuple, CostDB]" = collections.OrderedDict()
+_DB_CACHE_MAX = 128
+
+
+def cost_db_key(sc: Scenario, mcm: MCM) -> tuple:
+    """Cache identity of a (scenario, MCM) cost database (content-based, so
+    identical model mixes share an entry regardless of object identity)."""
+    return (sc.name,
+            tuple((m.name, len(m.layers), m.batch) for m in sc.models),
+            tuple((c.dataflow.value, c.n_pe) for c in mcm.classes),
+            mcm.pkg)  # PackageParams is frozen -> hashable
 
 
 def get_cost_db(sc: Scenario, mcm: MCM) -> CostDB:
-    key = (sc.name,
-           tuple((m.name, len(m.layers), m.batch) for m in sc.models),
-           tuple((c.dataflow.value, c.n_pe) for c in mcm.classes),
-           mcm.pkg)  # PackageParams is frozen -> hashable
+    key = cost_db_key(sc, mcm)
     if key not in _DB_CACHE:
         _DB_CACHE[key] = build_cost_db(sc, mcm.classes, mcm.pkg)
+        while len(_DB_CACHE) > _DB_CACHE_MAX:
+            _DB_CACHE.popitem(last=False)
+    else:
+        _DB_CACHE.move_to_end(key)
     return _DB_CACHE[key]
+
+
+def clear_caches() -> None:
+    """Drop every per-process scheduling cache (CostDB memo + path LRU).
+
+    This is what the online re-scheduler's ``cold`` oracle calls before each
+    epoch so its re-plan really is a from-scratch re-schedule."""
+    from .paths import path_cache_clear
+    _DB_CACHE.clear()
+    path_cache_clear()
 
 
 def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
                       ranges: dict[int, tuple[int, int]],
-                      prev_end: dict[int, int]) -> list:
+                      prev_end: dict[int, int],
+                      memo: Optional[dict] = None,
+                      memo_base: Optional[tuple] = None) -> list:
     """PROV + SEG + candidate construction for one window (the stage feeding
     the search engine).  Shared by ``schedule``, benchmarks, and tests so
-    they all measure the exact production pipeline."""
+    they all measure the exact production pipeline.
+
+    ``memo`` (with ``memo_base`` identifying the (scenario, MCM, config))
+    memoises each model's candidate set on its exact subproblem — window
+    range, provisioned nodes, active-model count, locality anchor — which
+    fully determines it, so a hit returns bit-identical candidates.  The
+    online re-scheduler threads its epoch-persistent memo through here; a
+    recurring model mix then only pays the combination search, not
+    SEG + candidate construction (~90% of a 6x6 re-plan)."""
     alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
                       metric=cfg.metric,
                       max_nodes_per_model=cfg.max_nodes_per_model)
     sets = []
     n_active = len(ranges)
     for mi, (s, e) in sorted(ranges.items()):
+        key = None
+        if memo is not None:
+            key = ("cands", memo_base, mi, (s, e), int(alloc[mi]), n_active,
+                   prev_end.get(mi))
+            if key in memo:
+                sets.append(memo[key])
+                continue
         segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
                                    k=cfg.seg_top_k, cap=cfg.seg_cap,
                                    metric=cfg.metric)
-        sets.append(build_candidates(
+        cs = build_candidates(
             db, mcm, mi, (s, e), segs, n_active=n_active,
             prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
             keep=cfg.keep_per_model, metric=cfg.metric,
-            frontier_cap=cfg.frontier_cap))
+            frontier_cap=cfg.frontier_cap)
+        if key is not None:
+            memo[key] = cs
+        sets.append(cs)
     return sets
 
 
 def schedule(sc: Scenario, mcm: MCM,
-             cfg: Optional[SearchConfig] = None) -> ScheduleOutcome:
-    """Run the full SCAR pipeline and return the optimised schedule."""
+             cfg: Optional[SearchConfig] = None, *,
+             db: Optional[CostDB] = None,
+             prev_end: Optional[dict[int, int]] = None,
+             window_memo: Optional[dict] = None) -> ScheduleOutcome:
+    """Run the full SCAR pipeline and return the optimised schedule.
+
+    ``prev_end`` seeds the cross-window data-locality anchors before the
+    first window (model index -> chiplet) — the online re-scheduler passes
+    the chiplets persisting tenants ended on at the previous epoch boundary,
+    so re-planning continues "from the current window boundary" instead of
+    assuming cold DRAM inputs.  ``db`` bypasses the per-process CostDB memo
+    (the cold oracle builds a fresh one).  ``window_memo``, when given, is a
+    dict reused across calls: window search results are memoised on the
+    exact window subproblem (ranges + the anchors visible to it + config),
+    which is a pure function of those inputs, so memoised plans are
+    bit-identical to recomputed ones (see ``schedule_incremental``).
+    """
     cfg = cfg or SearchConfig()
-    db = get_cost_db(sc, mcm)
+    if cfg.refine_iters > 0 and prev_end:
+        raise NotImplementedError(
+            "refine_iters does not support warm-start anchors yet")
+    if db is None:
+        db = get_cost_db(sc, mcm)
     counts = mcm.class_counts()
     if cfg.packing == "greedy":
         wa = greedy_pack(db, counts, cfg.n_splits)
@@ -113,20 +178,39 @@ def schedule(sc: Scenario, mcm: MCM,
     else:
         raise KeyError(cfg.packing)
 
+    # memo identity must cover the package topology too: two patterns can
+    # share a CostDB (same class set + pkg) yet place classes differently
+    memo_base = (cost_db_key(sc, mcm), mcm.rows, mcm.cols,
+                 tuple(mcm.class_map), _cfg_key(cfg)) \
+        if window_memo is not None else None
     window_results: list[WindowSearchResult] = []
-    prev_end: dict[int, int] = {}
+    anchors: dict[int, int] = dict(prev_end or {})
     explored: list[tuple[float, float]] = []
     for w, ranges in enumerate(wa.ranges):
-        sets = build_window_sets(db, mcm, cfg, ranges, prev_end)
-        engine = get_engine(cfg, seed=cfg.seed + w)
-        wr = engine.combine(db, mcm, sets, prev_end, metric=cfg.metric)
+        key = None
+        if memo_base is not None:
+            # a window result depends on anchors only through the models it
+            # actually places, so restrict the key to those
+            vis = tuple(sorted((mi, anchors[mi]) for mi in ranges
+                               if mi in anchors))
+            key = (memo_base, w, tuple(sorted(
+                (mi, s, e) for mi, (s, e) in ranges.items())), vis)
+        if key is not None and key in window_memo:
+            wr = window_memo[key]
+        else:
+            sets = build_window_sets(db, mcm, cfg, ranges, anchors,
+                                     memo=window_memo, memo_base=memo_base)
+            engine = get_engine(cfg, seed=cfg.seed + w)
+            wr = engine.combine(db, mcm, sets, anchors, metric=cfg.metric)
+            if key is not None:
+                window_memo[key] = wr
         window_results.append(wr)
         explored.extend(wr.explored)
-        prev_end = dict(prev_end)
-        prev_end.update(wr.result.end_chiplet)
+        anchors = dict(anchors)
+        anchors.update(wr.result.end_chiplet)
 
     result = evaluate_schedule(db, mcm, [wr.plan for wr in window_results],
-                               validate=True)
+                               validate=True, prev_end=prev_end)
     outcome = ScheduleOutcome(scenario=sc.name, mcm=mcm.name, config=cfg,
                               result=result, windows=window_results,
                               assignment=wa, explored=explored)
@@ -135,6 +219,48 @@ def schedule(sc: Scenario, mcm: MCM,
         outcome = refine(sc, mcm, outcome, metric=cfg.metric,
                          iters=cfg.refine_iters, seed=cfg.seed)
     return outcome
+
+
+def _cfg_key(cfg: SearchConfig) -> tuple:
+    """Hashable identity of every field that shapes a window search."""
+    return tuple(getattr(cfg, f.name) for f in dataclasses.fields(cfg))
+
+
+def final_anchors(outcome: ScheduleOutcome) -> dict[int, int]:
+    """Model index -> chiplet its last window segment ended on (the data-
+    locality state at the schedule's final window boundary)."""
+    anchors: dict[int, int] = {}
+    for wr in outcome.result.windows:
+        anchors.update(wr.end_chiplet)
+    return anchors
+
+
+def schedule_incremental(sc: Scenario, mcm: MCM,
+                         cfg: Optional[SearchConfig] = None,
+                         prior: Optional[ScheduleOutcome] = None,
+                         persisting: Optional[dict[int, int]] = None,
+                         window_memo: Optional[dict] = None
+                         ) -> ScheduleOutcome:
+    """Warm-startable re-scheduling entry point for the online subsystem.
+
+    Re-plans scenario ``sc`` (the *changed* active model set) from the
+    current window boundary of ``prior``: ``persisting`` maps model indices
+    of ``sc`` to the corresponding model indices of the prior schedule's
+    scenario, and each persisting model inherits the chiplet it ended on
+    (its data-locality anchor), so its first-segment activations are charged
+    as on-package transfers instead of DRAM reloads.  ``window_memo``
+    (caller-owned, e.g. ``repro.online.rescheduler.Rescheduler``) lets
+    unchanged window subproblems reuse their search results across epochs;
+    results are bit-identical to a from-scratch ``schedule`` call with the
+    same anchors because memoised entries are keyed on every input of the
+    window search.
+    """
+    carried: dict[int, int] = {}
+    if prior is not None and persisting:
+        final = final_anchors(prior)
+        carried = {new_mi: final[old_mi]
+                   for new_mi, old_mi in persisting.items() if old_mi in final}
+    return schedule(sc, mcm, cfg, prev_end=carried, window_memo=window_memo)
 
 
 def standalone_schedule(sc: Scenario, mcm: MCM) -> ScheduleOutcome:

@@ -1,0 +1,25 @@
+"""Online scheduling subsystem: trace-driven dynamic multi-tenancy.
+
+SCAR's two application settings are inherently dynamic — datacenter tenants
+arrive and depart, AR/VR models fire on per-sensor frame cadences — yet the
+static pipeline plans one fixed Table II scenario and stops.  This package
+adds the discrete-event layer on top of it:
+
+* ``traces``       — seeded trace generators + a serializable Trace/Event IR
+  (Poisson tenant churn over the datacenter model zoo; periodic frame
+  cadences with deadlines for the AR/VR scenarios).
+* ``rescheduler``  — incremental re-scheduling at epoch boundaries through
+  the warm-startable ``scheduler.schedule(prev_end=..., window_memo=...)``
+  entry (warm per-process caches + plan/window/candidate memoisation), with
+  a ``cold`` from-scratch oracle the warm path is parity-tested against.
+* ``simulator``    — the event loop: maintains the active tenant set,
+  re-plans on arrival/departure epochs, and accounts execution between
+  epochs with the exact ``cost.evaluate_schedule`` machinery.
+* ``metrics``      — QoS accounting over a finished simulation: per-model
+  p50/p99 latency, deadline-miss rates, aggregate EDP, re-plan overhead.
+"""
+from .traces import (Event, Trace, frame_cadence_trace,  # noqa: F401
+                     poisson_churn_trace)
+from .rescheduler import Rescheduler, ReplanRecord  # noqa: F401
+from .simulator import EpochRecord, SimResult, simulate  # noqa: F401
+from .metrics import ModelQoS, QoSReport, qos_report  # noqa: F401

@@ -1,0 +1,98 @@
+"""QoS accounting over a finished online simulation.
+
+Metric definitions (documented in ``docs/architecture.md``):
+
+* **per-model p50/p99 latency** — weighted percentiles over the simulation's
+  latency samples.  A sample is (latency, weight): for churn traces one
+  sample per (epoch, tenant) weighted by the iterations served in that
+  epoch; for cadence traces one unit-weight sample per frame (queueing
+  delay included).  The p-th percentile is the smallest sampled latency
+  whose cumulative weight fraction reaches ``p`` (weighted
+  inverted-CDF — deterministic and hand-checkable, no interpolation).
+* **deadline-miss rate** — cadence only: missed frames / total frames per
+  model (a frame misses when completion exceeds arrival + one period).
+* **aggregate EDP** — total package energy x busy time (the online analogue
+  of the static ``ScheduleResult.edp``; idle intervals contribute neither).
+* **scheduler overhead** — planner wall-clock seconds spent re-planning
+  divided by simulated seconds: how much of real time the scheduler would
+  steal from serving if it ran inline on the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .simulator import SimResult
+
+
+def weighted_percentile(samples: list[tuple[float, float]], p: float) -> float:
+    """Smallest value whose cumulative weight fraction reaches ``p`` (0-100)."""
+    if not samples:
+        return 0.0
+    ordered = sorted(samples)
+    total = sum(w for _, w in ordered)
+    if total <= 0:
+        return ordered[0][0]
+    acc = 0.0
+    for v, w in ordered:
+        acc += w
+        if acc >= total * (p / 100.0):
+            return v
+    return ordered[-1][0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelQoS:
+    """QoS of one model name across the whole trace."""
+
+    model: str
+    n_samples: float                   # total sample weight
+    p50_latency: float
+    p99_latency: float
+    miss_rate: Optional[float] = None  # cadence traces only
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSReport:
+    trace: str
+    mode: str
+    per_model: tuple[ModelQoS, ...]
+    total_energy: float
+    busy_s: float
+    aggregate_edp: float
+    n_epochs: int
+    n_replans: int
+    n_memo_hits: int
+    replan_wall_s: float
+    overhead_ratio: float              # replan wall s / simulated s
+
+    def model(self, name: str) -> ModelQoS:
+        for m in self.per_model:
+            if m.model == name:
+                return m
+        raise KeyError(name)
+
+
+def qos_report(sim: SimResult) -> QoSReport:
+    """Fold a ``SimResult`` into the QoS metrics above."""
+    misses: dict[str, list[bool]] = {}
+    for f in sim.frames:
+        misses.setdefault(f.model, []).append(f.missed)
+    per_model = []
+    for name in sorted(sim.latency_samples):
+        s = sim.latency_samples[name]
+        mm = misses.get(name)
+        per_model.append(ModelQoS(
+            model=name,
+            n_samples=sum(w for _, w in s),
+            p50_latency=weighted_percentile(s, 50.0),
+            p99_latency=weighted_percentile(s, 99.0),
+            miss_rate=(sum(mm) / len(mm)) if mm else None))
+    horizon = sim.trace.horizon or 1.0
+    return QoSReport(
+        trace=sim.trace.name, mode=sim.mode, per_model=tuple(per_model),
+        total_energy=sim.total_energy, busy_s=sim.busy_s,
+        aggregate_edp=sim.total_energy * sim.busy_s,
+        n_epochs=len(sim.epochs), n_replans=sim.n_replans,
+        n_memo_hits=sim.n_memo_hits, replan_wall_s=sim.replan_wall_s,
+        overhead_ratio=sim.replan_wall_s / horizon)

@@ -1,0 +1,143 @@
+"""Incremental re-scheduling at epoch boundaries (warm) + cold oracle.
+
+``Rescheduler`` answers one query: *given the tenants active after this
+arrival/departure epoch and where the persisting ones left their
+activations, what is the package schedule from the current window boundary
+onward?*  Two modes sharing identical planning semantics:
+
+* ``warm`` — the production path.  Reuses every per-process cache across
+  epochs (CostDB memo, frontier-path LRU), memoises candidate sets and
+  window search results on their exact subproblem (``scheduler.schedule``'s
+  ``window_memo``), and short-circuits whole re-plans when an
+  (active-set, anchors) state recurs — datacenter churn over a finite model
+  zoo revisits mixes constantly.
+* ``cold`` — the oracle.  Clears every cache (``scheduler.clear_caches``)
+  and re-plans from scratch each epoch.  Note the cleared caches are
+  process-global, so don't interleave cold replays with unrelated
+  scheduling work that wants warm caches in the same process.
+
+The anchors are computed here (tenant-id-keyed) and fed straight to
+``scheduler.schedule(prev_end=...)`` — one code path for memo key and plan
+input.  ``scheduler.schedule_incremental`` is the standalone
+"prior Schedule + changed model set" wrapper for external callers.
+
+Because the planner is a deterministic pure function of
+(active set, anchors, MCM, config), every warm reuse returns a plan
+bit-identical to what the cold oracle recomputes — pinned per-epoch by
+``tests/test_online.py`` and ``benchmarks/online_benches.py`` (which also
+guards the >=3x warm median re-plan speedup on 6x6 churn).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional
+
+from repro.core.chiplet import MCM
+from repro.core.modelzoo import get_model
+from repro.core.scheduler import (ScheduleOutcome, SearchConfig, clear_caches,
+                                  schedule)
+from repro.core.workload import Scenario
+
+# One running tenant: (tenant id, model name, batch).
+Tenant = tuple[int, str, int]
+
+
+def active_scenario(tenants: list[Tenant]) -> tuple[Scenario, list[int]]:
+    """Canonical Scenario for an active tenant set.
+
+    Tenants are ordered by (model, batch, tenant id) and the scenario is
+    named after the (model, batch) multiset only, so recurring mixes hit the
+    same CostDB cache entry regardless of which tenant ids compose them.
+    Returns the scenario plus the tenant id at each model index.
+    """
+    order = sorted(tenants, key=lambda tn: (tn[1], tn[2], tn[0]))
+    mix = ",".join(f"{name}x{batch}" for _, name, batch in order)
+    sc = Scenario(f"online[{mix}]",
+                  tuple(get_model(name, batch) for _, name, batch in order))
+    return sc, [tid for tid, _, _ in order]
+
+
+@dataclasses.dataclass
+class ReplanRecord:
+    """One epoch's re-plan: the outcome plus how it was produced."""
+
+    outcome: ScheduleOutcome
+    tenant_order: list[int]            # tenant id per model index
+    anchors: dict[int, int]            # tenant id -> carried chiplet
+    wall_s: float                      # planner wall time (0-ish on memo hit)
+    memo_hit: bool
+
+
+class Rescheduler:
+    """Stateful epoch-boundary re-planner for one (MCM, SearchConfig)."""
+
+    def __init__(self, mcm: MCM, cfg: Optional[SearchConfig] = None,
+                 mode: str = "warm", plan_memo_max: int = 256):
+        if mode not in ("warm", "cold"):
+            raise KeyError(f"unknown rescheduler mode {mode!r}")
+        self.mcm = mcm
+        self.cfg = cfg or SearchConfig()
+        self.mode = mode
+        self._plan_memo: collections.OrderedDict[tuple, ScheduleOutcome] = \
+            collections.OrderedDict()
+        self._plan_memo_max = plan_memo_max
+        self._window_memo: dict = {}
+        self._last: Optional[ReplanRecord] = None
+
+    # ---- epoch state ------------------------------------------------------
+    def carried_anchors(self, tenants: list[Tenant]) -> dict[int, int]:
+        """Tenant id -> chiplet anchor from the previous epoch's plan, for
+        the tenants of ``tenants`` that persisted across the boundary."""
+        if self._last is None:
+            return {}
+        from repro.core.scheduler import final_anchors
+        prior_final = final_anchors(self._last.outcome)
+        prior_idx = {tid: mi
+                     for mi, tid in enumerate(self._last.tenant_order)}
+        out = {}
+        for tid, _, _ in tenants:
+            mi = prior_idx.get(tid)
+            if mi is not None and mi in prior_final:
+                out[tid] = prior_final[mi]
+        return out
+
+    # ---- the query --------------------------------------------------------
+    def replan(self, tenants: list[Tenant]) -> ReplanRecord:
+        """Plan the new active set from the current window boundary."""
+        sc, tenant_order = active_scenario(tenants)
+        anchors = self.carried_anchors(tenants)
+        carried = {mi: anchors[tid] for mi, tid in enumerate(tenant_order)
+                   if tid in anchors}
+        key = (sc.name, tuple(sorted(carried.items())))
+        t0 = time.perf_counter()
+        hit = self.mode == "warm" and key in self._plan_memo
+        if hit:
+            outcome = self._plan_memo[key]
+            self._plan_memo.move_to_end(key)
+        else:
+            if self.mode == "cold":
+                clear_caches()
+                self._window_memo.clear()
+            elif len(self._window_memo) > 20000:
+                self._window_memo.clear()   # bound memory on endless traces
+            outcome = schedule(
+                sc, self.mcm, self.cfg, prev_end=carried,
+                window_memo=(self._window_memo
+                             if self.mode == "warm" else None))
+            if self.mode == "warm":
+                self._plan_memo[key] = outcome
+                while len(self._plan_memo) > self._plan_memo_max:
+                    self._plan_memo.popitem(last=False)
+        rec = ReplanRecord(outcome=outcome, tenant_order=tenant_order,
+                           anchors=anchors,
+                           wall_s=time.perf_counter() - t0, memo_hit=hit)
+        self._last = rec
+        return rec
+
+    def reset(self) -> None:
+        """Forget epoch state (prior plan + memos), keep mode/config."""
+        self._plan_memo.clear()
+        self._window_memo.clear()
+        self._last = None

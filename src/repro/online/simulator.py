@@ -1,0 +1,216 @@
+"""Discrete-event loop: replay a trace against the SCAR scheduler.
+
+Two trace shapes, one entry point (``simulate``):
+
+**Churn** — the active tenant set changes at arrival/departure epochs.  Serving
+is iterative: one *iteration* runs every active tenant's model once through
+the planned windows (the steady-state serving loop of the static pipeline).
+At each epoch boundary the ``Rescheduler`` re-plans from the current window
+boundary (persisting tenants keep their data-locality anchors); between
+boundaries the epoch's schedule executes back-to-back iterations, accounted
+with the exact per-window latencies/energies ``cost.evaluate_schedule``
+produced — ``iterations = epoch_duration / schedule_latency`` (fractional at
+the boundary), each completed iteration contributing one latency sample per
+tenant and one ``result.energy`` of package energy.
+
+**Cadence** — the model set is a fixed AR/VR scenario; the schedule is planned
+once and frames replay against its per-model latencies.  Each model serves
+its frames FIFO on its own pipeline: a frame arriving at ``t`` starts at
+``max(t, previous completion)``, completes ``latency`` later, and misses its
+deadline if completion exceeds ``t + deadline``.  Per-frame energy is the
+schedule's iteration energy split across models pro rata by their summed
+window latency (``replay_cadence`` is a pure function so QoS accounting is
+hand-checkable — see ``tests/test_online.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+from repro.core.chiplet import MCM, make_mcm
+from repro.core.scheduler import ScheduleOutcome, SearchConfig
+
+from .rescheduler import Rescheduler, Tenant
+from .traces import Trace
+
+
+def per_model_latency(outcome: ScheduleOutcome) -> dict[int, float]:
+    """Model index -> end-to-end latency (sum of its per-window latencies)."""
+    lat: dict[int, float] = {}
+    for wr in outcome.result.windows:
+        for mi, v in wr.per_model_latency.items():
+            lat[mi] = lat.get(mi, 0.0) + v
+    return lat
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    """One inter-event interval of a churn simulation."""
+
+    t_start: float
+    t_end: float
+    tenants: tuple[Tenant, ...]            # active set during the epoch
+    outcome: Optional[ScheduleOutcome]     # None when the package idles
+    tenant_order: tuple[int, ...]          # tenant id per model index
+    replan_wall_s: float
+    memo_hit: bool
+    iterations: float                      # fractional serving iterations
+    energy: float                          # package energy spent in epoch
+
+
+@dataclasses.dataclass
+class FrameRecord:
+    """One served frame of a cadence simulation."""
+
+    t: float
+    model: str
+    tenant: int                            # scenario model index
+    latency: float                         # completion - arrival (queue incl.)
+    deadline: float
+    missed: bool
+    energy: float
+
+
+@dataclasses.dataclass
+class SimResult:
+    """A finished simulation, ready for ``metrics.qos_report``."""
+
+    trace: Trace
+    mode: str
+    epochs: list[EpochRecord]
+    frames: list[FrameRecord]
+    # per model-name weighted QoS samples: (latency_s, weight) — weight is
+    # iterations served at that latency (churn) or 1 per frame (cadence)
+    latency_samples: dict[str, list[tuple[float, float]]]
+    total_energy: float
+    busy_s: float                             # simulated time with work
+    replan_wall_s: float                      # total planner wall time
+    n_replans: int
+    n_memo_hits: int
+
+
+def _churn(trace: Trace, resched: Rescheduler) -> SimResult:
+    active: dict[int, Tenant] = {}
+    epochs: list[EpochRecord] = []
+    samples: dict[str, list[tuple[float, float]]] = {}
+    total_energy = 0.0
+    busy = 0.0
+    replan_wall = 0.0
+    n_replans = n_hits = 0
+
+    # group events into epochs by timestamp
+    groups = [(t, list(evs)) for t, evs in
+              itertools.groupby(trace.events, key=lambda e: e.t)]
+    bounds = [t for t, _ in groups] + [trace.horizon]
+    for (t, evs), t_next in zip(groups, bounds[1:]):
+        for e in evs:
+            if e.kind == "arrive":
+                active[e.tenant] = (e.tenant, e.model, e.batch)
+            elif e.kind == "depart":
+                active.pop(e.tenant, None)
+            else:
+                raise ValueError(f"churn trace carries {e.kind!r} event")
+        tenants = sorted(active.values())
+        if tenants:
+            rec = resched.replan(tenants)
+            replan_wall += rec.wall_s
+            n_replans += 1
+            n_hits += rec.memo_hit
+            lat = rec.outcome.result.latency
+            dt = t_next - t
+            iters = dt / lat if lat > 0 else 0.0
+            energy = iters * rec.outcome.result.energy
+            total_energy += energy
+            busy += dt
+            pml = per_model_latency(rec.outcome)
+            name_of = {tid: name for tid, name, _ in tenants}
+            for mi, tid in enumerate(rec.tenant_order):
+                samples.setdefault(name_of[tid], []).append(
+                    (pml.get(mi, 0.0), iters))
+            epochs.append(EpochRecord(
+                t_start=t, t_end=t_next, tenants=tuple(tenants),
+                outcome=rec.outcome, tenant_order=tuple(rec.tenant_order),
+                replan_wall_s=rec.wall_s, memo_hit=rec.memo_hit,
+                iterations=iters, energy=energy))
+        else:
+            epochs.append(EpochRecord(
+                t_start=t, t_end=t_next, tenants=(), outcome=None,
+                tenant_order=(), replan_wall_s=0.0, memo_hit=False,
+                iterations=0.0, energy=0.0))
+    return SimResult(trace=trace, mode=resched.mode, epochs=epochs,
+                     frames=[], latency_samples=samples,
+                     total_energy=total_energy, busy_s=busy,
+                     replan_wall_s=replan_wall, n_replans=n_replans,
+                     n_memo_hits=n_hits)
+
+
+def replay_cadence(trace: Trace, model_latency: dict[int, float],
+                   model_energy: dict[int, float]) -> list[FrameRecord]:
+    """Pure frame replay: FIFO per-model queues against fixed latencies.
+
+    Split out from ``simulate`` so deadline-miss accounting is testable on
+    hand-computed latencies without running the scheduler.
+    """
+    frames: list[FrameRecord] = []
+    busy_until: dict[int, float] = {}
+    for e in trace.events:
+        if e.kind != "frame":
+            raise ValueError(f"cadence trace carries {e.kind!r} event")
+        lat = model_latency[e.tenant]
+        start = max(e.t, busy_until.get(e.tenant, 0.0))
+        completion = start + lat
+        busy_until[e.tenant] = completion
+        frames.append(FrameRecord(
+            t=e.t, model=e.model, tenant=e.tenant,
+            latency=completion - e.t, deadline=float(e.deadline),
+            missed=completion > e.t + e.deadline,
+            energy=model_energy.get(e.tenant, 0.0)))
+    return frames
+
+
+def _cadence(trace: Trace, resched: Rescheduler) -> SimResult:
+    # frames are single inferences: plan the scenario's model set at batch 1
+    # (Table II's AR/VR batch column is the firing rate, not a real batch)
+    from repro.core.scenarios import scenario_spec
+    tenants: list[Tenant] = [(mi, name, 1) for mi, (name, _)
+                             in enumerate(scenario_spec(trace.scenario))]
+    rec = resched.replan(tenants)
+    # rescheduler orders models canonically; map back to scenario indices
+    idx_of = {tid: mi for mi, tid in enumerate(rec.tenant_order)}
+    pml = per_model_latency(rec.outcome)
+    lat = {tid: pml.get(mi, 0.0) for tid, mi in idx_of.items()}
+    lat_sum = sum(lat.values()) or 1.0
+    energy = {tid: rec.outcome.result.energy * lat[tid] / lat_sum
+              for tid in lat}
+    frames = replay_cadence(trace, lat, energy)
+    samples: dict[str, list[tuple[float, float]]] = {}
+    for f in frames:
+        samples.setdefault(f.model, []).append((f.latency, 1.0))
+    return SimResult(trace=trace, mode=resched.mode, epochs=[], frames=frames,
+                     latency_samples=samples,
+                     total_energy=sum(f.energy for f in frames),
+                     busy_s=trace.horizon, replan_wall_s=rec.wall_s,
+                     n_replans=1, n_memo_hits=int(rec.memo_hit))
+
+
+def simulate(trace: Trace, mcm: Optional[MCM] = None,
+             pattern: str = "het_cross", rows: int = 6, cols: int = 6,
+             n_pe: int = 4096, cfg: Optional[SearchConfig] = None,
+             mode: str = "warm",
+             rescheduler: Optional[Rescheduler] = None) -> SimResult:
+    """Replay ``trace`` against the scheduler and return the accounting.
+
+    Pass either a ready ``mcm`` (and optionally a ``rescheduler`` to share
+    memo state across calls) or the ``pattern``/``rows``/``cols``/``n_pe``
+    of one to build.  ``mode`` selects the warm incremental path or the cold
+    from-scratch oracle (see ``rescheduler``).
+    """
+    if mcm is None:
+        mcm = make_mcm(pattern, rows=rows, cols=cols, n_pe=n_pe)
+    resched = rescheduler or Rescheduler(mcm, cfg=cfg, mode=mode)
+    if trace.kind == "churn":
+        return _churn(trace, resched)
+    if trace.kind == "cadence":
+        return _cadence(trace, resched)
+    raise KeyError(f"unknown trace kind {trace.kind!r}")

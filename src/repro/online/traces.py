@@ -1,0 +1,173 @@
+"""Trace IR + deterministic seeded trace generators.
+
+A ``Trace`` is an immutable, time-sorted tuple of ``Event`` records plus the
+generator parameters that produced it, serializable to/from JSON so traces
+can be saved, replayed, and committed as test fixtures
+(``tests/fixtures/trace_*.json``).  Two shapes:
+
+* **churn** (datacenter multi-tenancy): Poisson tenant arrivals over the
+  Table II datacenter model zoo, exponential tenant lifetimes.  Each
+  ``arrive``/``depart`` pair shares a ``tenant`` id; the simulator re-plans
+  the package at every such epoch.
+* **cadence** (AR/VR): each model of a Table II AR/VR scenario fires
+  periodically at its paper frame rate (the Table II batch column is Hz —
+  e.g. ``midas`` at 30 Hz) with deadline one period, replayed against the
+  static schedule's per-model latencies.
+
+Determinism: generation consumes a ``numpy`` Generator seeded from the
+``seed`` field only, and event ordering is a total order on
+``(t, kind, tenant)`` — the same seed yields the identical event stream in
+any process (pinned by ``tests/test_online.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence
+
+import numpy as np
+
+# Default tenant zoo for datacenter churn: the (model, batch) entries of
+# Table II's datacenter scenarios, deduplicated.  Kept module-level so traces
+# stay reproducible across refactors of the scenario table.  Note the churn
+# presets (``scenarios.TRACE_PRESETS``) pass an explicit 4-entry subset
+# (``scenarios._DC_CHURN_ZOO``) instead of this default.
+DC_TENANT_ZOO: tuple[tuple[str, int], ...] = (
+    ("gpt-l", 1), ("bert-l", 3), ("bert-base", 24),
+    ("resnet-50", 32), ("u-net", 1), ("googlenet", 32),
+)
+
+_KIND_ORDER = {"depart": 0, "arrive": 1, "frame": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One trace event.
+
+    ``kind``: ``arrive`` / ``depart`` (churn) or ``frame`` (cadence).
+    ``tenant``: unique tenant id (churn) or the scenario model index
+    (cadence).  ``deadline`` is seconds after ``t`` (frame events only).
+    Sort with ``sort_key`` (departures before arrivals at equal ``t``) —
+    deliberately no dataclass ordering, which would disagree with it.
+    """
+
+    t: float
+    kind: str
+    model: str
+    tenant: int
+    batch: int = 1
+    deadline: Optional[float] = None
+
+    def sort_key(self) -> tuple:
+        return (self.t, _KIND_ORDER[self.kind], self.tenant)
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """An immutable, time-sorted event stream plus its provenance."""
+
+    name: str
+    kind: str                      # "churn" | "cadence"
+    horizon: float                 # simulated seconds the trace covers
+    events: tuple[Event, ...]
+    seed: Optional[int] = None     # generator seed (None: hand-built)
+    scenario: Optional[str] = None  # source scenario (cadence traces)
+
+    def __post_init__(self) -> None:
+        keys = [e.sort_key() for e in self.events]
+        if keys != sorted(keys):
+            raise ValueError("trace events must be (t, kind, tenant)-sorted")
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    # ---- serialization ----------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "name": self.name, "kind": self.kind, "horizon": self.horizon,
+            "seed": self.seed, "scenario": self.scenario,
+            "events": [dataclasses.asdict(e) for e in self.events],
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "Trace":
+        return cls(name=obj["name"], kind=obj["kind"],
+                   horizon=float(obj["horizon"]), seed=obj.get("seed"),
+                   scenario=obj.get("scenario"),
+                   events=tuple(Event(**e) for e in obj["events"]))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_json(), fh, indent=1, sort_keys=True)
+            fh.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as fh:
+            return cls.from_json(json.load(fh))
+
+
+def poisson_churn_trace(seed: int, horizon: float,
+                        arrival_rate: float, mean_lifetime: float,
+                        zoo: Sequence[tuple[str, int]] = DC_TENANT_ZOO,
+                        max_active: int = 4,
+                        name: Optional[str] = None) -> Trace:
+    """Seeded Poisson tenant churn over the datacenter model zoo.
+
+    Tenants arrive as a Poisson process of ``arrival_rate`` per simulated
+    second, each running a model sampled uniformly from ``zoo`` for an
+    exponential lifetime of mean ``mean_lifetime`` seconds.  Arrivals that
+    would push the active count past ``max_active`` are dropped (admission
+    control keeps provisioning feasible on small packages).  Lifetimes are
+    clipped at the horizon — tenants still resident simply stay resident; no
+    synthetic departure events are emitted.
+    """
+    rng = np.random.default_rng(seed)
+    events: list[Event] = []
+    active_until: list[float] = []       # departure times of admitted tenants
+    tenant = 0
+    t = float(rng.exponential(1.0 / arrival_rate))
+    while t < horizon:
+        model, batch = zoo[int(rng.integers(0, len(zoo)))]
+        life = float(rng.exponential(mean_lifetime))
+        n_active = sum(1 for d in active_until if d > t)
+        if n_active < max_active:
+            events.append(Event(t=round(t, 9), kind="arrive", model=model,
+                                tenant=tenant, batch=batch))
+            depart = t + life
+            if depart < horizon:
+                events.append(Event(t=round(depart, 9), kind="depart",
+                                    model=model, tenant=tenant, batch=batch))
+            active_until.append(depart)
+            tenant += 1
+        t += float(rng.exponential(1.0 / arrival_rate))
+    events.sort(key=Event.sort_key)
+    return Trace(name=name or f"dc_churn_seed{seed}", kind="churn",
+                 horizon=horizon, events=tuple(events), seed=seed)
+
+
+def frame_cadence_trace(scenario: str, horizon: float,
+                        name: Optional[str] = None) -> Trace:
+    """Periodic frame-cadence trace for one Table II AR/VR scenario.
+
+    Each model fires every ``1/rate`` seconds at its paper frame rate (the
+    Table II batch column, Hz) with deadline one period — a frame missing
+    its deadline means the model fell behind its sensor.  The simulator
+    replays frames (single batch-1 inferences) against a schedule of the
+    scenario's concurrent model set planned at batch 1.
+    """
+    from repro.core.scenarios import scenario_spec
+    events: list[Event] = []
+    for mi, (model, rate) in enumerate(scenario_spec(scenario)):
+        period = 1.0 / float(rate)       # Table II: AR/VR batch == Hz
+        k = 0
+        while k * period < horizon:
+            events.append(Event(t=round(k * period, 9), kind="frame",
+                                model=model, tenant=mi, batch=1,
+                                deadline=period))
+            k += 1
+    events.sort(key=Event.sort_key)
+    return Trace(name=name or f"{scenario}_cadence", kind="cadence",
+                 horizon=horizon, events=tuple(events), seed=None,
+                 scenario=scenario)

@@ -1,0 +1,261 @@
+"""Online subsystem: trace determinism + serialization, warm-vs-cold
+re-schedule parity on the committed fixture traces, hand-computed
+deadline-miss accounting, anchor carry-over, and the trace portfolio."""
+import json
+import multiprocessing as mp
+import os
+
+import pytest
+
+from repro.core import SearchConfig, TRACE_PRESETS, get_trace, make_mcm
+from repro.core.portfolio import TraceJob, run_portfolio, trace_sweep_grid
+from repro.online import (Rescheduler, Trace, qos_report, simulate)
+from repro.online.metrics import weighted_percentile
+from repro.online.simulator import FrameRecord, per_model_latency, \
+    replay_cadence
+from repro.online.traces import Event, frame_cadence_trace, \
+    poisson_churn_trace
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+_SMALL = dict(pattern="het_cross", rows=3, cols=3, n_pe=1024,
+              cfg=SearchConfig(path_cap=32, seg_cap=64, n_splits=2))
+
+
+# ------------------------------ traces --------------------------------------
+
+def test_churn_trace_deterministic_and_admission_capped():
+    a = poisson_churn_trace(seed=7, horizon=20.0, arrival_rate=1.0,
+                            mean_lifetime=2.0, max_active=2)
+    b = poisson_churn_trace(seed=7, horizon=20.0, arrival_rate=1.0,
+                            mean_lifetime=2.0, max_active=2)
+    assert a == b                       # same seed -> identical event stream
+    c = poisson_churn_trace(seed=8, horizon=20.0, arrival_rate=1.0,
+                            mean_lifetime=2.0, max_active=2)
+    assert a != c
+    # admission control: replaying arrivals/departures never exceeds the cap
+    active = 0
+    for e in a.events:
+        active += 1 if e.kind == "arrive" else -1
+        assert 0 <= active <= 2
+
+
+def _gen_trace_json(preset, q):
+    from repro.core import get_trace as gt
+    q.put(json.dumps(gt(preset).to_json(), sort_keys=True))
+
+
+@pytest.mark.parametrize("preset", ["dc_churn_smoke", "xr8_cadence"])
+def test_trace_identical_across_processes(preset):
+    """Same seed -> byte-identical serialized trace in a fresh process."""
+    ctx = mp.get_context("spawn")
+    q = ctx.Queue()
+    p = ctx.Process(target=_gen_trace_json, args=(preset, q))
+    p.start()
+    child = q.get(timeout=120)
+    p.join()
+    assert child == json.dumps(get_trace(preset).to_json(), sort_keys=True)
+
+
+@pytest.mark.parametrize("preset", sorted(TRACE_PRESETS))
+def test_trace_roundtrip(preset):
+    tr = get_trace(preset)
+    assert Trace.from_json(tr.to_json()) == tr
+    assert tr.events == tuple(sorted(tr.events, key=Event.sort_key))
+
+
+@pytest.mark.parametrize("preset", ["dc_churn_smoke", "xr8_cadence"])
+def test_committed_fixtures_match_presets(preset):
+    """The committed fixture traces regenerate bit-for-bit from the presets
+    (guards accidental generator / preset drift)."""
+    path = os.path.join(FIXTURES, f"trace_{preset}.json")
+    assert Trace.load(path) == get_trace(preset)
+
+
+def test_cadence_trace_rates_and_deadlines():
+    tr = frame_cadence_trace("xr8_outdoors", horizon=0.5)
+    # Table II: d2go at 30 Hz, emformer at 3 Hz
+    by_model = {}
+    for e in tr.events:
+        by_model.setdefault(e.model, []).append(e)
+    assert len(by_model["d2go"]) == 15
+    assert len(by_model["emformer"]) == 2
+    assert by_model["d2go"][1].t == pytest.approx(1 / 30)
+    assert by_model["d2go"][0].deadline == pytest.approx(1 / 30)
+
+
+# ----------------------- warm vs cold parity (acceptance) -------------------
+
+def _plans(epoch):
+    if epoch.outcome is None:
+        return None
+    return tuple(wr.plan for wr in epoch.outcome.windows)
+
+
+def test_warm_cold_parity_on_fixture_churn():
+    """Every epoch of the committed churn fixture: the warm incremental
+    re-scheduler's plan is bit-identical to the cold from-scratch oracle."""
+    trace = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_smoke.json"))
+    cold = simulate(trace, mode="cold", **_SMALL)
+    warm = simulate(trace, mode="warm", **_SMALL)
+    assert len(cold.epochs) == len(warm.epochs) > 0
+    for ec, ew in zip(cold.epochs, warm.epochs):
+        assert _plans(ec) == _plans(ew)
+        assert ec.iterations == ew.iterations
+        assert ec.energy == ew.energy
+    assert warm.n_memo_hits >= 1        # the warm path actually reused work
+
+
+def test_warm_cold_parity_on_fixture_cadence():
+    trace = Trace.load(os.path.join(FIXTURES, "trace_xr8_cadence.json"))
+    kw = dict(pattern="het_sides", rows=3, cols=3, n_pe=256,
+              cfg=SearchConfig(path_cap=32, seg_cap=64))
+    cold = simulate(trace, mode="cold", **kw)
+    warm = simulate(trace, mode="warm", **kw)
+    assert [ (f.t, f.model, f.latency, f.missed) for f in cold.frames ] == \
+           [ (f.t, f.model, f.latency, f.missed) for f in warm.frames ]
+
+
+# ----------------------- QoS accounting (hand-computed) ---------------------
+
+def test_deadline_accounting_hand_computed_two_model_trace():
+    """2-model cadence trace with injected latencies, checked by hand.
+
+    Model 0: 10 Hz, latency 50 ms  -> every frame meets its 100 ms deadline.
+    Model 1: 10 Hz, latency 250 ms -> FIFO queueing: frame k completes at
+    (k+1) * 250 ms vs deadline (k+1) * 100 ms -> every frame misses, and
+    observed latency grows by 150 ms per frame.
+    """
+    events = []
+    for k in range(3):
+        for mi, name in ((0, "fast"), (1, "slow")):
+            events.append(Event(t=k * 0.1, kind="frame", model=name,
+                                tenant=mi, deadline=0.1))
+    trace = Trace(name="hand", kind="cadence", horizon=0.3,
+                  events=tuple(sorted(events, key=Event.sort_key)))
+    frames = replay_cadence(trace, {0: 0.05, 1: 0.25}, {0: 1.0, 1: 2.0})
+    fast = [f for f in frames if f.tenant == 0]
+    slow = [f for f in frames if f.tenant == 1]
+    assert [f.missed for f in fast] == [False, False, False]
+    assert [f.latency for f in fast] == pytest.approx([0.05, 0.05, 0.05])
+    assert [f.missed for f in slow] == [True, True, True]
+    assert [f.latency for f in slow] == pytest.approx([0.25, 0.40, 0.55])
+    assert sum(f.energy for f in frames) == pytest.approx(3 * 1.0 + 3 * 2.0)
+
+
+def test_weighted_percentile_and_report():
+    samples = [(1.0, 1.0), (2.0, 1.0), (10.0, 2.0)]
+    assert weighted_percentile(samples, 50.0) == 2.0
+    assert weighted_percentile(samples, 99.0) == 10.0
+    assert weighted_percentile([], 50.0) == 0.0
+
+    frames = [FrameRecord(t=0.0, model="m", tenant=0, latency=0.2,
+                          deadline=0.1, missed=True, energy=1.5),
+              FrameRecord(t=0.1, model="m", tenant=0, latency=0.05,
+                          deadline=0.1, missed=False, energy=1.5)]
+    from repro.online.simulator import SimResult
+    trace = Trace(name="t", kind="cadence", horizon=2.0, events=())
+    sim = SimResult(trace=trace, mode="warm", epochs=[], frames=frames,
+                    latency_samples={"m": [(0.2, 1.0), (0.05, 1.0)]},
+                    total_energy=3.0, busy_s=2.0, replan_wall_s=0.5,
+                    n_replans=1, n_memo_hits=0)
+    rep = qos_report(sim)
+    assert rep.model("m").miss_rate == pytest.approx(0.5)
+    assert rep.model("m").p50_latency == pytest.approx(0.05)
+    assert rep.model("m").p99_latency == pytest.approx(0.2)
+    assert rep.aggregate_edp == pytest.approx(6.0)
+    assert rep.overhead_ratio == pytest.approx(0.25)
+
+
+# ----------------------- incremental re-scheduler ---------------------------
+
+def test_rescheduler_memo_hit_and_anchor_carryover():
+    mcm = make_mcm("het_cross", rows=3, cols=3, n_pe=1024)
+    rs = Rescheduler(mcm, cfg=_SMALL["cfg"], mode="warm")
+    t0 = [(0, "bert-l", 3)]
+    r0 = rs.replan(t0)
+    assert not r0.memo_hit and r0.anchors == {}
+    # tenant 0 persists across the epoch -> it carries its ending chiplet
+    t1 = [(0, "bert-l", 3), (1, "resnet-50", 4)]
+    r1 = rs.replan(t1)
+    assert 0 in r1.anchors
+    from repro.core import final_anchors
+    mi0 = r0.tenant_order.index(0)
+    assert r1.anchors[0] == final_anchors(r0.outcome)[mi0]
+    # back to the original single-tenant set with no anchors?  tenant 0 now
+    # carries an anchor, so this is only a memo hit if the state recurs
+    # exactly; departing and re-arriving as a NEW tenant id from idle does
+    # recur (no anchors either time)
+    rs2 = Rescheduler(mcm, cfg=_SMALL["cfg"], mode="warm")
+    a = rs2.replan([(5, "bert-l", 3)])
+    assert not a.memo_hit
+    rs2._last = None                    # simulate an idle gap (state reset)
+    b = rs2.replan([(9, "bert-l", 3)])
+    assert b.memo_hit
+    assert _w_plans(a.outcome) == _w_plans(b.outcome)
+
+
+def _w_plans(outcome):
+    return tuple(wr.plan for wr in outcome.windows)
+
+
+def test_schedule_incremental_matches_schedule_with_anchors():
+    """The warm-startable entry point == plain schedule seeded with the
+    prior schedule's final anchors."""
+    from repro.core import schedule, schedule_incremental
+    from repro.core.workload import Scenario
+    from repro.core.modelzoo import get_model
+    mcm = make_mcm("het_cross", rows=3, cols=3, n_pe=1024)
+    cfg = _SMALL["cfg"]
+    sc0 = Scenario("online[a]", (get_model("bert-l", 3),))
+    prior = schedule(sc0, mcm, cfg)
+    sc1 = Scenario("online[ab]", (get_model("bert-l", 3),
+                                  get_model("googlenet", 4)))
+    inc = schedule_incremental(sc1, mcm, cfg, prior=prior,
+                               persisting={0: 0})
+    from repro.core import final_anchors
+    direct = schedule(sc1, mcm, cfg,
+                      prev_end={0: final_anchors(prior)[0]})
+    assert _w_plans(inc) == _w_plans(direct)
+    assert inc.result.latency == direct.result.latency
+    assert inc.result.energy == direct.result.energy
+
+
+# ----------------------- portfolio integration ------------------------------
+
+def test_trace_portfolio_inline_and_parallel_parity():
+    jobs = trace_sweep_grid(["dc_churn_smoke"], ["het_cross"],
+                            rows=3, cols=3, n_pe=1024, modes=("warm",),
+                            path_cap=32, seg_cap=64, n_splits=2)
+    jobs.append(TraceJob(trace="xr8_cadence", pattern="het_sides",
+                         rows=3, cols=3, n_pe=256,
+                         cfg=SearchConfig(path_cap=32, seg_cap=64)))
+    assert len({j.name for j in jobs}) == len(jobs)
+    ser = run_portfolio(jobs, processes=1)
+    par = run_portfolio(jobs, processes=2)
+    for a, b in zip(ser, par):
+        assert a.job == b.job
+        assert a.report.aggregate_edp == b.report.aggregate_edp
+        assert a.report.per_model == b.report.per_model
+
+
+def test_churn_accounting_uses_exact_schedule_metrics():
+    """Epoch accounting: iterations * schedule energy, per-model latency ==
+    sum of its per-window latencies from the exact evaluator."""
+    trace = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_smoke.json"))
+    sim = simulate(trace, mode="warm", **_SMALL)
+    for e in sim.epochs:
+        if e.outcome is None:
+            assert e.energy == 0.0 and e.iterations == 0.0
+            continue
+        lat = e.outcome.result.latency
+        dt = e.t_end - e.t_start
+        assert e.iterations == pytest.approx(dt / lat)
+        assert e.energy == pytest.approx(
+            e.iterations * e.outcome.result.energy)
+        pml = per_model_latency(e.outcome)
+        assert sum(pml.values()) > 0
+    rep = qos_report(sim)
+    assert rep.total_energy == pytest.approx(
+        sum(e.energy for e in sim.epochs))
+    assert rep.busy_s == pytest.approx(
+        sum(e.t_end - e.t_start for e in sim.epochs if e.outcome))
