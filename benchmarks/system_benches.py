@@ -45,15 +45,108 @@ def bench_scar_eval_throughput() -> None:
                                   n_segs=n_segs)
     with timer() as t_np:
         eval_model_candidates(db, mcm, cand, n_active=4)
-    args, Breal = pack_candidates(db, mcm, cand, n_active=4)
-    out = evaluate(*args, use_kernel=False)  # compile
+    args, statics, Breal = pack_candidates(db, mcm, cand, n_active=4)
+    out = evaluate(*args, **statics, use_kernel=False)  # compile
     out.block_until_ready()
     with timer() as t_jx:
-        out = evaluate(*args, use_kernel=False)
+        out = evaluate(*args, **statics, use_kernel=False)
         out.block_until_ready()
     emit("scar_eval_batched_2048cands", t_jx.us,
          f"numpy_us={t_np.us:.0f};jax_us={t_jx.us:.0f};"
          f"per_candidate_ns={t_jx.us * 1e3 / B:.0f}")
+
+
+def _eval_stage_batches(mesh: int, pattern: str, path_cap: int,
+                        scenario: str = "dc4_lms_seg_image") -> list:
+    """The exact per-model candidate batches the SCHED hot loop scores for
+    one full schedule (every window, every model) — the eval-stage workload,
+    isolated from construction via ``sched.assemble_candidates``."""
+    from repro.core import SearchConfig, get_scenario, make_mcm
+    from repro.core.provision import provision
+    from repro.core.reconfig import greedy_pack
+    from repro.core.sched import assemble_candidates
+    from repro.core.scheduler import get_cost_db
+    from repro.core.segmentation import top_k_segmentations
+
+    sc = get_scenario(scenario)
+    mcm = make_mcm(pattern, rows=mesh, cols=mesh, n_pe=4096)
+    cfg = SearchConfig(path_cap=path_cap)
+    db = get_cost_db(sc, mcm)
+    wa = greedy_pack(db, mcm.class_counts(), cfg.n_splits)
+    out = []
+    for ranges in wa.ranges:
+        alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
+                          metric=cfg.metric,
+                          max_nodes_per_model=cfg.max_nodes_per_model)
+        for mi, (s, e) in sorted(ranges.items()):
+            segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
+                                       k=cfg.seg_top_k, cap=cfg.seg_cap,
+                                       metric=cfg.metric)
+            cand, _, _ = assemble_candidates(mcm, mi, (s, e), segs, None,
+                                             path_cap=path_cap)
+            out.append((db, mcm, cand, len(ranges)))
+    return out
+
+
+def bench_eval_backend() -> None:
+    """Evaluator-backend shoot-out on the production eval-stage workload:
+    numpy oracle vs jitted jax_ref vs Pallas kernel (accelerator only) on
+    6x6 and 16x16 (dc4; 16x16 at the ROADMAP-profiled path_cap=1024).
+
+    Guards the >=3x jax-vs-numpy speedup on the 16x16 eval stage — the hot
+    spot (~45% of schedule time) this backend exists for — and asserts
+    parity on live batches while at it.
+    """
+    import time as _time
+    import jax
+    from repro.core.evaluator import eval_candidates
+
+    for name, mesh, pattern, path_cap in [("6x6", 6, "het_cross", 128),
+                                          ("16x16", 16, "het_cb", 1024)]:
+        work = _eval_stage_batches(mesh, pattern, path_cap)
+        n_cands = sum(c.seg_id.shape[0] for _, _, c, _ in work)
+
+        def run(backend: str) -> None:
+            for db, mcm, cand, na in work:
+                eval_candidates(db, mcm, cand, na, backend=backend)
+
+        # parity guard on live batches (quantised ordering is covered by
+        # tests/test_evaluator.py)
+        for db, mcm, cand, na in work:
+            l_np, e_np = eval_candidates(db, mcm, cand, na, backend="numpy")
+            l_jx, e_jx = eval_candidates(db, mcm, cand, na,
+                                         backend="jax_ref")
+            np.testing.assert_allclose(l_jx, l_np, rtol=2e-4)
+            np.testing.assert_allclose(e_jx, e_np, rtol=2e-4)
+
+        def best_of(fn, n=5) -> float:
+            times = []
+            for _ in range(n):
+                t0 = _time.perf_counter()
+                fn()
+                times.append(_time.perf_counter() - t0)
+            return min(times)
+
+        t_np = best_of(lambda: run("numpy"))
+        t_jx = best_of(lambda: run("jax_ref"))
+        speedup = t_np / t_jx
+        extra = ""
+        # same platform policy as evaluator.resolve_backend: the Pallas
+        # kernel is TPU-targeted; elsewhere jax_ref is the production path
+        if jax.default_backend() == "tpu":
+            run("pallas")                      # compile
+            t_pl = best_of(lambda: run("pallas"))
+            extra = f";pallas_ms={t_pl * 1e3:.1f}"
+        else:
+            extra = ";pallas=skipped_non_tpu"
+        emit(f"eval_backend_{name}", t_jx * 1e6,
+             f"numpy_ms={t_np * 1e3:.1f};jax_ref_ms={t_jx * 1e3:.1f};"
+             f"speedup={speedup:.2f}x;batches={len(work)};"
+             f"candidates={n_cands}{extra};target=3x(16x16)")
+        if name == "16x16":
+            assert speedup >= 3.0, (
+                f"jax_ref eval backend regressed to {speedup:.2f}x vs the "
+                f"numpy oracle on the 16x16 eval stage (target >=3x)")
 
 
 def bench_sched_throughput() -> None:
@@ -267,6 +360,6 @@ def bench_roofline_table(path: str = "dryrun_results.jsonl") -> None:
              f"compute_fraction={frac:.3f}")
 
 
-ALL = [bench_scar_eval_throughput, bench_sched_throughput,
-       bench_candidate_construction, bench_kernel_agreement,
-       bench_roofline_table]
+ALL = [bench_scar_eval_throughput, bench_eval_backend,
+       bench_sched_throughput, bench_candidate_construction,
+       bench_kernel_agreement, bench_roofline_table]

@@ -3,6 +3,7 @@ from .chiplet import (ALL_PATTERNS, HET_PATTERNS, MCM, ChipletClass, Dataflow,
                       PackageParams, make_mcm)
 from .cost import (ModelWindowPlan, ScheduleResult, WindowPlan, WindowResult,
                    evaluate_schedule, evaluate_window)
+from .evaluator import eval_candidates, resolve_backend
 from .maestro import CostDB, build_cost_db, expected_latency
 from .reconfig import greedy_pack, uniform_pack, validate_assignment
 from .provision import provision

@@ -232,9 +232,13 @@ def evaluate_schedule(db: CostDB, mcm: MCM,
 class BatchedModelCandidates:
     """B candidate (segmentation x placement) plans of one model's window.
 
-    ``seg_id``: [B, Lw] int segment index per layer (monotone, starts at 0).
+    ``seg_id``: [B, Lw] int segment index per layer (monotone, starts at 0,
+    contiguous ids ``0..n_segs-1``).
     ``chiplets``: [B, S_max] chiplet id per segment (-1 padding).
     ``n_segs``: [B] number of segments per candidate.
+    ``seg_ends``: optional [B, S_max] *absolute* segment end indices (-1
+    padding) — redundant with ``seg_id`` but free at construction time; when
+    present the kernel bridge skips recomputing segment boundaries.
     """
 
     model_idx: int
@@ -243,59 +247,86 @@ class BatchedModelCandidates:
     seg_id: np.ndarray
     chiplets: np.ndarray
     n_segs: np.ndarray
+    seg_ends: Optional[np.ndarray] = None
 
 
-def eval_model_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
-                          n_active: int,
-                          prev_end: Optional[int] = None,
-                          pipelined: bool = True) -> tuple[np.ndarray, np.ndarray]:
-    """Vectorised (lat[B], energy[B]) for one model's candidate plans.
+def segment_last_layers(seg_id: np.ndarray, s_max: int) -> np.ndarray:
+    """[B, S] window-relative index of each segment's *last* layer.
 
-    Exactly matches ``evaluate_window`` on singleton batches (tested).
+    One flat ``bincount`` plus a count prefix-sum over the monotone
+    ``seg_id`` rows (the ``BatchedModelCandidates`` invariant: monotone
+    non-decreasing, contiguous ids ``0..n_segs-1``).  Rows ``s >= n_segs``
+    carry the running prefix value and must be masked by the caller.
+    Shared by ``segment_reductions`` and the kernel bridge
+    (``kernels.scar_eval.pack_candidates``) so the boundary derivation
+    exists once.
     """
-    pkg = mcm.pkg
-    B, Lw = cand.seg_id.shape
-    S = cand.chiplets.shape[1]
-    sl = slice(cand.start, cand.end)
+    B, Lw = seg_id.shape
+    flat = (seg_id
+            + s_max * np.arange(B, dtype=seg_id.dtype)[:, None]).ravel()
+    counts = np.bincount(flat, minlength=B * s_max).reshape(B, s_max)
+    return np.cumsum(counts, axis=1) - 1
 
-    class_map = np.asarray(mcm.class_map, dtype=np.int64)
-    cpos = np.maximum(cand.chiplets, 0)
-    seg_cls = class_map[cpos]                                    # [B, S]
-    valid_seg = (np.arange(S)[None, :] < cand.n_segs[:, None])   # [B, S]
 
-    lat_tab = db.lat[sl]                                          # [Lw, C]
-    e_tab = db.energy[sl]
-    layer_cls = np.take_along_axis(seg_cls, cand.seg_id, axis=1)  # [B, Lw]
-    lat_l = np.take_along_axis(
-        np.broadcast_to(lat_tab.T[None], (B,) + lat_tab.T.shape),
-        layer_cls[:, None, :], axis=1)[:, 0, :]                   # [B, Lw]
-    e_l = np.take_along_axis(
-        np.broadcast_to(e_tab.T[None], (B,) + e_tab.T.shape),
-        layer_cls[:, None, :], axis=1)[:, 0, :]
+def segment_reductions(seg_id: np.ndarray, n_segs: np.ndarray,
+                       w_bytes: np.ndarray, out_bytes: np.ndarray,
+                       s_max: Optional[int] = None
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Batched per-segment reductions over monotone ``seg_id`` rows.
 
-    # segment-sum compute terms
-    one_hot = (cand.seg_id[:, :, None] == np.arange(S)[None, None, :])
-    seg_comp_lat = np.einsum("bl,bls->bs", lat_l, one_hot)
-    seg_comp_e = np.einsum("bl,bls->bs", e_l, one_hot)
-    seg_w = np.einsum("l,bls->bs", db.w_bytes[sl], one_hot)
+    Returns ``(seg_w, seg_last_out)``, each ``[B, S]`` float64: the summed
+    weight bytes of every segment and the output bytes of its *last* layer.
+    One flat weighted ``bincount`` pass plus ``segment_last_layers``
+    replaces the per-segment Python loop — no ``[B, Lw, S]`` one-hot is
+    materialised.
+    """
+    B, Lw = seg_id.shape
+    S = int(s_max) if s_max is not None else int(n_segs.max())
+    flat = (seg_id + S * np.arange(B, dtype=seg_id.dtype)[:, None]).ravel()
+    seg_w = np.bincount(
+        flat, weights=np.broadcast_to(w_bytes, (B, Lw)).ravel(),
+        minlength=B * S).reshape(B, S)
+    exists = np.arange(S)[None, :] < n_segs[:, None]
+    last = segment_last_layers(seg_id, S)                        # [B, S]
+    seg_last_out = np.where(exists, out_bytes[np.clip(last, 0, Lw - 1)], 0.0)
+    return seg_w, seg_last_out
 
-    # geometry
-    rows_, cols_ = np.divmod(cpos, mcm.cols)
-    hops_dram = np.minimum(cols_, mcm.cols - 1 - cols_)           # [B, S]
-    nxt = np.roll(cpos, -1, axis=1)
-    r2, c2 = np.divmod(nxt, mcm.cols)
-    hops_next = np.abs(rows_ - r2) + np.abs(cols_ - c2)           # [B, S]
+
+def comm_from_parts(xp, pkg, cols: int, cpos, seg_w, seg_last_out, n_segs,
+                    n_active: int, act_in, prev_end):
+    """Sec. III-E comm formulas over precomputed per-segment reductions.
+
+    ``xp`` is ``numpy`` or ``jax.numpy`` — the *same* code computes the
+    float64 oracle terms (``comm_terms``) and the float32 on-device terms
+    inside the jitted ``kernels.scar_eval.evaluate``, so the hop geometry,
+    contention delta and DRAM/NoP latency+energy formulas exist exactly once
+    and the backends cannot drift (they used to: ``kernels/scar_eval/ops.py``
+    carried a hand-copied ~50-line clone of this block).
+
+    ``cpos`` is ``[B, S]`` non-negative chiplet ids, ``seg_w`` /
+    ``seg_last_out`` the ``[B, S]`` segment weight sums and last-layer output
+    bytes (zero on segments ``>= n_segs``).  ``prev_end`` may be None (cold
+    DRAM input), a python int, or a traced scalar (with a static has-prev
+    branch selected by the caller).  Returns ``(ip_lat, ip_e, op_lat,
+    op_e)``, each ``[B, S]`` in the dtype family of the inputs.
+    """
+    S = cpos.shape[1]
+    rows_, cols_ = cpos // cols, cpos % cols
+    hops_dram = xp.minimum(cols_, cols - 1 - cols_)              # [B, S]
+    nxt = xp.roll(cpos, -1, axis=1)
+    r2, c2 = nxt // cols, nxt % cols
+    hops_next = xp.abs(rows_ - r2) + xp.abs(cols_ - c2)          # [B, S]
 
     delta_nop = pkg.contention_delta * max(0, n_active - 1) / pkg.nop_bw
     delta_dram = pkg.contention_delta * max(0, n_active - 1) / pkg.dram_bw
 
     def dram_lat(sz, hops):
-        return np.where(sz > 0,
+        return xp.where(sz > 0,
                         sz / pkg.dram_bw + hops * pkg.nop_hop_lat_s
                         + pkg.dram_lat_s + delta_dram * sz, 0.0)
 
     def nop_lat(sz, hops):
-        return np.where((sz > 0) & (hops > 0),
+        return xp.where((sz > 0) & (hops > 0),
                         sz / pkg.nop_bw + hops * pkg.nop_hop_lat_s
                         + delta_nop * sz, 0.0)
 
@@ -309,38 +340,97 @@ def eval_model_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
     # ip_com: weights from DRAM for every segment
     ip_lat = dram_lat(seg_w, hops_dram)
     ip_e = dram_e(seg_w, hops_dram)
-    # first segment input activations
-    act_in = float(db.in_bytes[cand.start])
-    first_c = cpos[:, 0]
-    fr, fc = np.divmod(first_c, mcm.cols)
-    f_hops_dram = np.minimum(fc, mcm.cols - 1 - fc)
+    # first segment input activations: DRAM cold, or NoP from the anchor
+    fr, fc = cpos[:, 0] // cols, cpos[:, 0] % cols
+    f_hops_dram = xp.minimum(fc, cols - 1 - fc)
+    act = act_in + 0 * fc                       # broadcast scalar -> [B]
     if prev_end is None:
-        add_lat = dram_lat(np.full(B, act_in), f_hops_dram)
-        add_e = dram_e(np.full(B, act_in), f_hops_dram)
+        add_lat = dram_lat(act, f_hops_dram)
+        add_e = dram_e(act, f_hops_dram)
     else:
-        pr, pc = divmod(int(prev_end), mcm.cols)
-        hops0 = np.abs(fr - pr) + np.abs(fc - pc)
-        add_lat = nop_lat(np.full(B, act_in), hops0)
-        add_e = nop_e(np.full(B, act_in), hops0)
-    ip_lat[:, 0] += add_lat
-    ip_e[:, 0] += add_e
+        pr, pc = prev_end // cols, prev_end % cols
+        hops0 = xp.abs(fr - pr) + xp.abs(fc - pc)
+        add_lat = nop_lat(act, hops0)
+        add_e = nop_e(act, hops0)
+    first = xp.arange(S) == 0
+    ip_lat = ip_lat + xp.where(first[None, :], add_lat[:, None], 0.0)
+    ip_e = ip_e + xp.where(first[None, :], add_e[:, None], 0.0)
 
-    # op_com: boundary activations; last layer of each segment
-    seg_last_out = np.zeros((B, S))
-    # last flat layer index of each segment, per candidate
-    lidx = np.arange(Lw)
-    for s in range(S):
-        in_seg = cand.seg_id == s
-        any_ = in_seg.any(axis=1)
-        last = np.where(any_, np.where(in_seg, lidx[None, :], -1).max(axis=1), 0)
-        seg_last_out[:, s] = np.where(any_, db.out_bytes[sl][last], 0.0)
-    is_last = (np.arange(S)[None, :] == (cand.n_segs - 1)[:, None])
-    op_lat = np.where(is_last,
+    # op_com: boundary activations; DRAM writeback on the last segment
+    is_last = xp.arange(S)[None, :] == (n_segs - 1)[:, None]
+    op_lat = xp.where(is_last,
                       dram_lat(seg_last_out, hops_dram),
                       nop_lat(seg_last_out, hops_next))
-    op_e = np.where(is_last,
+    op_e = xp.where(is_last,
                     dram_e(seg_last_out, hops_dram),
                     nop_e(seg_last_out, hops_next))
+    return ip_lat, ip_e, op_lat, op_e
+
+
+def comm_terms(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
+               n_active: int, prev_end: Optional[int] = None,
+               s_max: Optional[int] = None
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Float64 per-segment communication terms for one candidate batch.
+
+    Returns ``(ip_lat, ip_e, op_lat, op_e)``, each ``[B, S]``:
+
+    * ``ip``: segment weights stream from DRAM; the first segment also loads
+      its input activations — from DRAM when ``prev_end`` is None, else over
+      the NoP from the anchor chiplet (0 when already resident there);
+    * ``op``: boundary activations forward to the next segment's chiplet
+      (NoP) or, for the last segment, write back to DRAM.
+
+    Thin host-side wrapper over ``comm_from_parts`` (the shared geometry) +
+    ``segment_reductions``.  ``s_max`` shrinks the segment axis (shape
+    bucketing); values on segments ``>= n_segs`` are zero either way.
+    """
+    S = int(s_max) if s_max is not None else cand.chiplets.shape[1]
+    sl = slice(cand.start, cand.end)
+    cpos = np.maximum(cand.chiplets[:, :S], 0)
+    seg_w, seg_last_out = segment_reductions(
+        cand.seg_id, cand.n_segs, db.w_bytes[sl], db.out_bytes[sl], s_max=S)
+    prev = int(prev_end) if prev_end is not None else None
+    return comm_from_parts(np, mcm.pkg, mcm.cols, cpos, seg_w, seg_last_out,
+                           cand.n_segs, n_active,
+                           float(db.in_bytes[cand.start]), prev)
+
+
+def eval_model_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
+                          n_active: int,
+                          prev_end: Optional[int] = None,
+                          pipelined: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised (lat[B], energy[B]) for one model's candidate plans.
+
+    Exactly matches ``evaluate_window`` on singleton batches (tested).  This
+    float64 numpy path is the *parity oracle* for the backend-selectable
+    evaluator (``repro.core.evaluator``); the production large-batch path is
+    the ``kernels.scar_eval`` jax/Pallas bridge, which shares the comm
+    geometry through ``comm_terms``.
+    """
+    B, Lw = cand.seg_id.shape
+    S = cand.chiplets.shape[1]
+    sl = slice(cand.start, cand.end)
+
+    class_map = np.asarray(mcm.class_map, dtype=np.int64)
+    cpos = np.maximum(cand.chiplets, 0)
+    seg_cls = class_map[cpos]                                    # [B, S]
+    valid_seg = (np.arange(S)[None, :] < cand.n_segs[:, None])   # [B, S]
+
+    lat_tab = db.lat[sl]                                          # [Lw, C]
+    e_tab = db.energy[sl]
+    layer_cls = np.take_along_axis(seg_cls, cand.seg_id, axis=1)  # [B, Lw]
+    lidx = np.arange(Lw)[None, :]
+    lat_l = lat_tab[lidx, layer_cls]                              # [B, Lw]
+    e_l = e_tab[lidx, layer_cls]
+
+    # segment-sum compute terms
+    one_hot = (cand.seg_id[:, :, None] == np.arange(S)[None, None, :])
+    seg_comp_lat = np.einsum("bl,bls->bs", lat_l, one_hot)
+    seg_comp_e = np.einsum("bl,bls->bs", e_l, one_hot)
+
+    ip_lat, ip_e, op_lat, op_e = comm_terms(db, mcm, cand, n_active,
+                                            prev_end=prev_end)
 
     seg_lat = np.where(valid_seg, seg_comp_lat + ip_lat + op_lat, 0.0)
     energy = np.where(valid_seg, seg_comp_e + ip_e + op_e, 0.0).sum(axis=1)

@@ -1,0 +1,129 @@
+"""Backend-selectable SCHED candidate evaluation.
+
+One entry point — ``eval_candidates`` — scores a ``BatchedModelCandidates``
+batch on one of three backends:
+
+* ``numpy``   — ``cost.eval_model_candidates``, float64.  The parity oracle;
+  also the fastest choice for small batches (no device dispatch).
+* ``jax_ref`` — the jitted boundary-gather form in
+  ``kernels.scar_eval.ops.evaluate``, float32.  The production path on
+  hosts without an accelerator.
+* ``pallas``  — the ``kernels.scar_eval`` Pallas kernel, float32 (TPU;
+  ``interpret=True`` runs it anywhere for tests).
+
+Both jax backends run ``cost.comm_from_parts`` on device — the literal
+function the numpy oracle evaluates on host — so the comm geometry is
+shared with the oracle by construction; shape-bucketed padding (S shrunk to
+the per-batch max, B rounded up to ``EVAL_BLOCK_B``) keeps the jit cache to
+a few shapes per (model, window).
+
+Selection precedence: explicit ``backend=`` argument (``SearchConfig
+.eval_backend`` everywhere in the pipeline) > ``SCAR_EVAL_BACKEND`` env var
+> ``"auto"``.  ``auto`` dispatches on batch workload: below
+``SCAR_EVAL_AUTO_THRESHOLD`` (B*Lw elements, default 32768 — the
+measured numpy/jax crossover on CPU: 3x3 batches sit at <=9k, 16x16
+path_cap=1024 batches at 50k-260k) the numpy oracle wins on dispatch
+overhead; above it the jax path wins (Pallas when jax runs on a TPU,
+``jax_ref`` otherwise) — this is what routes the 16x16 hot loop through
+the kernel while 3x3 unit tests stay on numpy.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+from .chiplet import MCM
+from .cost import BatchedModelCandidates, eval_model_candidates
+from .maestro import CostDB
+
+BACKENDS = ("auto", "numpy", "jax_ref", "pallas")
+
+# Kernel batch block; pack_candidates pads B to a multiple of this.
+EVAL_BLOCK_B = 128
+
+# auto: batches below this many B*Lw elements stay on numpy.  Default for
+# the SCAR_EVAL_AUTO_THRESHOLD env override, which (like SCAR_EVAL_BACKEND)
+# is read per call so late setenv / monkeypatch takes effect.
+AUTO_WORK_THRESHOLD = 32_768
+
+
+def _auto_threshold() -> int:
+    env = os.environ.get("SCAR_EVAL_AUTO_THRESHOLD", "").strip()
+    return int(env) if env else AUTO_WORK_THRESHOLD
+
+_JAX_PLATFORM: Optional[str] = None
+
+
+def _jax_platform() -> str:
+    """jax.default_backend(), or "unavailable" when jax cannot initialise
+    (auto then stays on numpy instead of failing at dispatch time)."""
+    global _JAX_PLATFORM
+    if _JAX_PLATFORM is None:
+        try:
+            import jax
+            _JAX_PLATFORM = jax.default_backend()
+        except Exception:  # jax unavailable/misconfigured
+            _JAX_PLATFORM = "unavailable"
+    return _JAX_PLATFORM
+
+
+def resolve_backend(backend: Optional[str] = None,
+                    work: Optional[int] = None) -> str:
+    """Concrete backend name for a request (see module docstring).
+
+    ``work`` is the batch workload (B*Lw) the ``auto`` policy dispatches on;
+    ``auto`` with no ``work`` resolves to the large-batch choice.
+    """
+    b = backend or "auto"
+    if b == "auto":
+        b = os.environ.get("SCAR_EVAL_BACKEND", "").strip() or "auto"
+    if b not in BACKENDS:
+        raise KeyError(f"unknown eval backend {b!r}; have {BACKENDS}")
+    if b != "auto":
+        return b
+    if work is not None and work < _auto_threshold():
+        return "numpy"
+    platform = _jax_platform()
+    if platform == "unavailable":
+        return "numpy"
+    return "pallas" if platform == "tpu" else "jax_ref"
+
+
+def eval_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
+                    n_active: int, prev_end: Optional[int] = None,
+                    pipelined: bool = True,
+                    backend: Optional[str] = None,
+                    interpret: bool = False
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """(lat[B], energy[B]) float64 via the selected backend.
+
+    The jax backends compute in float32 and are parity-tested against the
+    numpy oracle within float32 tolerance (see ``tests/test_evaluator.py``);
+    callers that need deterministic cross-backend ordering quantise scores
+    before sorting (``sched.build_candidates``).
+    """
+    B, Lw = cand.seg_id.shape
+    resolved = resolve_backend(backend, work=B * Lw)
+    if resolved == "numpy":
+        return eval_model_candidates(db, mcm, cand, n_active,
+                                     prev_end=prev_end, pipelined=pipelined)
+    if resolved == "pallas" and not interpret and _jax_platform() != "tpu":
+        # fail fast with an actionable message instead of a lowering error
+        # deep inside schedule(); tests run the kernel anywhere by passing
+        # interpret=True
+        raise RuntimeError(
+            "eval backend 'pallas' needs a TPU (jax platform is "
+            f"{_jax_platform()!r}); use 'jax_ref' here, or interpret=True "
+            "for kernel tests")
+    from repro.kernels.scar_eval import evaluate, pack_candidates
+    args, statics, b_real = pack_candidates(db, mcm, cand, n_active,
+                                            prev_end=prev_end,
+                                            pad_b=EVAL_BLOCK_B,
+                                            pipelined=pipelined)
+    out = np.asarray(evaluate(*args, **statics, block_b=EVAL_BLOCK_B,
+                              interpret=interpret,
+                              use_kernel=(resolved == "pallas")))
+    return (out[:b_real, 0].astype(np.float64),
+            out[:b_real, 1].astype(np.float64))

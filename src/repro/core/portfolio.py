@@ -9,7 +9,10 @@ every caller:
 * ``SweepJob`` is one picklable grid point (pattern name + mesh size + cfg
   overrides, never live objects, so jobs ship cheaply to workers);
   ``TraceJob`` is its online analogue (a ``scenarios.TRACE_PRESETS`` trace
-  replayed through ``repro.online.simulate``).
+  replayed through ``repro.online.simulate``).  The evaluator backend rides
+  along in ``SearchConfig.eval_backend`` (``repro.core.evaluator``), so
+  large-mesh sweeps score candidates on the jax path inside each worker
+  while small meshes stay on numpy — no per-worker wiring needed.
 * ``run_portfolio`` executes a job list inline (``processes<=1``) or on a
   spawn-based process pool; jobs are dispatched grouped by CostDB affinity
   so identical (scenario/trace, MCM) points share one worker's warm caches.

@@ -30,9 +30,9 @@ import numpy as np
 
 from .chiplet import MCM
 from .cost import (BatchedModelCandidates, ModelWindowPlan, WindowPlan,
-                   WindowResult, eval_model_candidates, evaluate_schedule,
-                   evaluate_window)
+                   WindowResult, evaluate_schedule, evaluate_window)
 from .engine import metric_score
+from .evaluator import eval_candidates
 from .maestro import CostDB
 from .scheduler import ScheduleOutcome, get_cost_db
 
@@ -138,11 +138,12 @@ def _try_boundary(rng, windows, ctx) -> _Move | None:
 def _try_relocate(rng, windows, ctx) -> _Move | None:
     """Move one segment to the best free chiplet (batched screening).
 
-    Every free target is scored in one vectorized ``eval_model_candidates``
-    pass; the winner becomes the proposal, which the annealer still accepts
-    or rejects on the exact schedule-level metric.
+    Every free target is scored in one vectorized ``eval_candidates``
+    pass (backend-selectable; see ``repro.core.evaluator``); the winner
+    becomes the proposal, which the annealer still accepts or rejects on the
+    exact schedule-level metric.
     """
-    db, mcm, ev, metric = ctx
+    db, mcm, ev, metric, backend = ctx
     w = int(rng.integers(len(windows)))
     ps = windows[w]
     if not ps:
@@ -174,11 +175,13 @@ def _try_relocate(rng, windows, ctx) -> _Move | None:
     cand = BatchedModelCandidates(
         model_idx=p.model_idx, start=p.start, end=p.end,
         seg_id=np.tile(seg_id_row, (n_free, 1)), chiplets=chips,
-        n_segs=np.full(n_free, p.n_segments, dtype=np.int64))
-    lat, energy = eval_model_candidates(
+        n_segs=np.full(n_free, p.n_segments, dtype=np.int64),
+        seg_ends=np.tile(np.asarray(p.seg_ends, dtype=np.int64),
+                         (n_free, 1)))
+    lat, energy = eval_candidates(
         db, mcm, cand, n_active=len(ps),
         prev_end=ev.prev_end_at(w).get(p.model_idx),
-        pipelined=p.pipelined)
+        pipelined=p.pipelined, backend=backend)
     # sample among the screened top-k: pure argmin starves the annealer of
     # proposal diversity and gets stuck re-proposing one target
     score = metric_score(lat, energy, metric)
@@ -267,15 +270,21 @@ def _clone_windows_replace(windows, w, i, new_plan):
 
 def refine(sc, mcm: MCM, outcome: ScheduleOutcome, metric: str = "edp",
            iters: int = 600, seed: int = 0,
-           temperature: float = 0.02) -> ScheduleOutcome:
-    """Anneal-refine a schedule; returns an outcome that is never worse."""
+           temperature: float = 0.02,
+           backend: str = "auto") -> ScheduleOutcome:
+    """Anneal-refine a schedule; returns an outcome that is never worse.
+
+    ``backend`` selects the relocate-screening evaluator
+    (``repro.core.evaluator``); acceptance always uses the exact scalar
+    accounting regardless of backend.
+    """
     db = get_cost_db(sc, mcm)
     rng = np.random.default_rng(seed)
     windows = _from_window_plans([w.plan for w in outcome.windows])
     if not windows:
         return outcome
     ev = _IncrementalEvaluator(db, mcm, windows)
-    ctx = (db, mcm, ev, metric)
+    ctx = (db, mcm, ev, metric, backend)
     cur_m = metric_score(float(sum(r.latency for r in ev.results)),
                          float(sum(r.energy for r in ev.results)), metric)
     best_windows, best_m = windows, cur_m

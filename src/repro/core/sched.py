@@ -23,13 +23,15 @@ from typing import Optional
 import numpy as np
 
 from .chiplet import MCM
-from .cost import BatchedModelCandidates, eval_model_candidates
+from .cost import BatchedModelCandidates
 from .engine import BeamEngine, ModelCandidateSet, WindowSearchResult
+from .evaluator import eval_candidates
 from .maestro import CostDB
 from .paths import frontier_paths
+from .segmentation import quantize_scores
 
-__all__ = ["enumerate_paths", "build_candidates", "combine_candidates",
-           "ModelCandidateSet", "WindowSearchResult"]
+__all__ = ["enumerate_paths", "assemble_candidates", "build_candidates",
+           "combine_candidates", "ModelCandidateSet", "WindowSearchResult"]
 
 
 def enumerate_paths(mcm: MCM, length: int, starts: list[int],
@@ -69,22 +71,20 @@ def enumerate_paths(mcm: MCM, length: int, starts: list[int],
     return paths
 
 
-def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
-                     rng_range: tuple[int, int],
-                     segmentations: list[tuple[int, ...]],
-                     n_active: int,
-                     prev_end: Optional[int],
-                     path_cap: int = 256,
-                     keep: int = 64,
-                     metric: str = "edp",
-                     frontier_cap: Optional[int] = None) -> ModelCandidateSet:
-    """Enumerate (segmentation x path) candidates for one model, keep top-k.
+def assemble_candidates(mcm: MCM, model_idx: int,
+                        rng_range: tuple[int, int],
+                        segmentations: list[tuple[int, ...]],
+                        prev_end: Optional[int],
+                        path_cap: int = 256,
+                        frontier_cap: Optional[int] = None
+                        ) -> tuple[BatchedModelCandidates, np.ndarray, tuple]:
+    """Candidate *construction* only, no scoring.
 
-    Fully tensorised: path pools come out of ``paths.frontier_paths`` as
-    ``[N, L]`` int16 / ``[N, W]`` uint64 arrays, per-segmentation blocks are
-    assembled with broadcasts, and the resulting ``ModelCandidateSet``
-    carries the tensors straight through to the search engines — no Python
-    tuple is built per candidate anywhere on this path.
+    Returns ``(cand, tiers[B], (words[B, W], chips[B, S], seg_arr[B, S]))``.
+
+    The (segmentation x tier x path) tensor assembly of ``build_candidates``
+    without the scoring stage, so benchmarks and tests can time/exercise the
+    evaluator backends on exactly the production candidate batches.
     """
     start, end = rng_range
     starts = list(mcm.dram_ports())
@@ -156,9 +156,48 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
     cand = BatchedModelCandidates(model_idx=model_idx, start=start, end=end,
                                   seg_id=seg_id,
                                   chiplets=chips.astype(np.int64),
-                                  n_segs=n_segs)
-    lat, energy = eval_model_candidates(db, mcm, cand, n_active=n_active,
-                                        prev_end=prev_end)
+                                  n_segs=n_segs, seg_ends=seg_arr)
+    return cand, tiers, (words, chips, seg_arr)
+
+
+def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
+                     rng_range: tuple[int, int],
+                     segmentations: list[tuple[int, ...]],
+                     n_active: int,
+                     prev_end: Optional[int],
+                     path_cap: int = 256,
+                     keep: int = 64,
+                     metric: str = "edp",
+                     frontier_cap: Optional[int] = None,
+                     backend: Optional[str] = None) -> ModelCandidateSet:
+    """Enumerate (segmentation x path) candidates for one model, keep top-k.
+
+    Fully tensorised: path pools come out of ``paths.frontier_paths`` as
+    ``[N, L]`` int16 / ``[N, W]`` uint64 arrays, per-segmentation blocks are
+    assembled with broadcasts, and the resulting ``ModelCandidateSet``
+    carries the tensors straight through to the search engines — no Python
+    tuple is built per candidate anywhere on this path.
+
+    ``backend`` selects the scoring evaluator (``repro.core.evaluator``:
+    numpy oracle | jitted jax_ref | Pallas kernel; ``None``/"auto" dispatches
+    on batch size).  Ordering determinism: scores are quantised to 6
+    significant digits before the stable (tier, score) lexsort, so the
+    order is (i) deterministic per backend, and (ii) for *exactly* tied
+    candidates — structural duplicates, repeated blocks — the enumeration
+    order, identically on every backend (the tie-break pattern of
+    ``segmentation.top_k_segmentations``, coarsened for f32).  Near-ties
+    whose float32 and float64 scores land across a quantisation boundary
+    may still swap between backends; such swaps are score-equivalent within
+    the documented f32 tolerance (asserted on all ten paper scenarios in
+    ``tests/test_evaluator.py``).
+    """
+    start, end = rng_range
+    cand, tiers, (words, chips, seg_arr) = assemble_candidates(
+        mcm, model_idx, rng_range, segmentations, prev_end,
+        path_cap=path_cap, frontier_cap=frontier_cap)
+    n_segs = cand.n_segs
+    lat, energy = eval_candidates(db, mcm, cand, n_active=n_active,
+                                  prev_end=prev_end, backend=backend)
     if metric == "latency":
         score = lat
     elif metric == "energy":
@@ -168,7 +207,7 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
     # Keep ALL candidates sorted by (tier, score); the combiner expands the
     # first ``keep`` per beam item and falls back deeper (eventually into the
     # unconstrained-root tier) only when blocked by exclusive occupancy.
-    order = np.lexsort((score, tiers))
+    order = np.lexsort((quantize_scores(score, sig=5), tiers))
     return ModelCandidateSet(
         model_idx=model_idx, start=start, end=end,
         lat=lat[order], energy=energy[order], keep=keep,

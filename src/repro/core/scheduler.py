@@ -50,6 +50,14 @@ class SearchConfig:
     #                                     iters / hotter chains don't pay
     seed: int = 0
     refine_iters: int = 0               # beyond-paper anneal refinement
+    eval_backend: str = "auto"          # candidate evaluator backend
+    #                                     (repro.core.evaluator): numpy
+    #                                     oracle | jitted jax_ref | pallas
+    #                                     kernel; "auto" keeps small batches
+    #                                     on numpy and routes large ones
+    #                                     (16x16 path_cap=1024 territory)
+    #                                     through the jax path.  Env override:
+    #                                     SCAR_EVAL_BACKEND.
 
 
 @dataclasses.dataclass
@@ -139,7 +147,7 @@ def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
             db, mcm, mi, (s, e), segs, n_active=n_active,
             prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
             keep=cfg.keep_per_model, metric=cfg.metric,
-            frontier_cap=cfg.frontier_cap)
+            frontier_cap=cfg.frontier_cap, backend=cfg.eval_backend)
         if key is not None:
             memo[key] = cs
         sets.append(cs)
@@ -217,7 +225,8 @@ def schedule(sc: Scenario, mcm: MCM,
     if cfg.refine_iters > 0:
         from .refine import refine  # local import: refine uses this module
         outcome = refine(sc, mcm, outcome, metric=cfg.metric,
-                         iters=cfg.refine_iters, seed=cfg.seed)
+                         iters=cfg.refine_iters, seed=cfg.seed,
+                         backend=cfg.eval_backend)
     return outcome
 
 

@@ -138,12 +138,13 @@ def score_segmentations_batch(db: CostDB, mcm: MCM, start: int,
     return lat * energy
 
 
-def _quantize_scores(scores: np.ndarray, sig: int = 11) -> np.ndarray:
+def quantize_scores(scores: np.ndarray, sig: int = 11) -> np.ndarray:
     """Round to ``sig + 1`` significant digits (12 at the default) so
     structurally tied candidates
     (identical segments summed in a different order by the batched pass)
     compare exactly equal and fall back to stable enumeration order, matching
-    the scalar loop's stable sort."""
+    the scalar loop's stable sort.  ``sched.build_candidates`` uses a coarser
+    ``sig`` to also absorb float32-backend noise (see there)."""
     out = np.asarray(scores, dtype=np.float64).copy()
     nz = np.isfinite(out) & (out != 0)
     exp = np.floor(np.log10(np.abs(out[nz])))
@@ -157,7 +158,7 @@ def top_k_segmentations(db: CostDB, mcm: MCM, start: int, end: int,
                         metric: str = "edp") -> list[tuple[int, ...]]:
     """Heuristic 1 step 1: per-model top-k segmentations by solo score."""
     cands = enumerate_segmentations(end - start, n_nodes, cap=cap)
-    scores = _quantize_scores(
+    scores = quantize_scores(
         score_segmentations_batch(db, mcm, start, cands, metric))
     order = np.argsort(scores, kind="stable")[:k]
     return [cands[i] for i in order]
@@ -174,3 +175,7 @@ def co_explore(per_model_topk: dict[int, list[tuple[int, ...]]],
         if len(combos) >= cap:
             break
     return combos
+
+
+# backward-compatible alias (pre-promotion name)
+_quantize_scores = quantize_scores

@@ -16,6 +16,11 @@ Inputs (all f32):
   pipe             [B, 1]      1.0 -> pipelined (max), 0.0 -> sequential (sum)
 Output:
   out              [B, 2]      (window latency, window energy)
+
+The dense one-hots and the comm terms are produced on device by the jitted
+wrapper (``ops.evaluate``), which runs the shared
+``repro.core.cost.comm_from_parts`` geometry; ``ref.scar_eval_ref`` is the
+block-semantics oracle this kernel is tested against.
 """
 from __future__ import annotations
 

@@ -1,9 +1,36 @@
 """Wrapper + bridge from ``repro.core`` candidate sets to kernel inputs.
 
 ``pack_candidates`` converts a ``BatchedModelCandidates`` + CostDB + MCM into
-the dense tensors the kernel consumes (communication terms precomputed on
-host — they are O(B*S) scalar geometry, not the hot loop).  This lets the
-kernel be tested end-to-end against ``repro.core.cost.eval_model_candidates``.
+the compact tensors the jitted ``evaluate`` consumes: ``[B, S]`` integer
+chiplet ids and segment-boundary indices (plus ``[B, Lw]`` layer segment ids
+for the dense kernel form) and the per-layer cost tables.  Everything
+derived — per-segment reductions and the communication terms — is computed
+*inside* the jit, on device, through the SAME
+``repro.core.cost.comm_from_parts`` formulas the numpy oracle uses (this
+module once carried a hand-copied clone of that geometry, plus a hard-coded
+``pipelined=True``; both bridge divergences are gone).
+
+Two device forms share those terms:
+
+* ``use_kernel=False`` (jax_ref): within a segment the chiplet class is
+  constant, so segment compute sums are differences of the per-class
+  prefix-summed cost tables gathered at segment boundaries — O(B*S) work,
+  no ``[B, Lw]`` tensor is ever materialised.  The fast form on non-MXU
+  backends.
+* ``use_kernel=True`` (Pallas): the dense one-hot form, where the segment
+  reduction is an MXU matvec over VMEM-resident candidate blocks.
+
+Shape bucketing keeps the jit cache small across a search run: the segment
+axis ``S`` is shrunk to the per-batch max segment count (padded segments
+carry only zeros and are masked), and the batch axis ``B`` is padded up to
+a multiple of ``pad_b`` (= the kernel block), so every batch of a given
+(Lw, S) lands on one of a few discrete shapes instead of recompiling per
+candidate count.
+
+Static jit keys: package params + mesh cols + ``n_active`` + the
+``pipelined`` / ``has_prev`` mode flags — a handful of values per run.  The
+locality anchor itself (``prev_idx``) is traced, so warm-start anchors do
+not recompile.
 """
 from __future__ import annotations
 
@@ -13,98 +40,122 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cost import comm_from_parts, segment_last_layers
+
 from .kernel import scar_eval
-from .ref import scar_eval_ref
 
 
-@partial(jax.jit, static_argnames=("block_b", "interpret", "use_kernel"))
-def evaluate(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e, seg_valid,
-             pipe, *, block_b: int = 128, interpret: bool = False,
+@partial(jax.jit, static_argnames=("pkg", "mcm_cols", "n_active",
+                                   "pipelined", "has_prev", "block_b",
+                                   "interpret", "use_kernel"))
+def evaluate(lat_tab, e_tab, w_bytes, out_bytes, class_map, chips, seg_id,
+             last, n_segs, act_in, prev_idx, *, pkg, mcm_cols: int,
+             n_active: int, pipelined: bool = True, has_prev: bool = False,
+             block_b: int = 128, interpret: bool = False,
              use_kernel: bool = True):
+    """[B, 2] (latency, energy) from compact packed inputs.
+
+    ``chips``/``seg_id``/``last``/``n_segs`` are integer ids (``last`` is
+    the window-relative index of each segment's final layer); reductions and
+    ``comm_from_parts`` run on device, fused into the jit.  ``prev_idx`` is
+    the (traced) locality anchor, consulted only when ``has_prev``.
+    """
+    B, S = chips.shape
+    Lw, C = lat_tab.shape
+    cpos = jnp.maximum(chips, 0)
+    seg_cls = class_map[cpos]                                    # [B, S]
+    exists = jnp.arange(S)[None, :] < n_segs[:, None]
+    lastc = jnp.clip(last, 0, Lw - 1)
+    prev = jnp.concatenate([jnp.full((B, 1), -1, jnp.int32),
+                            last[:, :-1]], axis=1)
+    prevc = jnp.maximum(prev, -1) + 1                            # [B, S] >= 0
+
+    # per-segment reductions as prefix-sum differences at the boundaries
+    # (cf. cost.segment_reductions, device form)
+    seg_last_out = jnp.where(exists, out_bytes[lastc], 0.0)
+    cw = jnp.concatenate([jnp.zeros(1, jnp.float32),
+                          jnp.cumsum(w_bytes)])                  # [Lw + 1]
+    seg_w = jnp.where(exists, cw[lastc + 1] - cw[prevc], 0.0)
+
+    ip_lat, ip_e, op_lat, op_e = comm_from_parts(
+        jnp, pkg, mcm_cols, cpos, seg_w, seg_last_out, n_segs, n_active,
+        act_in, prev_idx if has_prev else None)
+    comm_lat = ip_lat + op_lat
+    comm_e = ip_e + op_e
+    valid = exists.astype(jnp.float32)
+
     if use_kernel:
+        # dense one-hot form: the Pallas kernel turns the segment reduction
+        # into MXU matvecs over VMEM-resident candidate blocks
+        layer_cls = jnp.take_along_axis(seg_cls, seg_id, axis=1)  # [B, Lw]
+        cls_oh = (layer_cls[..., None] == jnp.arange(C, dtype=jnp.int32)
+                  ).astype(jnp.float32)
+        seg_oh = (seg_id[..., None] == jnp.arange(S, dtype=jnp.int32)
+                  ).astype(jnp.float32)
+        pipe = jnp.full((B, 1), 1.0 if pipelined else 0.0, jnp.float32)
         return scar_eval(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e,
-                         seg_valid, pipe, block_b=block_b,
-                         interpret=interpret)
-    return scar_eval_ref(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e,
-                         seg_valid, pipe)
+                         valid, pipe, block_b=block_b, interpret=interpret)
+
+    # jax_ref: the class is constant within a segment, so the segment
+    # compute sum is a difference of the prefix-summed per-class table at
+    # the segment boundaries — O(B*S) gathers, the fast non-MXU form.
+    # Semantics are pinned to scar_eval_ref / the numpy oracle by parity
+    # tests (tests/test_evaluator.py, tests/test_kernels.py).
+    zrow = jnp.zeros((1, C), jnp.float32)
+    cum_lat = jnp.concatenate([zrow, jnp.cumsum(lat_tab, axis=0)])
+    cum_e = jnp.concatenate([zrow, jnp.cumsum(e_tab, axis=0)])
+    seg_comp_lat = cum_lat[lastc + 1, seg_cls] - cum_lat[prevc, seg_cls]
+    seg_comp_e = cum_e[lastc + 1, seg_cls] - cum_e[prevc, seg_cls]
+
+    seg_lat = jnp.where(exists, seg_comp_lat + comm_lat, 0.0)
+    energy = jnp.where(exists, seg_comp_e + comm_e, 0.0).sum(axis=1)
+    lat_sum = seg_lat.sum(axis=1)
+    if pipelined:
+        lat_max = jnp.max(jnp.where(exists, seg_lat, -jnp.inf), axis=1)
+        lat = jnp.where(n_segs > 1, lat_max, lat_sum)
+    else:
+        lat = lat_sum
+    return jnp.stack([lat, energy], axis=-1)
 
 
 def pack_candidates(db, mcm, cand, n_active: int, prev_end=None,
-                    pad_b: int = 128):
-    """Dense kernel inputs for one model's candidate batch (numpy -> jnp)."""
-    from repro.core.cost import eval_model_candidates  # noqa: F401 (oracle)
-    pkg = mcm.pkg
+                    pad_b: int = 128, *, pipelined: bool = True):
+    """Compact, shape-bucketed inputs for one model's candidate batch.
+
+    Returns ``(args, statics, B)``: positional arrays for ``evaluate``, the
+    static keyword arguments (``pkg``/``mcm_cols``/``n_active``/
+    ``pipelined``/``has_prev``) and the real (pre-padding) candidate count.
+    ``pipelined=False`` selects the sequential (sum over segments) latency
+    mode, matching ``eval_model_candidates(..., pipelined=False)``.
+    """
     B, Lw = cand.seg_id.shape
-    S = cand.chiplets.shape[1]
-    sl = slice(cand.start, cand.end)
-    lat_tab = db.lat[sl].astype(np.float32)
-    e_tab = db.energy[sl].astype(np.float32)
-    class_map = np.asarray(mcm.class_map)
-    cpos = np.maximum(cand.chiplets, 0)
-    seg_cls = class_map[cpos]                                  # [B, S]
-    layer_cls = np.take_along_axis(seg_cls, cand.seg_id, axis=1)
-    C = lat_tab.shape[1]
-    cls_oh = (layer_cls[..., None] == np.arange(C)).astype(np.float32)
-    seg_oh = (cand.seg_id[..., None] == np.arange(S)).astype(np.float32)
-    valid = (np.arange(S)[None] < cand.n_segs[:, None]).astype(np.float32)
+    S = max(1, int(cand.n_segs.max()))           # shrink to per-batch max
+    lat_tab = db.lat[cand.start:cand.end].astype(np.float32)
+    e_tab = db.energy[cand.start:cand.end].astype(np.float32)
+    w_bytes = db.w_bytes[cand.start:cand.end].astype(np.float32)
+    out_bytes = db.out_bytes[cand.start:cand.end].astype(np.float32)
+    class_map = np.asarray(mcm.class_map, dtype=np.int32)
 
-    # host-side communication terms (mirrors repro.core.cost geometry)
-    rows, cols = np.divmod(cpos, mcm.cols)
-    hops_dram = np.minimum(cols, mcm.cols - 1 - cols)
-    nxt = np.roll(cpos, -1, axis=1)
-    r2, c2 = np.divmod(nxt, mcm.cols)
-    hops_next = np.abs(rows - r2) + np.abs(cols - c2)
-    dl = pkg.contention_delta * max(0, n_active - 1)
-
-    seg_w = np.einsum("l,bls->bs", db.w_bytes[sl].astype(np.float32), seg_oh)
-    lidx = np.arange(Lw)
-    last = np.where(seg_oh > 0, lidx[None, :, None], -1).max(axis=1)
-    seg_out = np.where(last >= 0, db.out_bytes[sl][np.maximum(last, 0)], 0.0)
-
-    def dram_lat(sz, hops):
-        return np.where(sz > 0, sz / pkg.dram_bw + hops * pkg.nop_hop_lat_s
-                        + pkg.dram_lat_s + dl * sz / pkg.dram_bw, 0.0)
-
-    def nop_lat(sz, hops):
-        return np.where((sz > 0) & (hops > 0), sz / pkg.nop_bw
-                        + hops * pkg.nop_hop_lat_s + dl * sz / pkg.nop_bw,
-                        0.0)
-
-    def dram_e(sz, hops):
-        return sz * 8.0 * (pkg.dram_e_pj_per_bit
-                           + pkg.nop_e_pj_per_bit * hops) * 1e-12
-
-    def nop_e(sz, hops):
-        return sz * 8.0 * pkg.nop_e_pj_per_bit * hops * 1e-12
-
-    comm_lat = dram_lat(seg_w, hops_dram)
-    comm_e = dram_e(seg_w, hops_dram)
-    act_in = float(db.in_bytes[cand.start])
-    fr, fc = np.divmod(cpos[:, 0], mcm.cols)
-    fh = np.minimum(fc, mcm.cols - 1 - fc)
-    if prev_end is None:
-        comm_lat[:, 0] += dram_lat(np.full(B, act_in), fh)
-        comm_e[:, 0] += dram_e(np.full(B, act_in), fh)
+    chips = cand.chiplets[:, :S].astype(np.int32)
+    seg_id = cand.seg_id.astype(np.int32)
+    n_segs = cand.n_segs.astype(np.int32)
+    if cand.seg_ends is not None:                # free at construction time
+        last = (cand.seg_ends[:, :S] - cand.start - 1).astype(np.int32)
     else:
-        pr, pc = divmod(int(prev_end), mcm.cols)
-        h0 = np.abs(fr - pr) + np.abs(fc - pc)
-        comm_lat[:, 0] += nop_lat(np.full(B, act_in), h0)
-        comm_e[:, 0] += nop_e(np.full(B, act_in), h0)
-    is_last = (np.arange(S)[None] == (cand.n_segs - 1)[:, None])
-    comm_lat += np.where(is_last, dram_lat(seg_out, hops_dram),
-                         nop_lat(seg_out, hops_next))
-    comm_e += np.where(is_last, dram_e(seg_out, hops_dram),
-                       nop_e(seg_out, hops_next))
+        last = segment_last_layers(cand.seg_id, S).astype(np.int32)
 
-    pipe = np.ones((B, 1), np.float32)
     pad = (-B) % pad_b
     if pad:
         def z(a):
             return np.concatenate([a, np.zeros((pad,) + a.shape[1:],
                                                a.dtype)])
-        cls_oh, seg_oh, valid = z(cls_oh), z(seg_oh), z(valid)
-        comm_lat, comm_e, pipe = z(comm_lat), z(comm_e), z(pipe)
+        chips, seg_id = z(chips), z(seg_id)
+        last, n_segs = z(last), z(n_segs)
     args = tuple(jnp.asarray(a) for a in
-                 (lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e, valid,
-                  pipe))
-    return args, B
+                 (lat_tab, e_tab, w_bytes, out_bytes, class_map, chips,
+                  seg_id, last, n_segs,
+                  np.float32(db.in_bytes[cand.start]),
+                  np.int32(prev_end if prev_end is not None else 0)))
+    statics = dict(pkg=mcm.pkg, mcm_cols=mcm.cols, n_active=n_active,
+                   pipelined=pipelined, has_prev=prev_end is not None)
+    return args, statics, B

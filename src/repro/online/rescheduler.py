@@ -25,7 +25,11 @@ Because the planner is a deterministic pure function of
 (active set, anchors, MCM, config), every warm reuse returns a plan
 bit-identical to what the cold oracle recomputes — pinned per-epoch by
 ``tests/test_online.py`` and ``benchmarks/online_benches.py`` (which also
-guards the >=3x warm median re-plan speedup on 6x6 churn).
+guards the >=3x warm median re-plan speedup on 6x6 churn).  The candidate
+evaluator backend (``SearchConfig.eval_backend``; ``repro.core.evaluator``)
+is part of that config identity, so warm/cold parity holds per backend and
+the jitted jax path's compilation cache — which ``clear_caches`` leaves
+alone, it is not a SCAR planning cache — amortises across epochs.
 """
 from __future__ import annotations
 

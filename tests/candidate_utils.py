@@ -1,0 +1,34 @@
+"""Shared test helper: random ``BatchedModelCandidates`` batches.
+
+Encodes the construction invariants (monotone contiguous ``seg_id`` rows,
+-1-padded chiplet paths) once for every test module that needs a seeded
+random candidate batch (``test_kernels``, ``test_evaluator``).  Not a test
+module itself — pytest only collects ``test_*.py``.
+"""
+import numpy as np
+
+from repro.core.cost import BatchedModelCandidates
+
+
+def random_candidate_batch(rng, db, mcm, model_idx=None, B=16, S=4):
+    """Seeded random (segmentation x placement) batch for one model.
+
+    ``model_idx=None`` draws the model from ``rng`` (matching the historic
+    kernel-test behaviour, so seeded tests keep their exact batches).
+    """
+    mi = int(rng.integers(0, db.n_models)) if model_idx is None \
+        else int(model_idx)
+    sl = db.model_slice(mi)
+    Lw = sl.stop - sl.start
+    seg_id = np.sort(rng.integers(0, S, (B, Lw)), axis=1)
+    for b in range(B):
+        _, inv = np.unique(seg_id[b], return_inverse=True)
+        seg_id[b] = inv
+    n_segs = seg_id.max(axis=1) + 1
+    chips = np.full((B, S), -1, dtype=np.int64)
+    for b in range(B):
+        chips[b, :n_segs[b]] = rng.choice(mcm.n_chiplets, n_segs[b],
+                                          replace=False)
+    return BatchedModelCandidates(model_idx=mi, start=sl.start, end=sl.stop,
+                                  seg_id=seg_id, chiplets=chips,
+                                  n_segs=n_segs)

@@ -1,0 +1,315 @@
+"""Backend-selectable evaluator: shared comm geometry, segment reductions,
+float32-vs-float64 parity on all ten paper scenarios, quantised tie-break,
+shape bucketing, and backend selection semantics."""
+import numpy as np
+import pytest
+
+from candidate_utils import random_candidate_batch
+
+from repro.core import SearchConfig, get_scenario, make_mcm, scenarios
+from repro.core.cost import (_dram_energy, _dram_lat, _nop_energy, _nop_lat,
+                             comm_terms, segment_reductions)
+from repro.core.evaluator import (AUTO_WORK_THRESHOLD, eval_candidates,
+                                  resolve_backend)
+from repro.core.provision import provision
+from repro.core.reconfig import greedy_pack
+from repro.core.sched import assemble_candidates, build_candidates
+from repro.core.scheduler import get_cost_db, schedule
+from repro.core.segmentation import quantize_scores, top_k_segmentations
+
+F32_SCORE_RTOL = 2e-4          # documented jax-vs-numpy score tolerance
+
+
+def _random_batch(rng, db, mcm, mi, B=24, S=4):
+    return random_candidate_batch(rng, db, mcm, model_idx=mi, B=B, S=S)
+
+
+def _window0_batches(scn, pattern="het_sides", rows=3, cols=3):
+    """Production candidate batches (window 0) for one scenario."""
+    sc = get_scenario(scn)
+    npe = 4096 if scn.startswith("dc") else 256
+    mcm = make_mcm(pattern, rows=rows, cols=cols, n_pe=npe)
+    db = get_cost_db(sc, mcm)
+    wa = greedy_pack(db, mcm.class_counts(), 4)
+    ranges = wa.ranges[0]
+    alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
+                      metric="edp", max_nodes_per_model=6)
+    out = []
+    for mi, (s, e) in sorted(ranges.items()):
+        segs = top_k_segmentations(db, mcm, s, e, alloc[mi], k=4, cap=128,
+                                   metric="edp")
+        cand, tiers, _ = assemble_candidates(mcm, mi, (s, e), segs, None,
+                                             path_cap=64)
+        out.append((db, mcm, cand, tiers, len(ranges)))
+    return out
+
+
+# --------------------- shared comm geometry (satellite 2) -------------------
+
+def test_comm_terms_matches_scalar_geometry():
+    """The consolidated ``comm_terms`` reproduces the scalar per-segment
+    helpers of ``evaluate_window`` (``_dram_lat``/``_nop_lat``/energies) —
+    the geometry that used to exist twice (cost.py + scar_eval/ops.py)."""
+    sc = get_scenario("xr7_ar_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    db = get_cost_db(sc, mcm)
+    rng = np.random.default_rng(11)
+    for mi in range(db.n_models):
+        for prev_end in (None, 2, 7):
+            cand = _random_batch(rng, db, mcm, mi)
+            n_active = 3
+            ip_lat, ip_e, op_lat, op_e = comm_terms(db, mcm, cand, n_active,
+                                                    prev_end=prev_end)
+            B, S = cand.chiplets.shape
+            for b in range(B):
+                ns = int(cand.n_segs[b])
+                seg_start = cand.start
+                for s in range(S):
+                    if s >= ns:
+                        assert ip_lat[b, s] == op_lat[b, s] == 0.0
+                        assert ip_e[b, s] == op_e[b, s] == 0.0
+                        continue
+                    in_seg = np.flatnonzero(cand.seg_id[b] == s) + cand.start
+                    seg_end = int(in_seg[-1]) + 1
+                    cid = int(cand.chiplets[b, s])
+                    hops_dram = mcm.hops_to_dram(cid)
+                    w_sz = float(db.w_bytes[seg_start:seg_end].sum())
+                    ref_ip = _dram_lat(w_sz, hops_dram, mcm, n_active)
+                    ref_ip_e = _dram_energy(w_sz, hops_dram, mcm)
+                    if s == 0:
+                        act = float(db.in_bytes[cand.start])
+                        if prev_end is None:
+                            ref_ip += _dram_lat(act, hops_dram, mcm, n_active)
+                            ref_ip_e += _dram_energy(act, hops_dram, mcm)
+                        elif prev_end != cid:
+                            h = mcm.hops(prev_end, cid)
+                            ref_ip += _nop_lat(act, h, mcm, n_active)
+                            ref_ip_e += _nop_energy(act, h, mcm)
+                    act_out = float(db.out_bytes[seg_end - 1])
+                    if s + 1 < ns:
+                        h = mcm.hops(cid, int(cand.chiplets[b, s + 1]))
+                        ref_op = _nop_lat(act_out, h, mcm, n_active)
+                        ref_op_e = _nop_energy(act_out, h, mcm)
+                    else:
+                        ref_op = _dram_lat(act_out, hops_dram, mcm, n_active)
+                        ref_op_e = _dram_energy(act_out, hops_dram, mcm)
+                    np.testing.assert_allclose(ip_lat[b, s], ref_ip,
+                                               rtol=1e-12)
+                    np.testing.assert_allclose(ip_e[b, s], ref_ip_e,
+                                               rtol=1e-12)
+                    np.testing.assert_allclose(op_lat[b, s], ref_op,
+                                               rtol=1e-12)
+                    np.testing.assert_allclose(op_e[b, s], ref_op_e,
+                                               rtol=1e-12)
+                    seg_start = seg_end
+
+
+# ------------------ batched segment reductions (satellite 3) ----------------
+
+def test_segment_reductions_matches_loop_oracle():
+    """One bincount pass == the old per-segment Python loop."""
+    rng = np.random.default_rng(5)
+    for B, Lw, S in [(7, 1, 1), (16, 9, 4), (40, 23, 6)]:
+        seg_id = np.sort(rng.integers(0, S, (B, Lw)), axis=1)
+        for b in range(B):
+            _, inv = np.unique(seg_id[b], return_inverse=True)
+            seg_id[b] = inv
+        n_segs = seg_id.max(axis=1) + 1
+        w = rng.uniform(0, 1e9, Lw)
+        o = rng.uniform(0, 1e7, Lw)
+        seg_w, seg_last = segment_reductions(seg_id, n_segs, w, o, s_max=S)
+        # the pre-vectorisation reference: loop over segments
+        ref_w = np.zeros((B, S))
+        ref_last = np.zeros((B, S))
+        lidx = np.arange(Lw)
+        for s in range(S):
+            in_seg = seg_id == s
+            any_ = in_seg.any(axis=1)
+            last = np.where(any_,
+                            np.where(in_seg, lidx[None, :], -1).max(axis=1),
+                            0)
+            ref_w[:, s] = np.where(any_, (w[None, :] * in_seg).sum(axis=1),
+                                   0.0)
+            ref_last[:, s] = np.where(any_, o[last], 0.0)
+        np.testing.assert_allclose(seg_w, ref_w, rtol=1e-12)
+        np.testing.assert_allclose(seg_last, ref_last, rtol=1e-12)
+
+
+# ---------------- f32 backend parity on all ten scenarios -------------------
+
+@pytest.mark.parametrize("scn", scenarios.SCENARIO_NAMES)
+def test_backend_score_parity_all_scenarios(scn):
+    """jax_ref (float32) vs numpy oracle (float64) on production candidate
+    batches of every paper scenario: scores within documented tolerance and
+    any ordering difference confined to quantisation-tied candidates."""
+    for db, mcm, cand, tiers, n_active in _window0_batches(scn):
+        l_np, e_np = eval_candidates(db, mcm, cand, n_active,
+                                     backend="numpy")
+        l_jx, e_jx = eval_candidates(db, mcm, cand, n_active,
+                                     backend="jax_ref")
+        np.testing.assert_allclose(l_jx, l_np, rtol=F32_SCORE_RTOL)
+        np.testing.assert_allclose(e_jx, e_np, rtol=F32_SCORE_RTOL)
+        s_np, s_jx = l_np * e_np, l_jx * e_jx
+        o_np = np.lexsort((quantize_scores(s_np, sig=5), tiers))
+        o_jx = np.lexsort((quantize_scores(s_jx, sig=5), tiers))
+        # the exact permutation may differ where near-ties straddle a
+        # quantisation boundary; the guarantee is that any swap is
+        # score-equivalent — the oracle-score sequence along either order
+        # agrees to f32 tolerance, so plan quality is backend-independent
+        np.testing.assert_allclose(s_np[o_jx], s_np[o_np],
+                                   rtol=10 * F32_SCORE_RTOL)
+
+
+def test_backend_parity_sequential_mode():
+    """pipelined=False (sum over segments) agrees across all three backends
+    — the bridge used to hard-code the pipelined flag to 1."""
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    db = get_cost_db(sc, mcm)
+    cand = _random_batch(np.random.default_rng(3), db, mcm, 0)
+    for pipelined in (True, False):
+        l_np, e_np = eval_candidates(db, mcm, cand, 2, pipelined=pipelined,
+                                     backend="numpy")
+        l_jx, e_jx = eval_candidates(db, mcm, cand, 2, pipelined=pipelined,
+                                     backend="jax_ref")
+        l_pl, e_pl = eval_candidates(db, mcm, cand, 2, pipelined=pipelined,
+                                     backend="pallas", interpret=True)
+        np.testing.assert_allclose(l_jx, l_np, rtol=F32_SCORE_RTOL)
+        np.testing.assert_allclose(l_pl, l_np, rtol=F32_SCORE_RTOL)
+        np.testing.assert_allclose(e_jx, e_np, rtol=F32_SCORE_RTOL)
+        np.testing.assert_allclose(e_pl, e_np, rtol=F32_SCORE_RTOL)
+    # the two modes genuinely differ on multi-segment plans
+    l_p, _ = eval_candidates(db, mcm, cand, 2, pipelined=True,
+                             backend="numpy")
+    l_s, _ = eval_candidates(db, mcm, cand, 2, pipelined=False,
+                             backend="numpy")
+    multi = cand.n_segs > 1
+    assert (l_s[multi] > l_p[multi]).all()
+
+
+# --------------------- quantised stable tie-break ---------------------------
+
+def test_quantized_tiebreak_keeps_enumeration_order():
+    """Structurally duplicated candidates (same segmentation listed twice)
+    stay in enumeration order under every backend — equal quantised scores
+    fall back to the stable lexsort, so backend choice cannot reorder
+    them."""
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    db = get_cost_db(sc, mcm)
+    sl = db.model_slice(0)
+    segs = top_k_segmentations(db, mcm, sl.start, sl.stop, 3, k=2, cap=64)
+    dup_segs = segs + segs                    # exact structural duplicates
+    results = {}
+    for backend in ("numpy", "jax_ref"):
+        cs = build_candidates(db, mcm, 0, (sl.start, sl.stop), dup_segs,
+                              n_active=1, prev_end=None, path_cap=16,
+                              backend=backend)
+        results[backend] = cs
+    np.testing.assert_array_equal(results["numpy"].chips,
+                                  results["jax_ref"].chips)
+    np.testing.assert_array_equal(results["numpy"].seg_arr,
+                                  results["jax_ref"].seg_arr)
+
+
+def test_quantize_scores_absorbs_f32_noise():
+    s = np.array([1.23456789e-3, 4.2, 7.5e8])
+    noisy = s * (1 + 3e-8)                    # ~f32 round-off
+    np.testing.assert_array_equal(quantize_scores(s, sig=5),
+                                  quantize_scores(noisy, sig=5))
+    # ...but genuinely different scores stay apart
+    assert (quantize_scores(s, sig=5) != quantize_scores(s * 1.01,
+                                                         sig=5)).all()
+
+
+# ------------------------- backend selection --------------------------------
+
+def test_resolve_backend_selection(monkeypatch):
+    monkeypatch.delenv("SCAR_EVAL_BACKEND", raising=False)
+    assert resolve_backend("numpy") == "numpy"
+    assert resolve_backend("jax_ref", work=1) == "jax_ref"
+    assert resolve_backend("auto", work=1) == "numpy"
+    assert resolve_backend(None, work=AUTO_WORK_THRESHOLD - 1) == "numpy"
+    assert resolve_backend(None, work=AUTO_WORK_THRESHOLD) in ("jax_ref",
+                                                               "pallas")
+    monkeypatch.setenv("SCAR_EVAL_BACKEND", "jax_ref")
+    assert resolve_backend(None, work=1) == "jax_ref"     # env beats auto
+    assert resolve_backend("numpy", work=1) == "numpy"    # arg beats env
+    with pytest.raises(KeyError):
+        resolve_backend("cuda")
+    monkeypatch.setenv("SCAR_EVAL_BACKEND", "not_a_backend")
+    with pytest.raises(KeyError):
+        resolve_backend(None)
+    # the auto threshold env is read per call, like SCAR_EVAL_BACKEND
+    monkeypatch.delenv("SCAR_EVAL_BACKEND", raising=False)
+    monkeypatch.setenv("SCAR_EVAL_AUTO_THRESHOLD", "2")
+    assert resolve_backend(None, work=1) == "numpy"
+    assert resolve_backend(None, work=2) in ("jax_ref", "pallas")
+
+
+def test_explicit_pallas_off_tpu_fails_fast():
+    """SearchConfig(eval_backend='pallas') on a non-TPU host must raise an
+    actionable error up front, not a lowering failure inside schedule()."""
+    import jax
+    if jax.default_backend() == "tpu":
+        pytest.skip("running on a TPU: pallas is legitimate here")
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    db = get_cost_db(sc, mcm)
+    cand = _random_batch(np.random.default_rng(2), db, mcm, 0)
+    with pytest.raises(RuntimeError, match="pallas.*TPU|TPU.*pallas"):
+        eval_candidates(db, mcm, cand, 1, backend="pallas")
+    # interpret mode stays available anywhere (kernel tests)
+    eval_candidates(db, mcm, cand, 1, backend="pallas", interpret=True)
+
+
+def test_pack_bucketing_shapes():
+    """S shrinks to the per-batch max segment count, B pads to the block."""
+    from repro.kernels.scar_eval import evaluate, pack_candidates
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    db = get_cost_db(sc, mcm)
+    import dataclasses
+    cand = _random_batch(np.random.default_rng(9), db, mcm, 0, B=37, S=4)
+    # widen the segment axis: the packer must shrink it back
+    cand = dataclasses.replace(
+        cand, chiplets=np.pad(cand.chiplets, ((0, 0), (0, 2)),
+                              constant_values=-1))
+    s_eff = int(cand.n_segs.max())
+    assert s_eff < cand.chiplets.shape[1]
+    args, statics, b_real = pack_candidates(db, mcm, cand, 2, pad_b=32)
+    chips = np.asarray(args[5])
+    assert b_real == 37
+    assert chips.shape == (64, s_eff)          # padded to pad_b multiple
+    out = np.asarray(evaluate(*args, **statics, use_kernel=False))
+    assert out.shape == (64, 2)
+    assert (out[b_real:] == 0.0).all()         # padded rows are inert
+    lat, energy = eval_candidates(db, mcm, cand, 2, backend="numpy")
+    np.testing.assert_allclose(out[:b_real, 0], lat, rtol=F32_SCORE_RTOL)
+    np.testing.assert_allclose(out[:b_real, 1], energy, rtol=F32_SCORE_RTOL)
+
+
+# ------------------------- end-to-end threading -----------------------------
+
+def test_schedule_end_to_end_jax_backend():
+    """The backend threads through SearchConfig into the full pipeline and
+    produces a valid schedule whose metrics match the numpy run within
+    float32 tolerance (identical plans modulo quantisation ties)."""
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_cb", n_pe=256)
+    out_np = schedule(sc, mcm, SearchConfig(eval_backend="numpy"))
+    out_jx = schedule(sc, mcm, SearchConfig(eval_backend="jax_ref"))
+    np.testing.assert_allclose(out_jx.result.latency, out_np.result.latency,
+                               rtol=1e-3)
+    np.testing.assert_allclose(out_jx.result.energy, out_np.result.energy,
+                               rtol=1e-3)
+
+
+def test_refine_jax_backend_never_worse():
+    from repro.core.refine import refine
+    sc = get_scenario("xr8_outdoors")
+    mcm = make_mcm("het_sides", n_pe=256)
+    base = schedule(sc, mcm, SearchConfig())
+    ref = refine(sc, mcm, base, metric="edp", iters=40, seed=1,
+                 backend="jax_ref")
+    assert ref.result.edp <= base.result.edp * (1 + 1e-12)

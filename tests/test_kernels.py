@@ -76,39 +76,61 @@ def test_ssd_scan_state_carry_across_chunks():
                                np.asarray(expect), rtol=1e-5)
 
 
-def test_scar_eval_kernel_matches_core_evaluator_seeded():
-    """Kernel == jnp ref == numpy core evaluator on a seeded random plan
-    batch (the hypothesis sweep of this property is in
-    test_cost_properties.py)."""
+@pytest.mark.parametrize("pipelined", [True, False])
+@pytest.mark.parametrize("prev_end", [None, 3])
+def test_scar_eval_kernel_matches_core_evaluator_seeded(pipelined, prev_end):
+    """Kernel == jax_ref form == numpy core evaluator on a seeded random
+    plan batch, in both latency modes (the bridge used to hard-code
+    ``pipelined=True``) and with/without a locality anchor."""
+    from candidate_utils import random_candidate_batch
     from repro.core import get_scenario, make_mcm
-    from repro.core.cost import BatchedModelCandidates, eval_model_candidates
+    from repro.core.cost import eval_model_candidates
     from repro.core.maestro import build_cost_db
     from repro.kernels.scar_eval import evaluate, pack_candidates
 
     sc = get_scenario("xr10_vr_gaming")
     mcm = make_mcm("het_sides", n_pe=256)
     db = build_cost_db(sc, mcm.classes, mcm.pkg)
-    rng = np.random.default_rng(7)
-    mi = int(rng.integers(0, db.n_models))
-    sl = db.model_slice(mi)
-    Lw = sl.stop - sl.start
-    B, S = 16, 4
-    seg_id = np.sort(rng.integers(0, S, (B, Lw)), axis=1)
-    for b in range(B):
-        _, inv = np.unique(seg_id[b], return_inverse=True)
-        seg_id[b] = inv
-    n_segs = seg_id.max(axis=1) + 1
-    chips = np.full((B, S), -1, dtype=np.int64)
-    for b in range(B):
-        chips[b, :n_segs[b]] = rng.choice(mcm.n_chiplets, n_segs[b],
-                                          replace=False)
-    cand = BatchedModelCandidates(model_idx=mi, start=sl.start, end=sl.stop,
-                                  seg_id=seg_id, chiplets=chips,
-                                  n_segs=n_segs)
-    lat_ref, e_ref = eval_model_candidates(db, mcm, cand, n_active=2)
-    args, Breal = pack_candidates(db, mcm, cand, n_active=2, pad_b=16)
-    out_k = np.asarray(evaluate(*args, block_b=16, interpret=True))[:Breal]
-    out_r = np.asarray(evaluate(*args, use_kernel=False))[:Breal]
+    cand = random_candidate_batch(np.random.default_rng(7), db, mcm)
+    lat_ref, e_ref = eval_model_candidates(db, mcm, cand, n_active=2,
+                                           prev_end=prev_end,
+                                           pipelined=pipelined)
+    args, statics, Breal = pack_candidates(db, mcm, cand, n_active=2,
+                                           prev_end=prev_end, pad_b=16,
+                                           pipelined=pipelined)
+    out_k = np.asarray(evaluate(*args, **statics, block_b=16,
+                                interpret=True))[:Breal]
+    out_r = np.asarray(evaluate(*args, **statics,
+                                use_kernel=False))[:Breal]
     np.testing.assert_allclose(out_k[:, 0], lat_ref, rtol=1e-5)
     np.testing.assert_allclose(out_k[:, 1], e_ref, rtol=1e-5)
-    np.testing.assert_allclose(out_k, out_r, rtol=1e-5)
+    np.testing.assert_allclose(out_r[:, 0], lat_ref, rtol=1e-5)
+    np.testing.assert_allclose(out_r[:, 1], e_ref, rtol=1e-5)
+
+
+def test_scar_eval_dense_ref_matches_kernel():
+    """``scar_eval_ref`` (the dense one-hot jnp oracle the Pallas kernel is
+    written against) still mirrors the kernel block-for-block."""
+    from repro.kernels.scar_eval import scar_eval, scar_eval_ref
+    rng = np.random.default_rng(0)
+    B, L, C, S = 32, 12, 2, 4
+    lat_tab = jnp.asarray(rng.uniform(0, 1e-3, (L, C)), jnp.float32)
+    e_tab = jnp.asarray(rng.uniform(0, 1e-2, (L, C)), jnp.float32)
+    cls = rng.integers(0, C, (B, L))
+    seg = np.sort(rng.integers(0, S, (B, L)), axis=1)
+    for b in range(B):
+        _, inv = np.unique(seg[b], return_inverse=True)
+        seg[b] = inv
+    n_segs = seg.max(axis=1) + 1
+    cls_oh = jnp.asarray((cls[..., None] == np.arange(C)), jnp.float32)
+    seg_oh = jnp.asarray((seg[..., None] == np.arange(S)), jnp.float32)
+    valid = jnp.asarray(np.arange(S)[None] < n_segs[:, None], jnp.float32)
+    comm_lat = jnp.asarray(rng.uniform(0, 1e-4, (B, S)), jnp.float32) * valid
+    comm_e = jnp.asarray(rng.uniform(0, 1e-3, (B, S)), jnp.float32) * valid
+    pipe = jnp.asarray(rng.integers(0, 2, (B, 1)), jnp.float32)
+    out_k = scar_eval(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e,
+                      valid, pipe, block_b=16, interpret=True)
+    out_r = scar_eval_ref(lat_tab, e_tab, cls_oh, seg_oh, comm_lat, comm_e,
+                          valid, pipe)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-12)
