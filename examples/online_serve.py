@@ -7,9 +7,15 @@ Hz with one-period deadlines):
     PYTHONPATH=src python examples/online_serve.py --trace dc_churn_smoke
     PYTHONPATH=src python examples/online_serve.py --trace xr8_cadence \\
         --pattern het_sides --rows 3 --cols 3 --n-pe 256
+    PYTHONPATH=src python examples/online_serve.py \\
+        --trace dc_churn_slo_smoke --rows 3 --cols 3 --n-pe 1024 \\
+        --boundary preempt --reconfig het_sides het_cb --hysteresis 0.1
 
 ``--mode cold`` runs the from-scratch oracle instead of the warm
 incremental path (same plans, slower — useful for sanity checks).
+``--boundary`` picks the epoch-boundary semantics (PR 3 fluid ``instant``,
+non-preemptive ``drain``, SLO-aware ``preempt``); ``--reconfig`` arms
+trace-driven MCM reconfiguration over the named candidate patterns.
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.core import TRACE_PRESETS, SearchConfig, get_trace
-from repro.online import qos_report, simulate
+from repro.online import OnlinePolicy, qos_report, simulate, slo_report
 
 
 def main() -> None:
@@ -31,6 +37,12 @@ def main() -> None:
     ap.add_argument("--cols", type=int, default=6)
     ap.add_argument("--n-pe", type=int, default=4096)
     ap.add_argument("--mode", default="warm", choices=["warm", "cold"])
+    ap.add_argument("--boundary", default="instant",
+                    choices=["instant", "drain", "preempt"])
+    ap.add_argument("--reconfig", nargs="*", default=(),
+                    help="candidate MCM patterns for per-epoch re-selection")
+    ap.add_argument("--hysteresis", type=float, default=0.1,
+                    help="relative gain a pattern switch must clear")
     ap.add_argument("--path-cap", type=int, default=64)
     ap.add_argument("--seg-cap", type=int, default=128)
     args = ap.parse_args()
@@ -38,17 +50,28 @@ def main() -> None:
     trace = get_trace(args.trace)
     print(f"trace {trace.name}: kind={trace.kind} horizon={trace.horizon}s "
           f"events={trace.n_events}")
+    policy = OnlinePolicy(
+        boundary=args.boundary,
+        reconfig_patterns=tuple(args.reconfig),
+        reconfig_hysteresis=(args.hysteresis if args.reconfig
+                             else float("inf")))
     sim = simulate(trace, pattern=args.pattern, rows=args.rows,
                    cols=args.cols, n_pe=args.n_pe, mode=args.mode,
+                   policy=policy,
                    cfg=SearchConfig(path_cap=args.path_cap,
                                     seg_cap=args.seg_cap))
     if trace.kind == "churn":
         for e in sim.epochs:
             mix = ",".join(f"{name}" for _, name, _ in e.tenants) or "<idle>"
             tag = "memo" if e.memo_hit else f"{e.replan_wall_s * 1e3:.1f}ms"
+            extra = ""
+            if e.switched:
+                extra += f" RECONFIG->{e.pattern}"
+            if e.n_preempted:
+                extra += f" preempted={e.n_preempted}"
             print(f"  [{e.t_start:7.2f}s -> {e.t_end:7.2f}s] "
                   f"{len(e.tenants)} tenants ({mix}) "
-                  f"iters={e.iterations:7.1f} replan={tag}")
+                  f"iters={e.iterations:7.1f} replan={tag}{extra}")
     rep = qos_report(sim)
     print(f"\nQoS ({rep.mode}): epochs={rep.n_epochs} "
           f"replans={rep.n_replans} memo_hits={rep.n_memo_hits} "
@@ -61,6 +84,18 @@ def main() -> None:
         print(f"  {m.model:12s} n={m.n_samples:8.1f} "
               f"p50={m.p50_latency * 1e3:7.2f}ms "
               f"p99={m.p99_latency * 1e3:7.2f}ms{miss}")
+    srep = slo_report(sim)
+    if len(srep.per_class) > 1 or sim.n_preemptions or sim.n_switches:
+        print(f"\nSLO view: weighted_miss={srep.weighted_miss_rate:.2%} "
+              f"attainment={srep.slo_attainment:.2%} "
+              f"edp/iter={srep.edp_per_iteration:.4g} "
+              f"preemptions={srep.n_preemptions} "
+              f"reconfigs={srep.n_switches}")
+        for c in srep.per_class:
+            print(f"  {c.slo:17s} w={c.weight:4.2f} n={c.n_samples:8.1f} "
+                  f"p50={c.p50_latency * 1e3:7.2f}ms "
+                  f"p99={c.p99_latency * 1e3:7.2f}ms "
+                  f"miss_rate={c.miss_rate:.2%}")
 
 
 if __name__ == "__main__":

@@ -85,6 +85,15 @@ class WindowResult:
     energy: float
     per_model_latency: dict[int, float]
     end_chiplet: dict[int, int]          # data-locality anchor for next window
+    # Resumable execution chunks per model: (latency, end chiplet) per unit
+    # the runtime can pause at — one per segment for sequential plans, one
+    # per window for pipelined plans (whose segments overlap in time and
+    # cannot be cut individually).  Chunk latencies sum to exactly
+    # per_model_latency[mi] (same float summation order), which is what lets
+    # the online simulator preempt an in-flight iteration at a chunk
+    # boundary and conserve the remaining work (repro.online.simulator).
+    per_model_segments: dict[int, tuple[tuple[float, int], ...]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def edp(self) -> float:
@@ -147,6 +156,7 @@ def evaluate_window(db: CostDB, mcm: MCM, wp: WindowPlan,
     prev_end = prev_end or {}
     n_active = len(wp.plans)
     per_model_lat: dict[int, float] = {}
+    per_model_segs: dict[int, tuple[tuple[float, int], ...]] = {}
     end_chiplet: dict[int, int] = {}
     total_energy = 0.0
     for p in wp.plans:
@@ -192,12 +202,17 @@ def evaluate_window(db: CostDB, mcm: MCM, wp: WindowPlan,
             seg_start = seg_end
         if p.pipelined and p.n_segments > 1:
             per_model_lat[p.model_idx] = max(seg_lats)
+            per_model_segs[p.model_idx] = (
+                (max(seg_lats), p.chiplets[-1]),)
         else:
             per_model_lat[p.model_idx] = sum(seg_lats)
+            per_model_segs[p.model_idx] = tuple(
+                (sl, p.chiplets[si]) for si, sl in enumerate(seg_lats))
     latency = max(per_model_lat.values()) if per_model_lat else 0.0
     return WindowResult(latency=latency, energy=total_energy,
                         per_model_latency=per_model_lat,
-                        end_chiplet=end_chiplet)
+                        end_chiplet=end_chiplet,
+                        per_model_segments=per_model_segs)
 
 
 def evaluate_schedule(db: CostDB, mcm: MCM,

@@ -71,7 +71,10 @@ class TraceJob:
 
     The portfolio treats traces like scenarios: a picklable grid point that
     workers expand locally.  ``mode`` selects the warm incremental
-    re-scheduler or the cold from-scratch oracle."""
+    re-scheduler or the cold from-scratch oracle; ``policy`` the
+    epoch-boundary / preemption / MCM-reconfiguration behaviour
+    (``repro.online.OnlinePolicy``, itself a frozen picklable dataclass;
+    ``None`` is the class-blind fluid default)."""
 
     trace: str                           # scenarios.TRACE_PRESETS name
     pattern: str
@@ -80,14 +83,16 @@ class TraceJob:
     n_pe: int = 4096
     mode: str = "warm"
     cfg: Optional[SearchConfig] = None
+    policy: Optional["object"] = None    # repro.online.OnlinePolicy
     label: Optional[str] = None
 
     @property
     def name(self) -> str:
         if self.label is not None:
             return self.label
+        tag = "" if self.policy is None else f"/{self.policy.boundary}"
         return (f"{self.trace}/{self.pattern}_{self.rows}x{self.cols}"
-                f"/{self.mode}")
+                f"/{self.mode}{tag}")
 
 
 @dataclasses.dataclass
@@ -109,7 +114,7 @@ def _run_job(job):
         from .scenarios import get_trace
         sim = simulate(get_trace(job.trace), pattern=job.pattern,
                        rows=job.rows, cols=job.cols, n_pe=job.n_pe,
-                       cfg=job.cfg, mode=job.mode)
+                       cfg=job.cfg, mode=job.mode, policy=job.policy)
         return TraceResult(job=job, report=qos_report(sim),
                            wall_s=time.time() - t0)
     sc = get_scenario(job.scenario)
@@ -239,12 +244,15 @@ def sweep_grid(scenarios: list[str], patterns: list[str],
 def trace_sweep_grid(traces: list[str], patterns: list[str],
                      rows: int = 6, cols: int = 6, n_pe: int = 4096,
                      modes: tuple[str, ...] = ("warm",),
+                     policies: tuple = (None,),
                      meshes: Optional[list] = None,
                      **cfg_kw) -> list[TraceJob]:
-    """Cross product trace x mesh x pattern x mode -> online job list.
+    """Cross product trace x mesh x pattern x mode x policy -> job list.
 
     The online analogue of ``sweep_grid``: sweeps dynamic traces (preset
     names from ``scenarios.TRACE_PRESETS``) instead of static scenarios.
+    ``policies`` adds an ``OnlinePolicy`` axis (``None`` = the class-blind
+    fluid default), e.g. drain-vs-preempt comparisons across meshes.
     """
     if meshes is None:
         mesh_list = [(rows, cols)]
@@ -256,7 +264,10 @@ def trace_sweep_grid(traces: list[str], patterns: list[str],
         for mrows, mcols in mesh_list:
             for pat in patterns:
                 for mode in modes:
-                    jobs.append(TraceJob(trace=tr, pattern=pat, rows=mrows,
-                                         cols=mcols, n_pe=n_pe, mode=mode,
-                                         cfg=SearchConfig(**cfg_kw)))
+                    for pol in policies:
+                        jobs.append(TraceJob(trace=tr, pattern=pat,
+                                             rows=mrows, cols=mcols,
+                                             n_pe=n_pe, mode=mode,
+                                             policy=pol,
+                                             cfg=SearchConfig(**cfg_kw)))
     return jobs

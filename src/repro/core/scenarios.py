@@ -66,6 +66,11 @@ def mesh_shape(preset: str) -> tuple[int, int]:
 # the online bench baseline — regenerate both together.
 _DC_CHURN_ZOO = (("gpt-l", 1), ("bert-l", 3), ("bert-base", 24),
                  ("resnet-50", 32))
+# SLO class mix the *_slo churn presets sample tenants from (the remaining
+# probability mass is the default "standard" class).  Mirrors a serving
+# fleet: a minority of interactive latency-critical tenants, a batch tail
+# that is happy to be preempted.
+_DC_SLO_MIX = {"latency_critical": 0.35, "best_effort": 0.35}
 TRACE_PRESETS: dict[str, dict] = {
     "dc_churn_6x6": dict(kind="churn", seed=17, horizon=60.0,
                          arrival_rate=1.0, mean_lifetime=2.5, max_active=3,
@@ -73,6 +78,19 @@ TRACE_PRESETS: dict[str, dict] = {
     "dc_churn_smoke": dict(kind="churn", seed=3, horizon=10.0,
                            arrival_rate=1.0, mean_lifetime=2.0, max_active=2,
                            zoo=_DC_CHURN_ZOO),
+    # SLO-classed churn: the bench workload for the SLO-aware serving layer
+    # (tenant priorities, sub-iteration preemption, MCM reconfiguration) on
+    # an 8x8 package, and its short smoke/test variant on 3x3.  Changing
+    # either invalidates the committed fixtures and the
+    # BENCH_online_slo_8x8 baseline — regenerate together.
+    "dc_churn_8x8_slo": dict(kind="churn", seed=29, horizon=40.0,
+                             arrival_rate=1.2, mean_lifetime=2.5,
+                             max_active=4, zoo=_DC_CHURN_ZOO,
+                             slo_mix=_DC_SLO_MIX),
+    "dc_churn_slo_smoke": dict(kind="churn", seed=11, horizon=12.0,
+                               arrival_rate=1.0, mean_lifetime=2.0,
+                               max_active=2, zoo=_DC_CHURN_ZOO,
+                               slo_mix=_DC_SLO_MIX),
     "xr8_cadence": dict(kind="cadence", scenario="xr8_outdoors", horizon=0.5),
     "xr6_cadence": dict(kind="cadence", scenario="xr6_ar_assistant",
                         horizon=0.5),

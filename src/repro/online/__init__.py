@@ -17,9 +17,19 @@ adds the discrete-event layer on top of it:
   epochs with the exact ``cost.evaluate_schedule`` machinery.
 * ``metrics``      — QoS accounting over a finished simulation: per-model
   p50/p99 latency, deadline-miss rates, aggregate EDP, re-plan overhead.
+* ``slo``          — tenant service classes (latency-critical / standard /
+  best-effort) and the class-weighted serving objective; drives
+  sub-iteration preemption (``simulator.OnlinePolicy``), trace-driven MCM
+  reconfiguration (``rescheduler.SLORescheduler``) and the per-class /
+  class-weighted metrics (``metrics.slo_report``).
 """
 from .traces import (Event, Trace, frame_cadence_trace,  # noqa: F401
                      poisson_churn_trace)
-from .rescheduler import Rescheduler, ReplanRecord  # noqa: F401
-from .simulator import EpochRecord, SimResult, simulate  # noqa: F401
-from .metrics import ModelQoS, QoSReport, qos_report  # noqa: F401
+from .rescheduler import (Rescheduler, ReplanRecord,  # noqa: F401
+                          SLORescheduler)
+from .simulator import (EpochRecord, OnlinePolicy, SimResult,  # noqa: F401
+                        SLOSample, iteration_split, simulate)
+from .metrics import (ClassQoS, ModelQoS, QoSReport, SLOReport,  # noqa: F401
+                      qos_report, slo_report)
+from .slo import (SLO_CLASSES, SLOClass, class_weighted_score,  # noqa: F401
+                  get_slo)

@@ -16,6 +16,16 @@ Metric definitions (documented in ``docs/architecture.md``):
 * **scheduler overhead** — planner wall-clock seconds spent re-planning
   divided by simulated seconds: how much of real time the scheduler would
   steal from serving if it ran inline on the host.
+
+``slo_report`` adds the service-level view over the same simulation
+(``simulator.SLOSample`` stream): per-SLO-class p50/p99 and deadline-miss
+rates, class-*weighted* pooled percentiles and miss rate (each sample's
+weight scaled by its class weight from ``repro.online.slo``), the weighted
+SLO attainment (1 - weighted miss rate), and a combined EDP/SLO score —
+aggregate EDP divided by attainment, so missed deadlines inflate the
+effective EDP a schedule is judged by.  With every sample in one class the
+weighted metrics reduce *exactly* to the unweighted pooled ones (the class
+weight cancels; pinned by ``tests/test_online_slo.py``).
 """
 from __future__ import annotations
 
@@ -23,6 +33,7 @@ import dataclasses
 from typing import Optional
 
 from .simulator import SimResult
+from .slo import get_slo
 
 
 def weighted_percentile(samples: list[tuple[float, float]], p: float) -> float:
@@ -96,3 +107,93 @@ def qos_report(sim: SimResult) -> QoSReport:
         n_epochs=len(sim.epochs), n_replans=sim.n_replans,
         n_memo_hits=sim.n_memo_hits, replan_wall_s=sim.replan_wall_s,
         overhead_ratio=sim.replan_wall_s / horizon)
+
+
+# ---------------------------------------------------------------------------
+# SLO-class view
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClassQoS:
+    """QoS of one SLO class pooled across models and tenants."""
+
+    slo: str
+    weight: float                      # the class's objective weight
+    n_samples: float                   # total sample weight in the class
+    p50_latency: float
+    p99_latency: float
+    miss_rate: float                   # missed weight / total weight
+    attainment: float                  # 1 - miss_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOReport:
+    """Class-weighted service-level report (wraps the plain ``QoSReport``)."""
+
+    base: QoSReport
+    per_class: tuple[ClassQoS, ...]
+    weighted_p50: float                # pooled, weights x class weight
+    weighted_p99: float
+    weighted_miss_rate: float
+    slo_attainment: float              # 1 - weighted_miss_rate
+    score: float                       # aggregate EDP / attainment (lower
+    #                                    better; inf when nothing attained)
+    served_weight: float               # iteration-equivalents served (sum of
+    #                                    sample weights across all classes)
+    edp_per_iteration: float           # aggregate EDP / served_weight — the
+    #                                    work-normalised aggregate: saturated
+    #                                    back-to-back serving packs more
+    #                                    iterations into a fixed horizon when
+    #                                    the scheduler frees the package
+    #                                    sooner, so raw energy x busy alone
+    #                                    would penalise serving *more*;
+    #                                    per-iteration EDP compares policies
+    #                                    at equal work
+    n_preemptions: int
+    n_switches: int
+
+    def cls(self, name: str) -> ClassQoS:
+        for c in self.per_class:
+            if c.slo == name:
+                return c
+        raise KeyError(name)
+
+
+def slo_report(sim: SimResult) -> SLOReport:
+    """Fold a simulation's ``SLOSample`` stream into the class view."""
+    base = qos_report(sim)
+    by_class: dict[str, list] = {}
+    for s in sim.slo_samples:
+        by_class.setdefault(get_slo(s.slo).name, []).append(s)
+    per_class = []
+    pooled: list[tuple[float, float]] = []
+    w_miss = w_total = 0.0
+    for name in sorted(by_class):
+        cls = get_slo(name)
+        ss = by_class[name]
+        total = sum(s.weight for s in ss)
+        missed = sum(s.missed for s in ss)
+        cs = [(s.latency, s.weight) for s in ss]
+        per_class.append(ClassQoS(
+            slo=name, weight=cls.weight, n_samples=total,
+            p50_latency=weighted_percentile(cs, 50.0),
+            p99_latency=weighted_percentile(cs, 99.0),
+            miss_rate=(missed / total) if total > 0 else 0.0,
+            attainment=1.0 - ((missed / total) if total > 0 else 0.0)))
+        pooled.extend((s.latency, s.weight * cls.weight) for s in ss)
+        w_miss += cls.weight * missed
+        w_total += cls.weight * total
+    miss_rate = (w_miss / w_total) if w_total > 0 else 0.0
+    attainment = 1.0 - miss_rate
+    served = sum(s.weight for s in sim.slo_samples)
+    return SLOReport(
+        base=base, per_class=tuple(per_class),
+        weighted_p50=weighted_percentile(pooled, 50.0),
+        weighted_p99=weighted_percentile(pooled, 99.0),
+        weighted_miss_rate=miss_rate, slo_attainment=attainment,
+        score=(base.aggregate_edp / attainment) if attainment > 0
+        else float("inf"),
+        served_weight=served,
+        edp_per_iteration=(base.aggregate_edp / served) if served > 0
+        else float("inf"),
+        n_preemptions=sim.n_preemptions, n_switches=sim.n_switches)

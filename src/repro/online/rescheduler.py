@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Optional
 
@@ -72,6 +73,9 @@ class ReplanRecord:
     anchors: dict[int, int]            # tenant id -> carried chiplet
     wall_s: float                      # planner wall time (0-ish on memo hit)
     memo_hit: bool
+    pattern: Optional[str] = None      # MCM pattern the plan targets (set by
+    #                                    SLORescheduler; None on the base)
+    switched: bool = False             # did this epoch reconfigure the MCM?
 
 
 class Rescheduler:
@@ -108,10 +112,29 @@ class Rescheduler:
         return out
 
     # ---- the query --------------------------------------------------------
-    def replan(self, tenants: list[Tenant]) -> ReplanRecord:
-        """Plan the new active set from the current window boundary."""
+    def replan(self, tenants: list[Tenant],
+               anchors: Optional[dict[int, int]] = None,
+               slo_of: Optional[dict[int, str]] = None,
+               commit: bool = True) -> ReplanRecord:
+        """Plan the new active set from the current window boundary.
+
+        ``anchors`` (tenant id -> chiplet) overrides the carried anchors:
+        ``SLORescheduler`` passes ``{}`` to score reconfiguration
+        candidates anchor-free (a reconfigured package reloads from DRAM).
+        The preemptive simulator never needs an override — a preempted
+        iteration's deferred chunks finish on their original placement, so
+        the prior plan's ``final_anchors`` remain the true data-locality
+        state by the time the tenant is served under the new plan.
+        ``commit=False`` runs the same memoised planning query without
+        recording it as this re-scheduler's serving state — how the
+        SLO-aware layer scores reconfiguration candidates without corrupting
+        their epoch history.  ``slo_of`` (tenant id -> class name) is unused
+        by the class-blind base planner; ``SLORescheduler`` consumes it.
+        """
+        del slo_of  # class-blind base: plan identity ignores classes
         sc, tenant_order = active_scenario(tenants)
-        anchors = self.carried_anchors(tenants)
+        if anchors is None:
+            anchors = self.carried_anchors(tenants)
         carried = {mi: anchors[tid] for mi, tid in enumerate(tenant_order)
                    if tid in anchors}
         key = (sc.name, tuple(sorted(carried.items())))
@@ -137,7 +160,8 @@ class Rescheduler:
         rec = ReplanRecord(outcome=outcome, tenant_order=tenant_order,
                            anchors=anchors,
                            wall_s=time.perf_counter() - t0, memo_hit=hit)
-        self._last = rec
+        if commit:
+            self._last = rec
         return rec
 
     def reset(self) -> None:
@@ -145,3 +169,132 @@ class Rescheduler:
         self._plan_memo.clear()
         self._window_memo.clear()
         self._last = None
+
+
+def _pattern_of(mcm: MCM) -> str:
+    """MCM pattern name (``make_mcm`` names packages ``<pattern>_RxC``)."""
+    name = mcm.name
+    if "_" in name and name.rsplit("_", 1)[1].count("x") == 1:
+        return name.rsplit("_", 1)[0]
+    return name
+
+
+class SLORescheduler:
+    """SLO-aware epoch re-planner: class-weighted trace-driven MCM
+    reconfiguration over a small candidate pattern set.
+
+    The paper's core premise is that the heterogeneous reconfiguration
+    pattern should track the workload; the online layer freezes it for a
+    whole trace.  This planner keeps one warm ``Rescheduler`` per candidate
+    pattern (all sharing the per-process content-keyed CostDB memo, so
+    switching back to a previously-served pattern reuses its warm caches —
+    the same affinity machinery the portfolio exploits) and, each committed
+    epoch, scores the current pattern's plan against every candidate's
+    anchor-free plan under the class-weighted objective
+    (``slo.class_weighted_score``).  It reconfigures when the projected
+    relative gain clears ``hysteresis``:
+
+        switch  iff  best_candidate_score < current_score * (1 - hysteresis)
+
+    Candidates are scored *without* data-locality anchors — a reconfigured
+    package reloads every tenant from DRAM, so the switch pays its real
+    cost inside the comparison, a natural extra hysteresis.  On a switch
+    the returned plan carries no anchors and ``switched=True``.
+
+    ``hysteresis=inf`` (the default) never evaluates candidates at all:
+    behaviour, caches and wall time are *identical* to the fixed-pattern
+    ``Rescheduler`` — the differential reduction pinned by
+    ``tests/test_online_slo.py``.
+    """
+
+    def __init__(self, mcm: MCM, cfg: Optional[SearchConfig] = None,
+                 mode: str = "warm", plan_memo_max: int = 256,
+                 patterns: tuple[str, ...] = (),
+                 hysteresis: float = float("inf")):
+        from repro.core.chiplet import make_mcm
+        self.cfg = cfg or SearchConfig()
+        self.mode = mode
+        self.hysteresis = float(hysteresis)
+        base = _pattern_of(mcm)
+        self.patterns = tuple(dict.fromkeys((base,) + tuple(patterns)))
+        n_pe = mcm.classes[0].n_pe
+        self._planners: dict[str, Rescheduler] = {
+            base: Rescheduler(mcm, cfg=self.cfg, mode=mode,
+                              plan_memo_max=plan_memo_max)}
+        for pat in self.patterns[1:]:
+            self._planners[pat] = Rescheduler(
+                make_mcm(pat, rows=mcm.rows, cols=mcm.cols, n_pe=n_pe),
+                cfg=self.cfg, mode=mode, plan_memo_max=plan_memo_max)
+        self.pattern = base
+        self.n_switches = 0
+        self.switch_log: list[tuple[str, str]] = []   # (from, to) per switch
+
+    @property
+    def mcm(self) -> MCM:
+        return self._planners[self.pattern].mcm
+
+    def carried_anchors(self, tenants: list[Tenant]) -> dict[int, int]:
+        return self._planners[self.pattern].carried_anchors(tenants)
+
+    @staticmethod
+    def _score(rec: ReplanRecord, slo_of: dict[int, str],
+               metric: str) -> float:
+        from .slo import class_weighted_score
+        pml: dict[int, float] = {}
+        for wr in rec.outcome.result.windows:
+            for mi, v in wr.per_model_latency.items():
+                pml[mi] = pml.get(mi, 0.0) + v
+        slo_of_model = {mi: slo_of.get(tid)
+                        for mi, tid in enumerate(rec.tenant_order)}
+        return class_weighted_score(pml, rec.outcome.result.energy,
+                                    slo_of_model, metric=metric)
+
+    def replan(self, tenants: list[Tenant],
+               anchors: Optional[dict[int, int]] = None,
+               slo_of: Optional[dict[int, str]] = None,
+               commit: bool = True) -> ReplanRecord:
+        """Plan on the current pattern, then consider reconfiguring."""
+        cur = self._planners[self.pattern]
+        rec = cur.replan(tenants, anchors=anchors, commit=commit)
+        rec.pattern = self.pattern
+        if (not commit or len(self.patterns) < 2
+                or not math.isfinite(self.hysteresis)):
+            return rec
+        slo_of = slo_of or {}
+        cur_score = self._score(rec, slo_of, self.cfg.metric)
+        best_pat, best_rec, best_score, extra_wall = None, None, None, 0.0
+        for pat in self.patterns:
+            if pat == self.pattern:
+                continue
+            alt = self._planners[pat].replan(tenants, anchors={},
+                                             commit=False)
+            extra_wall += alt.wall_s
+            score = self._score(alt, slo_of, self.cfg.metric)
+            if best_score is None or score < best_score:
+                best_pat, best_rec, best_score = pat, alt, score
+        # epoch planning wall = current-pattern plan + every candidate
+        # scored (the winner's scoring wall is already inside extra_wall;
+        # a switch's commit re-plan is a memo hit costing ~0)
+        total_wall = rec.wall_s + extra_wall
+        if (best_score is not None and cur_score > 0
+                and best_score < cur_score * (1.0 - self.hysteresis)):
+            self.switch_log.append((self.pattern, best_pat))
+            self.n_switches += 1
+            self.pattern = best_pat
+            # commit the winning plan as the new pattern's serving state
+            # (memo hit: the scoring pass just planned this exact query)
+            rec = self._planners[best_pat].replan(tenants, anchors={},
+                                                  commit=True)
+            rec.pattern = best_pat
+            rec.switched = True
+            rec.memo_hit = best_rec.memo_hit   # scoring did the real work
+            total_wall += rec.wall_s
+        rec.wall_s = total_wall
+        return rec
+
+    def reset(self) -> None:
+        for planner in self._planners.values():
+            planner.reset()
+        self.pattern = self.patterns[0]
+        self.n_switches = 0
+        self.switch_log.clear()

@@ -9,9 +9,41 @@ At each epoch boundary the ``Rescheduler`` re-plans from the current window
 boundary (persisting tenants keep their data-locality anchors); between
 boundaries the epoch's schedule executes back-to-back iterations, accounted
 with the exact per-window latencies/energies ``cost.evaluate_schedule``
-produced — ``iterations = epoch_duration / schedule_latency`` (fractional at
-the boundary), each completed iteration contributing one latency sample per
-tenant and one ``result.energy`` of package energy.
+produced.
+
+How the in-flight iteration at an epoch boundary is handled is the
+``OnlinePolicy.boundary`` knob:
+
+* ``instant`` (the PR 3 fluid model, default) — the re-plan takes effect at
+  the event time; execution is accounted fractionally
+  (``iterations = epoch_duration / schedule_latency``), so nothing ever
+  queues and no deadline is ever missed by waiting.
+* ``drain``   — iterations are discrete and non-preemptible: the in-flight
+  iteration runs to completion before the new plan takes effect, so an
+  arriving tenant waits up to one full package iteration (its first
+  latency sample includes the queueing delay).  The class-blind realistic
+  baseline.
+* ``preempt`` — execution is resumable at chunk boundaries
+  (``cost.WindowResult.per_model_segments``): at an event, every tenant
+  runs to its next chunk boundary; *preemptible* (best-effort) tenants
+  then pause — their remaining chunks are deferred and complete under the
+  new epoch, work conserved — while non-preemptible tenants finish their
+  iteration.  The package switches plans as soon as the slowest of those
+  constraints clears, which is never later (and usually far earlier) than
+  the drain boundary, so latency-critical arrivals start sooner.
+
+Departure correction (all modes): a tenant's iteration that is still in
+flight at its *departure* event is cancelled — it contributes neither a
+latency sample nor its share of the iteration's energy.  (The seed online
+layer credited the departing tenant with a fractional sample at full
+per-iteration latency and charged its full energy share — accounting work
+past the departure; ``tests/test_online.py`` pins the correction.)
+
+Data-locality anchors stay consistent across all three modes through
+``scheduler.final_anchors``: a preempted tenant's deferred chunks finish
+the interrupted iteration on its original placement, so by the time it is
+served under the new plan its activations sit exactly where the prior
+plan's final anchors say.
 
 **Cadence** — the model set is a fixed AR/VR scenario; the schedule is planned
 once and frames replay against its per-model latencies.  Each model serves
@@ -26,12 +58,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Optional
 
 from repro.core.chiplet import MCM, make_mcm
 from repro.core.scheduler import ScheduleOutcome, SearchConfig
 
-from .rescheduler import Rescheduler, Tenant
+from .rescheduler import Rescheduler, SLORescheduler, Tenant
+from .slo import get_slo
 from .traces import Trace
 
 
@@ -42,6 +76,43 @@ def per_model_latency(outcome: ScheduleOutcome) -> dict[int, float]:
         for mi, v in wr.per_model_latency.items():
             lat[mi] = lat.get(mi, 0.0) + v
     return lat
+
+
+def per_model_chunks(outcome: ScheduleOutcome
+                     ) -> dict[int, tuple[tuple[float, int], ...]]:
+    """Model index -> resumable (latency, end-chiplet) chunks across windows.
+
+    Chunk latencies sum to exactly ``per_model_latency`` (same float order),
+    and the final chunk's chiplet equals the model's ``final_anchors`` entry
+    — the two invariants sub-iteration preemption rests on.
+    """
+    chunks: dict[int, list[tuple[float, int]]] = {}
+    for wr in outcome.result.windows:
+        for mi, segs in wr.per_model_segments.items():
+            chunks.setdefault(mi, []).extend(segs)
+    return {mi: tuple(c) for mi, c in chunks.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlinePolicy:
+    """How the online serving loop reacts at epoch boundaries.
+
+    ``boundary`` picks the in-flight-iteration semantics (see module
+    docstring).  ``reconfig_patterns`` + ``reconfig_hysteresis`` enable
+    trace-driven MCM reconfiguration: the re-scheduler scores the named
+    candidate patterns each epoch under the class-weighted objective and
+    switches when the projected relative gain exceeds the hysteresis
+    (``rescheduler.SLORescheduler``; ``inf`` never switches and is
+    bit-identical to the fixed-pattern planner).
+    """
+
+    boundary: str = "instant"              # instant | drain | preempt
+    reconfig_patterns: tuple[str, ...] = ()
+    reconfig_hysteresis: float = math.inf
+
+    def __post_init__(self) -> None:
+        if self.boundary not in ("instant", "drain", "preempt"):
+            raise KeyError(f"unknown boundary policy {self.boundary!r}")
 
 
 @dataclasses.dataclass
@@ -56,7 +127,16 @@ class EpochRecord:
     replan_wall_s: float
     memo_hit: bool
     iterations: float                      # fractional serving iterations
-    energy: float                          # package energy spent in epoch
+    energy: float                          # package energy of the work this
+    #                                        epoch's plan issued (incl. the
+    #                                        deferred completion of an
+    #                                        iteration preempted at its end,
+    #                                        so epochs partition total_energy)
+    pattern: Optional[str] = None          # MCM pattern serving the epoch
+    switched: bool = False                 # epoch began with a reconfig
+    n_preempted: int = 0                   # tenant iterations deferred
+    serve_start: float = 0.0               # when this plan began serving
+    serve_end: float = 0.0                 # when the package freed (cut)
 
 
 @dataclasses.dataclass
@@ -70,6 +150,30 @@ class FrameRecord:
     deadline: float
     missed: bool
     energy: float
+    slo: Optional[str] = None              # declared SLO class (None=default)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSample:
+    """One (possibly weighted) served-latency observation with its SLO.
+
+    ``deadline`` is the absolute latency budget of the observation —
+    ``deadline_factor * planned latency`` for churn iterations, the frame
+    period for cadence frames; ``missed`` is the weight that blew it (0 or
+    ``weight``: aggregated multi-iteration samples are at planned latency
+    and never miss).  The multiset of (latency, weight) pairs here equals
+    the PR 3 ``latency_samples`` exactly — ``metrics.slo_report`` reduces
+    to the unweighted report when every tenant shares one class.
+    """
+
+    t: float                   # completion time (simulated seconds)
+    model: str
+    tenant: int
+    slo: Optional[str]         # declared class (None -> default class)
+    latency: float
+    weight: float
+    deadline: float            # absolute budget (may be inf)
+    missed: float              # weight that missed the deadline
 
 
 @dataclasses.dataclass
@@ -88,62 +192,332 @@ class SimResult:
     replan_wall_s: float                      # total planner wall time
     n_replans: int
     n_memo_hits: int
+    slo_samples: list[SLOSample] = dataclasses.field(default_factory=list)
+    policy: Optional[OnlinePolicy] = None
+    n_preemptions: int = 0
+    n_switches: int = 0
 
 
-def _churn(trace: Trace, resched: Rescheduler) -> SimResult:
+# ---------------------------------------------------------------------------
+# pure helpers (hypothesis-tested in tests/test_online_properties.py)
+# ---------------------------------------------------------------------------
+
+def iteration_split(chunks: tuple[tuple[float, int], ...], elapsed: float
+                    ) -> tuple[float, float, tuple[tuple[float, int], ...]]:
+    """Cut one tenant's iteration ``elapsed`` seconds in, at a chunk boundary.
+
+    Execution cannot stop mid-chunk, so the chunk in progress at ``elapsed``
+    runs to completion first.  Returns ``(done, delay, remainder)``:
+    ``done`` — seconds of the iteration completed at the pause point (the
+    cumulative chunk boundary), ``delay`` — how long past ``elapsed`` that
+    boundary is (0 when the tenant already finished its part), and
+    ``remainder`` — the chunks still to run.  Invariant:
+    ``done + sum(remainder latencies) == sum(chunk latencies)`` exactly
+    (work is conserved; same float summation order).
+    """
+    if elapsed < 0:
+        raise ValueError("elapsed must be >= 0")
+    cum = 0.0
+    for i, (lat, _) in enumerate(chunks):
+        cum += lat
+        if cum >= elapsed:
+            return cum, cum - elapsed, chunks[i + 1:]
+    return cum, 0.0, ()
+
+
+# ---------------------------------------------------------------------------
+# churn
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Plan:
+    """The serving state of one epoch's schedule."""
+
+    rec: "object"                          # rescheduler.ReplanRecord
+    pml: dict[int, float]                  # tenant id -> planned latency
+    chunks: dict[int, tuple[tuple[float, int], ...]]
+    latency: float                         # package iteration period
+    energy: float                          # package energy per iteration
+    share: dict[int, float]                # tenant id -> energy share / iter
+
+
+def _build_plan(rec) -> _Plan:
+    pml_m = per_model_latency(rec.outcome)
+    chunks_m = per_model_chunks(rec.outcome)
+    pml = {tid: pml_m.get(mi, 0.0) for mi, tid in enumerate(rec.tenant_order)}
+    chunks = {tid: chunks_m.get(mi, ())
+              for mi, tid in enumerate(rec.tenant_order)}
+    total = sum(pml.values())
+    energy = rec.outcome.result.energy
+    share = {tid: (energy * v / total if total > 0 else 0.0)
+             for tid, v in pml.items()}
+    return _Plan(rec=rec, pml=pml, chunks=chunks,
+                 latency=rec.outcome.result.latency, energy=energy,
+                 share=share)
+
+
+class _ChurnLoop:
+    """Mutable accounting state of one churn replay (one mode/policy)."""
+
+    def __init__(self, trace: Trace, resched, policy: OnlinePolicy):
+        self.trace = trace
+        self.resched = resched
+        self.policy = policy
+        self.samples: dict[str, list[tuple[float, float]]] = {}
+        self.slo_samples: list[SLOSample] = []
+        self.epochs: list[EpochRecord] = []
+        self.total_energy = 0.0
+        self.busy = 0.0
+        self.replan_wall = 0.0
+        self.n_replans = self.n_hits = self.n_preempt = 0
+        # tenant id -> (model name, declared slo) while active
+        self.name_of: dict[int, str] = {}
+        self.slo_of: dict[int, Optional[str]] = {}
+        # arrival time awaiting the tenant's first completed iteration
+        self.wait_from: dict[int, float] = {}
+        # tenant id -> time its deferred (preempted) chunks finish executing
+        self.resume_until: dict[int, float] = {}
+        # tenant id -> departure event time (inf if none in the trace)
+        self.depart_t = {e.tenant: e.t for e in trace.events
+                         if e.kind == "depart"}
+
+    # -- sample plumbing ----------------------------------------------------
+    def emit(self, t: float, tid: int, latency: float, weight: float,
+             deadline: float) -> None:
+        if weight <= 0:
+            return
+        name = self.name_of[tid]
+        self.samples.setdefault(name, []).append((latency, weight))
+        missed = weight if latency > deadline else 0.0
+        self.slo_samples.append(SLOSample(
+            t=t, model=name, tenant=tid, slo=self.slo_of.get(tid),
+            latency=latency, weight=weight, deadline=deadline, missed=missed))
+
+    def _deadline(self, tid: int, pml: float) -> float:
+        return get_slo(self.slo_of.get(tid)).deadline_factor * pml
+
+    # -- serving accounting -------------------------------------------------
+    def serve(self, plan: _Plan, serve_start: float, t_end: float,
+              departing: set[int], at_horizon: bool) -> tuple[float, int]:
+        """Account serving ``plan`` from ``serve_start`` until the boundary
+        at ``t_end``; returns (package-free time, tenants preempted)."""
+        lat = plan.latency
+        dur = t_end - serve_start
+        if dur <= 0 or lat <= 0:
+            return max(serve_start, t_end), 0
+
+        tids = list(plan.pml)
+        # first package iteration each tenant takes part in (tenants still
+        # executing deferred chunks of a preempted iteration sit out)
+        j_min = {}
+        for tid in tids:
+            done_t = self.resume_until.get(tid, serve_start)
+            j_min[tid] = max(0, math.ceil((done_t - serve_start) / lat
+                                          - 1e-12)) if done_t > serve_start \
+                else 0
+        for tid in tids:          # resume windows inside this epoch are spent
+            if self.resume_until.get(tid, serve_start) <= t_end:
+                self.resume_until.pop(tid, None)
+
+        if self.policy.boundary == "instant":
+            cut = self._serve_fluid(plan, serve_start, t_end, departing)
+            return cut, 0
+        return self._serve_discrete(plan, serve_start, t_end,
+                                    at_horizon, j_min)
+
+    def _serve_fluid(self, plan: _Plan, serve_start: float, t_end: float,
+                     departing: set[int]) -> float:
+        """PR 3 fractional accounting (+ the departure correction)."""
+        lat = plan.latency
+        iters = (t_end - serve_start) / lat
+        frac = iters - math.floor(iters)
+        energy = iters * plan.energy
+        for tid in plan.pml:
+            weight = iters
+            if tid in departing and frac > 0:
+                # the in-flight fraction at the departure is cancelled: no
+                # sample, and its energy share is not charged
+                weight = math.floor(iters)
+                energy -= frac * plan.share[tid]
+            self.emit(t_end, tid, plan.pml[tid], weight,
+                      self._deadline(tid, plan.pml[tid]))
+            self.wait_from.pop(tid, None)
+        self.total_energy += energy
+        self.busy += t_end - serve_start
+        self._last_iters = iters
+        self._last_energy = energy
+        return t_end
+
+    def _serve_discrete(self, plan: _Plan, serve_start: float, t_end: float,
+                        at_horizon: bool,
+                        j_min: dict[int, int]) -> tuple[float, int]:
+        lat = plan.latency
+        dur = t_end - serve_start
+        n_done = int(dur / lat)
+        elapsed = dur - n_done * lat
+        if elapsed <= 1e-12 * max(1.0, abs(t_end)):
+            elapsed = 0.0
+        energy = 0.0
+        n_preempted = 0
+
+        # ---- whole iterations (per-tenant: deferred-resume windows skip) --
+        for tid, pml in plan.pml.items():
+            n_i = max(0, n_done - j_min[tid])
+            if n_i <= 0:
+                continue
+            dl = self._deadline(tid, pml)
+            wait_t = self.wait_from.pop(tid, None)
+            if wait_t is not None:
+                first_done = serve_start + j_min[tid] * lat + pml
+                self.emit(first_done, tid, first_done - wait_t, 1.0, dl)
+                n_i -= 1
+            if n_i > 0:
+                self.emit(serve_start + n_done * lat, tid, pml, n_i, dl)
+            energy += max(0, n_done - j_min[tid]) * plan.share[tid]
+
+        cut = serve_start + n_done * lat
+        if elapsed > 0:
+            split_start = serve_start + n_done * lat
+            part = [tid for tid in plan.pml if j_min[tid] <= n_done]
+            if at_horizon:
+                # horizon cuts mid-iteration: fractional fluid tail (no
+                # event, nothing preempts — mirrors the instant mode)
+                frac = elapsed / lat
+                for tid in part:
+                    self.emit(t_end, tid, plan.pml[tid], frac,
+                              self._deadline(tid, plan.pml[tid]))
+                    energy += frac * plan.share[tid]
+                cut = t_end
+            elif self.policy.boundary == "drain":
+                # in-flight iteration drains; a tenant departing before its
+                # own part completes is cancelled (no sample, no charge)
+                survivors = [
+                    tid for tid in part
+                    if self.depart_t.get(tid, math.inf)
+                    >= split_start + plan.pml[tid]]
+                cut = split_start + lat if survivors else split_start
+                for tid in survivors:
+                    pml = plan.pml[tid]
+                    dl = self._deadline(tid, pml)
+                    wait_t = self.wait_from.pop(tid, split_start)
+                    self.emit(split_start + pml, tid,
+                              split_start + pml - wait_t, 1.0, dl)
+                    energy += plan.share[tid]
+            else:                                # preempt
+                delay = 0.0
+                splits = {}
+                for tid in part:
+                    pml = plan.pml[tid]
+                    dep = self.depart_t.get(tid, math.inf)
+                    done, d_i, rem = iteration_split(plan.chunks[tid],
+                                                     elapsed)
+                    if rem and get_slo(self.slo_of.get(tid)).preemptible:
+                        splits[tid] = (done, rem)
+                    elif dep < split_start + pml:
+                        continue    # departs mid-flight: cancelled outright
+                    else:
+                        # finishes its iteration (or already finished it)
+                        d_i = max(0.0, pml - elapsed)
+                        splits[tid] = (pml, ())
+                    delay = max(delay, d_i)
+                cut = t_end + delay
+                for tid, (done, rem) in splits.items():
+                    pml = plan.pml[tid]
+                    dl = self._deadline(tid, pml)
+                    wait_t = self.wait_from.pop(tid, split_start)
+                    if not rem:
+                        self.emit(split_start + pml, tid,
+                                  split_start + pml - wait_t, 1.0, dl)
+                        energy += plan.share[tid]
+                        continue
+                    # deferred: remaining chunks execute under the new
+                    # epoch, completing at cut + remainder (work conserved).
+                    # The whole iteration's energy stays attributed to THIS
+                    # epoch (whose plan issued it), so sum(epoch.energy)
+                    # == total_energy holds in every boundary mode.
+                    n_preempted += 1
+                    rest = sum(r for r, _ in rem)
+                    done_t = cut + rest
+                    energy += plan.share[tid] * (done / pml)
+                    if self.depart_t.get(tid, math.inf) < done_t:
+                        continue        # departs mid-resume: rest cancelled
+                    self.resume_until[tid] = done_t
+                    self.emit(done_t, tid, done_t - wait_t, 1.0, dl)
+                    energy += plan.share[tid] * (rest / pml)
+
+        self.total_energy += energy
+        self.busy += cut - serve_start
+        self._last_iters = (cut - serve_start) / lat if not at_horizon \
+            else dur / lat
+        self._last_energy = energy
+        self.n_preempt += n_preempted
+        return cut, n_preempted
+
+
+def _churn(trace: Trace, resched, policy: OnlinePolicy) -> SimResult:
+    loop = _ChurnLoop(trace, resched, policy)
     active: dict[int, Tenant] = {}
-    epochs: list[EpochRecord] = []
-    samples: dict[str, list[tuple[float, float]]] = {}
-    total_energy = 0.0
-    busy = 0.0
-    replan_wall = 0.0
-    n_replans = n_hits = 0
+    free_at = 0.0
 
-    # group events into epochs by timestamp
     groups = [(t, list(evs)) for t, evs in
               itertools.groupby(trace.events, key=lambda e: e.t)]
     bounds = [t for t, _ in groups] + [trace.horizon]
-    for (t, evs), t_next in zip(groups, bounds[1:]):
+    for k, (t, evs) in enumerate(groups):
+        t_next = bounds[k + 1]
+        at_horizon = k + 1 == len(groups)
+        next_departing = set() if at_horizon else {
+            e.tenant for e in groups[k + 1][1] if e.kind == "depart"}
         for e in evs:
             if e.kind == "arrive":
                 active[e.tenant] = (e.tenant, e.model, e.batch)
+                loop.name_of[e.tenant] = e.model
+                loop.slo_of[e.tenant] = e.slo
+                loop.wait_from[e.tenant] = e.t
             elif e.kind == "depart":
                 active.pop(e.tenant, None)
+                loop.wait_from.pop(e.tenant, None)
+                loop.resume_until.pop(e.tenant, None)
             else:
                 raise ValueError(f"churn trace carries {e.kind!r} event")
         tenants = sorted(active.values())
         if tenants:
-            rec = resched.replan(tenants)
-            replan_wall += rec.wall_s
-            n_replans += 1
-            n_hits += rec.memo_hit
-            lat = rec.outcome.result.latency
-            dt = t_next - t
-            iters = dt / lat if lat > 0 else 0.0
-            energy = iters * rec.outcome.result.energy
-            total_energy += energy
-            busy += dt
-            pml = per_model_latency(rec.outcome)
-            name_of = {tid: name for tid, name, _ in tenants}
-            for mi, tid in enumerate(rec.tenant_order):
-                samples.setdefault(name_of[tid], []).append(
-                    (pml.get(mi, 0.0), iters))
-            epochs.append(EpochRecord(
+            rec = resched.replan(tenants, slo_of=dict(loop.slo_of))
+            loop.replan_wall += rec.wall_s
+            loop.n_replans += 1
+            loop.n_hits += rec.memo_hit
+            plan = _build_plan(rec)
+            serve_start = max(free_at, t)
+            loop._last_iters = 0.0
+            loop._last_energy = 0.0
+            cut, n_pre = loop.serve(plan, serve_start, t_next,
+                                    next_departing, at_horizon)
+            free_at = cut
+            loop.epochs.append(EpochRecord(
                 t_start=t, t_end=t_next, tenants=tuple(tenants),
                 outcome=rec.outcome, tenant_order=tuple(rec.tenant_order),
                 replan_wall_s=rec.wall_s, memo_hit=rec.memo_hit,
-                iterations=iters, energy=energy))
+                iterations=loop._last_iters, energy=loop._last_energy,
+                pattern=rec.pattern, switched=rec.switched,
+                n_preempted=n_pre, serve_start=serve_start, serve_end=cut))
         else:
-            epochs.append(EpochRecord(
+            free_at = max(free_at, t)
+            loop.epochs.append(EpochRecord(
                 t_start=t, t_end=t_next, tenants=(), outcome=None,
                 tenant_order=(), replan_wall_s=0.0, memo_hit=False,
                 iterations=0.0, energy=0.0))
-    return SimResult(trace=trace, mode=resched.mode, epochs=epochs,
-                     frames=[], latency_samples=samples,
-                     total_energy=total_energy, busy_s=busy,
-                     replan_wall_s=replan_wall, n_replans=n_replans,
-                     n_memo_hits=n_hits)
+    return SimResult(trace=trace, mode=resched.mode, epochs=loop.epochs,
+                     frames=[], latency_samples=loop.samples,
+                     total_energy=loop.total_energy, busy_s=loop.busy,
+                     replan_wall_s=loop.replan_wall,
+                     n_replans=loop.n_replans, n_memo_hits=loop.n_hits,
+                     slo_samples=loop.slo_samples, policy=policy,
+                     n_preemptions=loop.n_preempt,
+                     n_switches=getattr(resched, "n_switches", 0))
 
+
+# ---------------------------------------------------------------------------
+# cadence
+# ---------------------------------------------------------------------------
 
 def replay_cadence(trace: Trace, model_latency: dict[int, float],
                    model_energy: dict[int, float]) -> list[FrameRecord]:
@@ -165,17 +539,18 @@ def replay_cadence(trace: Trace, model_latency: dict[int, float],
             t=e.t, model=e.model, tenant=e.tenant,
             latency=completion - e.t, deadline=float(e.deadline),
             missed=completion > e.t + e.deadline,
-            energy=model_energy.get(e.tenant, 0.0)))
+            energy=model_energy.get(e.tenant, 0.0), slo=e.slo))
     return frames
 
 
-def _cadence(trace: Trace, resched: Rescheduler) -> SimResult:
+def _cadence(trace: Trace, resched, policy: OnlinePolicy) -> SimResult:
     # frames are single inferences: plan the scenario's model set at batch 1
     # (Table II's AR/VR batch column is the firing rate, not a real batch)
     from repro.core.scenarios import scenario_spec
     tenants: list[Tenant] = [(mi, name, 1) for mi, (name, _)
                              in enumerate(scenario_spec(trace.scenario))]
-    rec = resched.replan(tenants)
+    slo_of = {e.tenant: e.slo for e in trace.events}
+    rec = resched.replan(tenants, slo_of=slo_of)
     # rescheduler orders models canonically; map back to scenario indices
     idx_of = {tid: mi for mi, tid in enumerate(rec.tenant_order)}
     pml = per_model_latency(rec.outcome)
@@ -185,32 +560,50 @@ def _cadence(trace: Trace, resched: Rescheduler) -> SimResult:
               for tid in lat}
     frames = replay_cadence(trace, lat, energy)
     samples: dict[str, list[tuple[float, float]]] = {}
+    slo_samples: list[SLOSample] = []
     for f in frames:
         samples.setdefault(f.model, []).append((f.latency, 1.0))
+        slo_samples.append(SLOSample(
+            t=f.t + f.latency, model=f.model, tenant=f.tenant, slo=f.slo,
+            latency=f.latency, weight=1.0, deadline=f.deadline,
+            missed=1.0 if f.missed else 0.0))
     return SimResult(trace=trace, mode=resched.mode, epochs=[], frames=frames,
                      latency_samples=samples,
                      total_energy=sum(f.energy for f in frames),
                      busy_s=trace.horizon, replan_wall_s=rec.wall_s,
-                     n_replans=1, n_memo_hits=int(rec.memo_hit))
+                     n_replans=1, n_memo_hits=int(rec.memo_hit),
+                     slo_samples=slo_samples, policy=policy,
+                     n_switches=getattr(resched, "n_switches", 0))
 
 
 def simulate(trace: Trace, mcm: Optional[MCM] = None,
              pattern: str = "het_cross", rows: int = 6, cols: int = 6,
              n_pe: int = 4096, cfg: Optional[SearchConfig] = None,
              mode: str = "warm",
+             policy: Optional[OnlinePolicy] = None,
              rescheduler: Optional[Rescheduler] = None) -> SimResult:
     """Replay ``trace`` against the scheduler and return the accounting.
 
     Pass either a ready ``mcm`` (and optionally a ``rescheduler`` to share
     memo state across calls) or the ``pattern``/``rows``/``cols``/``n_pe``
     of one to build.  ``mode`` selects the warm incremental path or the cold
-    from-scratch oracle (see ``rescheduler``).
+    from-scratch oracle (see ``rescheduler``); ``policy`` the epoch-boundary
+    semantics and MCM reconfiguration (``OnlinePolicy``; the default is the
+    PR 3 class-blind fluid model on a fixed pattern).
     """
     if mcm is None:
         mcm = make_mcm(pattern, rows=rows, cols=cols, n_pe=n_pe)
-    resched = rescheduler or Rescheduler(mcm, cfg=cfg, mode=mode)
+    policy = policy or OnlinePolicy()
+    if rescheduler is not None:
+        resched = rescheduler
+    elif policy.reconfig_patterns:
+        resched = SLORescheduler(mcm, cfg=cfg, mode=mode,
+                                 patterns=policy.reconfig_patterns,
+                                 hysteresis=policy.reconfig_hysteresis)
+    else:
+        resched = Rescheduler(mcm, cfg=cfg, mode=mode)
     if trace.kind == "churn":
-        return _churn(trace, resched)
+        return _churn(trace, resched, policy)
     if trace.kind == "cadence":
-        return _cadence(trace, resched)
+        return _cadence(trace, resched, policy)
     raise KeyError(f"unknown trace kind {trace.kind!r}")

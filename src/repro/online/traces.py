@@ -47,8 +47,12 @@ class Event:
     ``kind``: ``arrive`` / ``depart`` (churn) or ``frame`` (cadence).
     ``tenant``: unique tenant id (churn) or the scenario model index
     (cadence).  ``deadline`` is seconds after ``t`` (frame events only).
-    Sort with ``sort_key`` (departures before arrivals at equal ``t``) —
-    deliberately no dataclass ordering, which would disagree with it.
+    ``slo`` names the tenant's service class (``repro.online.slo``); the
+    field is optional and ``None`` on every pre-SLO trace — readers resolve
+    it through ``slo.get_slo`` so legacy fixtures land in the default
+    (``standard``) class.  Sort with ``sort_key`` (departures before
+    arrivals at equal ``t``) — deliberately no dataclass ordering, which
+    would disagree with it.
     """
 
     t: float
@@ -57,6 +61,7 @@ class Event:
     tenant: int
     batch: int = 1
     deadline: Optional[float] = None
+    slo: Optional[str] = None
 
     def sort_key(self) -> tuple:
         return (self.t, _KIND_ORDER[self.kind], self.tenant)
@@ -112,6 +117,7 @@ def poisson_churn_trace(seed: int, horizon: float,
                         arrival_rate: float, mean_lifetime: float,
                         zoo: Sequence[tuple[str, int]] = DC_TENANT_ZOO,
                         max_active: int = 4,
+                        slo_mix: Optional[dict[str, float]] = None,
                         name: Optional[str] = None) -> Trace:
     """Seeded Poisson tenant churn over the datacenter model zoo.
 
@@ -122,8 +128,21 @@ def poisson_churn_trace(seed: int, horizon: float,
     control keeps provisioning feasible on small packages).  Lifetimes are
     clipped at the horizon — tenants still resident simply stay resident; no
     synthetic departure events are emitted.
+
+    ``slo_mix`` maps SLO class names (``repro.online.slo``) to sampling
+    probabilities (need not sum to 1 — the remainder is the default class);
+    each admitted tenant draws its class once and both its arrive and
+    depart events carry it.  ``None`` draws nothing, so pre-SLO presets
+    replay the exact event stream they always produced (same RNG
+    trajectory).
     """
     rng = np.random.default_rng(seed)
+    mix: list[tuple[str, float]] = []
+    if slo_mix:
+        from .slo import DEFAULT_SLO, get_slo
+        for cls_name in sorted(slo_mix):
+            get_slo(cls_name)            # validate early
+            mix.append((cls_name, float(slo_mix[cls_name])))
     events: list[Event] = []
     active_until: list[float] = []       # departure times of admitted tenants
     tenant = 0
@@ -133,12 +152,22 @@ def poisson_churn_trace(seed: int, horizon: float,
         life = float(rng.exponential(mean_lifetime))
         n_active = sum(1 for d in active_until if d > t)
         if n_active < max_active:
+            slo = None
+            if mix:
+                u, acc = float(rng.random()), 0.0
+                slo = DEFAULT_SLO
+                for cls_name, p in mix:
+                    acc += p
+                    if u < acc:
+                        slo = cls_name
+                        break
             events.append(Event(t=round(t, 9), kind="arrive", model=model,
-                                tenant=tenant, batch=batch))
+                                tenant=tenant, batch=batch, slo=slo))
             depart = t + life
             if depart < horizon:
                 events.append(Event(t=round(depart, 9), kind="depart",
-                                    model=model, tenant=tenant, batch=batch))
+                                    model=model, tenant=tenant, batch=batch,
+                                    slo=slo))
             active_until.append(depart)
             tenant += 1
         t += float(rng.exponential(1.0 / arrival_rate))
@@ -148,6 +177,7 @@ def poisson_churn_trace(seed: int, horizon: float,
 
 
 def frame_cadence_trace(scenario: str, horizon: float,
+                        slo_of: Optional[dict[str, str]] = None,
                         name: Optional[str] = None) -> Trace:
     """Periodic frame-cadence trace for one Table II AR/VR scenario.
 
@@ -155,17 +185,24 @@ def frame_cadence_trace(scenario: str, horizon: float,
     Table II batch column, Hz) with deadline one period — a frame missing
     its deadline means the model fell behind its sensor.  The simulator
     replays frames (single batch-1 inferences) against a schedule of the
-    scenario's concurrent model set planned at batch 1.
+    scenario's concurrent model set planned at batch 1.  ``slo_of`` maps
+    model-zoo keys to SLO class names (unlisted models keep the default
+    class; ``None`` leaves every frame classless, the pre-SLO format).
     """
     from repro.core.scenarios import scenario_spec
+    if slo_of:
+        from .slo import get_slo
+        for cls_name in slo_of.values():
+            get_slo(cls_name)            # validate early
     events: list[Event] = []
     for mi, (model, rate) in enumerate(scenario_spec(scenario)):
         period = 1.0 / float(rate)       # Table II: AR/VR batch == Hz
+        slo = (slo_of or {}).get(model)
         k = 0
         while k * period < horizon:
             events.append(Event(t=round(k * period, 9), kind="frame",
                                 model=model, tenant=mi, batch=1,
-                                deadline=period))
+                                deadline=period, slo=slo))
             k += 1
     events.sort(key=Event.sort_key)
     return Trace(name=name or f"{scenario}_cadence", kind="cadence",

@@ -240,22 +240,69 @@ def test_trace_portfolio_inline_and_parallel_parity():
 
 def test_churn_accounting_uses_exact_schedule_metrics():
     """Epoch accounting: iterations * schedule energy, per-model latency ==
-    sum of its per-window latencies from the exact evaluator."""
+    sum of its per-window latencies from the exact evaluator.  Epochs ending
+    in a departure charge less: the departing tenant's in-flight fraction is
+    cancelled, so its share of the fractional iteration's energy is not
+    spent (see test_departing_tenant_inflight_iteration_not_accounted)."""
+    import math
     trace = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_smoke.json"))
     sim = simulate(trace, mode="warm", **_SMALL)
-    for e in sim.epochs:
+    for k, e in enumerate(sim.epochs):
         if e.outcome is None:
             assert e.energy == 0.0 and e.iterations == 0.0
             continue
         lat = e.outcome.result.latency
         dt = e.t_end - e.t_start
         assert e.iterations == pytest.approx(dt / lat)
-        assert e.energy == pytest.approx(
-            e.iterations * e.outcome.result.energy)
         pml = per_model_latency(e.outcome)
         assert sum(pml.values()) > 0
+        # corrected energy: subtract cancelled departing shares of the
+        # in-flight fraction
+        energy = e.iterations * e.outcome.result.energy
+        frac = e.iterations - math.floor(e.iterations)
+        if k + 1 < len(sim.epochs) and frac > 0:
+            staying = {t[0] for t in sim.epochs[k + 1].tenants}
+            departed = [mi for mi, tid in enumerate(e.tenant_order)
+                        if tid not in staying]
+            total = sum(pml.values())
+            energy -= sum(frac * e.outcome.result.energy * pml[mi] / total
+                          for mi in departed)
+        assert e.energy == pytest.approx(energy)
     rep = qos_report(sim)
     assert rep.total_energy == pytest.approx(
         sum(e.energy for e in sim.epochs))
     assert rep.busy_s == pytest.approx(
         sum(e.t_end - e.t_start for e in sim.epochs if e.outcome))
+
+
+def test_departing_tenant_inflight_iteration_not_accounted():
+    """Regression (drain-semantics gap): a departing tenant's in-flight
+    iteration used to contribute a fractional latency sample at full cost
+    and its full energy share past the departure event.  Corrected: the
+    cancelled fraction yields no sample and no energy for the departer,
+    while co-resident tenants keep their fractional credit."""
+    import math
+    # tenant 0 departs mid-iteration; tenant 1 persists to the horizon
+    events = (Event(t=0.0, kind="arrive", model="bert-l", tenant=0, batch=3),
+              Event(t=0.0, kind="arrive", model="googlenet", tenant=1,
+                    batch=4),
+              Event(t=0.05, kind="depart", model="bert-l", tenant=0,
+                    batch=3))
+    trace = Trace(name="dep", kind="churn", horizon=0.08, events=events)
+    sim = simulate(trace, mode="warm", **_SMALL)
+    e0, e1 = sim.epochs
+    iters = e0.iterations
+    frac = iters - math.floor(iters)
+    assert frac > 0, "fixture must cut the departure mid-iteration"
+    pml = per_model_latency(e0.outcome)
+    mi_dep = e0.tenant_order.index(0)
+    share = e0.outcome.result.energy * pml[mi_dep] / sum(pml.values())
+    # energy: full fractional charge minus the departer's cancelled share
+    assert e0.energy == pytest.approx(
+        iters * e0.outcome.result.energy - frac * share)
+    # samples: departer credited only with completed iterations; the
+    # persisting tenant keeps full (fractional) credit in both epochs
+    dep_w = sum(w for _, w in sim.latency_samples.get("bert-l", []))
+    stay_w = sum(w for _, w in sim.latency_samples["googlenet"])
+    assert dep_w == pytest.approx(math.floor(iters))
+    assert stay_w == pytest.approx(e0.iterations + e1.iterations)

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) for the online simulator event loop.
+
+Skipped cleanly when hypothesis is absent (optional extra:
+``pip install -e .[property]``), like ``test_cost_properties.py``.  Pinned
+invariants:
+
+* trace event ordering is a total order (sorting is unambiguous and
+  deterministic for any event multiset with distinct (t, kind, tenant));
+* preempted work is conserved: ``iteration_split``'s completed prefix plus
+  its remainder always re-compose the original iteration;
+* no tenant is credited with execution past its departure event, in any
+  boundary mode;
+* the SLO metrics are permutation-invariant over tenant ids and sample
+  order.
+"""
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SearchConfig
+from repro.online import OnlinePolicy, SLOSample, Trace, get_slo, \
+    iteration_split, simulate, slo_report
+from repro.online.traces import Event
+
+_TINY = dict(pattern="het_cb", rows=2, cols=2, n_pe=256,
+             cfg=SearchConfig(path_cap=8, seg_cap=16, n_splits=2))
+_CLASSES = [None, "latency_critical", "standard", "best_effort"]
+
+
+# ---------------------------- event ordering --------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 50), st.sampled_from(
+    ["arrive", "depart"]), st.integers(0, 9)), min_size=1, max_size=20,
+    unique=True))
+@settings(max_examples=60, deadline=None)
+def test_event_ordering_total(raw):
+    events = [Event(t=t / 10.0, kind=kind, model="m", tenant=tid)
+              for t, kind, tid in raw]
+    keys = [e.sort_key() for e in events]
+    assert len(set(keys)) == len(keys)          # total: no ambiguous ties
+    ordered = sorted(events, key=Event.sort_key)
+    # sorting is idempotent and order-insensitive (a total order)
+    assert sorted(reversed(ordered), key=Event.sort_key) == ordered
+    tr = Trace(name="p", kind="churn", horizon=10.0, events=tuple(ordered))
+    assert tr.events == tuple(ordered)
+
+
+# ---------------------------- work conservation -----------------------------
+
+@given(st.lists(st.floats(1e-6, 1.0, allow_nan=False), min_size=1,
+                max_size=8),
+       st.floats(0.0, 10.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_iteration_split_conserves_work(lats, elapsed):
+    chunks = tuple((lat, i) for i, lat in enumerate(lats))
+    total = sum(lat for lat, _ in chunks)
+    done, delay, rem = iteration_split(chunks, elapsed)
+    assert done + sum(r for r, _ in rem) == pytest.approx(total, rel=1e-9)
+    assert delay >= 0.0
+    assert done <= total + 1e-12
+    # the pause point is at or past the cut (chunks never stop mid-way)
+    assert done >= min(elapsed, total) - 1e-9
+    # remainder chunks are an exact suffix of the original iteration
+    assert rem == chunks[len(chunks) - len(rem):]
+
+
+# ---------------------------- simulator event loop --------------------------
+
+@given(slo0=st.sampled_from(_CLASSES), slo1=st.sampled_from(_CLASSES),
+       t1=st.integers(1, 8), life0=st.integers(2, 12),
+       boundary=st.sampled_from(["instant", "drain", "preempt"]))
+@settings(max_examples=8, deadline=None)
+def test_no_execution_past_departure(slo0, slo1, t1, life0, boundary):
+    """Replaying a two-tenant churn trace in any boundary mode never credits
+    a tenant with a sample completing after its departure, and every sample
+    is at least its planned iteration latency."""
+    dep0 = t1 / 20.0 + life0 / 10.0
+    events = [Event(t=0.0, kind="arrive", model="bert-l", tenant=0, batch=1,
+                    slo=slo0),
+              Event(t=t1 / 20.0, kind="arrive", model="googlenet", tenant=1,
+                    batch=2, slo=slo1)]
+    if dep0 < 1.5:
+        events.append(Event(t=dep0, kind="depart", model="bert-l", tenant=0,
+                            batch=1, slo=slo0))
+    trace = Trace(name="prop", kind="churn", horizon=1.5,
+                  events=tuple(sorted(events, key=Event.sort_key)))
+    sim = simulate(trace, mode="warm", policy=OnlinePolicy(boundary=boundary),
+                   **_TINY)
+    depart_t = {e.tenant: e.t for e in trace.events if e.kind == "depart"}
+    for s in sim.slo_samples:
+        assert s.t <= depart_t.get(s.tenant, math.inf) + 1e-9
+        factor = get_slo(s.slo).deadline_factor
+        if math.isfinite(factor):
+            assert s.latency >= s.deadline / factor - 1e-9
+    # active sets honour the events exactly
+    for e in sim.epochs:
+        for tid, _, _ in e.tenants:
+            assert depart_t.get(tid, math.inf) >= e.t_start
+
+
+# ---------------------------- metric invariance -----------------------------
+
+@given(st.lists(st.tuples(st.floats(1e-4, 1.0), st.integers(1, 3),
+                          st.sampled_from(_CLASSES), st.integers(0, 5)),
+                min_size=1, max_size=30),
+       st.randoms(use_true_random=False))
+@settings(max_examples=60, deadline=None)
+def test_slo_report_permutation_invariant(raw, rnd):
+    """Shuffling sample order and relabeling tenant ids changes nothing in
+    the class-level or weighted metrics."""
+    def build(samples):
+        tr = Trace(name="m", kind="cadence", horizon=1.0, events=())
+        from repro.online.simulator import SimResult
+        return SimResult(trace=tr, mode="warm", epochs=[], frames=[],
+                         latency_samples={}, total_energy=1.0, busy_s=1.0,
+                         replan_wall_s=0.0, n_replans=0, n_memo_hits=0,
+                         slo_samples=list(samples))
+
+    samples = [SLOSample(t=float(i), model=f"m{i % 2}", tenant=tid,
+                         slo=slo, latency=lat, weight=float(w),
+                         deadline=2 * lat, missed=0.0)
+               for i, (lat, w, slo, tid) in enumerate(raw)]
+    rep_a = slo_report(build(samples))
+    shuffled = list(samples)
+    rnd.shuffle(shuffled)
+    relabeled = [SLOSample(t=s.t, model=s.model, tenant=99 - s.tenant,
+                           slo=s.slo, latency=s.latency, weight=s.weight,
+                           deadline=s.deadline, missed=s.missed)
+                 for s in shuffled]
+    rep_b = slo_report(build(relabeled))
+    assert [c.slo for c in rep_a.per_class] == \
+        [c.slo for c in rep_b.per_class]
+    for ca, cb in zip(rep_a.per_class, rep_b.per_class):
+        assert ca.n_samples == pytest.approx(cb.n_samples)
+        assert ca.p50_latency == cb.p50_latency
+        assert ca.p99_latency == cb.p99_latency
+        assert ca.miss_rate == pytest.approx(cb.miss_rate)
+    assert rep_a.weighted_p50 == rep_b.weighted_p50
+    assert rep_a.weighted_p99 == rep_b.weighted_p99
+    assert rep_a.weighted_miss_rate == pytest.approx(rep_b.weighted_miss_rate)

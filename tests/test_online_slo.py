@@ -1,0 +1,315 @@
+"""Differential harness for the SLO-aware online serving layer.
+
+Three reductions pin the new machinery to PR 3 semantics (the acceptance
+criteria of the SLO PR):
+
+(a) the preemptive warm re-planner produces schedules bit-identical to the
+    cold from-scratch oracle, and — when nothing is preemptible — to the
+    PR 3 class-blind planner's;
+(b) with every tenant in one class the class-weighted metrics reduce
+    exactly to the unweighted ones;
+(c) MCM reconfiguration with ``hysteresis=inf`` reproduces the
+    fixed-pattern simulation event-for-event.
+
+Plus: SLO trace fixtures (round-trip + PR 3 back-compat), hand-computed
+preemption cases, and the reconfiguration switch behaviour.
+"""
+import math
+import os
+
+import pytest
+
+from repro.core import SearchConfig, get_trace, make_mcm
+from repro.online import (OnlinePolicy, SLORescheduler, Trace,
+                          class_weighted_score, get_slo, iteration_split,
+                          qos_report, simulate, slo_report)
+from repro.online.metrics import weighted_percentile
+from repro.online.traces import Event
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+_SMALL = dict(pattern="het_cross", rows=3, cols=3, n_pe=1024,
+              cfg=SearchConfig(path_cap=32, seg_cap=64, n_splits=2))
+PREEMPT = OnlinePolicy(boundary="preempt")
+
+
+def _plans(epoch):
+    if epoch.outcome is None:
+        return None
+    return tuple(wr.plan for wr in epoch.outcome.windows)
+
+
+def _epoch_key(e):
+    return (e.t_start, e.t_end, e.tenants, e.tenant_order, _plans(e),
+            e.iterations, e.energy, e.n_preempted)
+
+
+# ---------------------- SLO classes & objective ------------------------------
+
+def test_slo_class_registry_and_default():
+    assert get_slo(None).name == "standard"        # PR 3 back-compat default
+    assert get_slo("latency_critical").weight > get_slo("standard").weight \
+        > get_slo("best_effort").weight
+    assert get_slo("best_effort").preemptible
+    assert not get_slo("latency_critical").preemptible
+    assert math.isinf(get_slo("best_effort").deadline_factor)
+    with pytest.raises(KeyError):
+        get_slo("gold-plated")
+
+
+def test_class_weighted_score_single_class_is_mean():
+    pml = {0: 0.1, 1: 0.3}
+    # one class: weights cancel -> plain mean x energy
+    assert class_weighted_score(pml, 2.0, {}, metric="edp") == \
+        pytest.approx(0.2 * 2.0)
+    assert class_weighted_score(pml, 2.0, {}, metric="latency") == \
+        pytest.approx(0.2)
+    # latency-critical tenant dominates the weighted mean
+    skew = class_weighted_score(pml, 1.0, {1: "latency_critical"},
+                                metric="latency")
+    assert skew > 0.2 and skew < 0.3
+
+
+def test_iteration_split_hand_computed():
+    chunks = ((0.3, 5), (0.2, 7), (0.5, 2))
+    done, delay, rem = iteration_split(chunks, 0.35)
+    assert done == pytest.approx(0.5)          # chunk in progress completes
+    assert delay == pytest.approx(0.15)
+    assert rem == ((0.5, 2),)
+    done, delay, rem = iteration_split(chunks, 0.0)
+    assert (done, delay, rem) == (pytest.approx(0.3), pytest.approx(0.3),
+                                  ((0.2, 7), (0.5, 2)))
+    done, delay, rem = iteration_split(chunks, 2.0)   # already finished
+    assert (done, delay, rem) == (pytest.approx(1.0), 0.0, ())
+    # work conservation: done + remainder == total, exactly
+    for elapsed in (0.0, 0.05, 0.3, 0.45, 0.9, 1.0, 3.0):
+        done, _, rem = iteration_split(chunks, elapsed)
+        assert done + sum(r for r, _ in rem) == \
+            pytest.approx(1.0, rel=1e-12)
+
+
+# ---------------------- fixtures & serialization (satellite) ----------------
+
+@pytest.mark.parametrize("preset", ["dc_churn_slo_smoke", "dc_churn_8x8_slo"])
+def test_slo_fixtures_match_presets_and_roundtrip(preset):
+    path = os.path.join(FIXTURES, f"trace_{preset}.json")
+    tr = get_trace(preset)
+    assert Trace.load(path) == tr
+    assert Trace.from_json(tr.to_json()) == tr
+    slos = {e.slo for e in tr.events if e.kind == "arrive"}
+    assert slos >= {"latency_critical", "best_effort"}   # mix materialised
+    for e in tr.events:
+        get_slo(e.slo)                                   # every class valid
+    # arrive/depart pairs agree on the class
+    cls = {e.tenant: e.slo for e in tr.events if e.kind == "arrive"}
+    for e in tr.events:
+        if e.kind == "depart":
+            assert e.slo == cls[e.tenant]
+
+
+def test_pr3_era_fixture_loads_without_slo_fields():
+    """Back-compat: PR 3 fixtures predate Event.slo — they load with the
+    field defaulted and every tenant lands in the default class."""
+    tr = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_smoke.json"))
+    assert all(e.slo is None for e in tr.events)
+    assert {get_slo(e.slo).name for e in tr.events} == {"standard"}
+    # and the default-class trace still equals its preset after the schema
+    # extension (serialization stays loadable both ways)
+    assert tr == get_trace("dc_churn_smoke")
+
+
+def test_slo_mix_does_not_perturb_classless_generation():
+    """Presets without slo_mix replay the exact pre-SLO RNG trajectory."""
+    from repro.online.traces import poisson_churn_trace
+    a = poisson_churn_trace(seed=7, horizon=20.0, arrival_rate=1.0,
+                            mean_lifetime=2.0, max_active=2)
+    b = poisson_churn_trace(seed=7, horizon=20.0, arrival_rate=1.0,
+                            mean_lifetime=2.0, max_active=2, slo_mix=None)
+    assert a == b
+
+
+# ---------------------- differential (a): warm vs cold ----------------------
+
+def test_preemptive_warm_matches_cold_oracle():
+    """(a) Every epoch of the preemptive warm re-planner is bit-identical to
+    the cold from-scratch oracle — including epochs where preemption
+    triggered (the planner is deterministic; preemption only re-times
+    serving, anchors stay ``final_anchors``-consistent)."""
+    trace = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_slo_smoke.json"))
+    cold = simulate(trace, mode="cold", policy=PREEMPT, **_SMALL)
+    warm = simulate(trace, mode="warm", policy=PREEMPT, **_SMALL)
+    assert len(cold.epochs) == len(warm.epochs) > 0
+    for ec, ew in zip(cold.epochs, warm.epochs):
+        assert _epoch_key(ec) == _epoch_key(ew)
+    assert warm.slo_samples == cold.slo_samples
+    assert warm.total_energy == cold.total_energy
+    assert warm.n_preemptions == cold.n_preemptions
+    assert warm.n_memo_hits >= 1
+    # epochs partition the package energy even with deferred (preempted)
+    # completions: the issuing epoch carries its iteration's full energy
+    assert warm.n_preemptions >= 1
+    assert warm.total_energy == pytest.approx(
+        sum(e.energy for e in warm.epochs))
+
+
+def test_preemptive_plans_match_pr3_when_nothing_preemptible():
+    """(a) On a classless trace (everything default/standard, nothing
+    preemptible) the preemptive policy plans the exact PR 3 schedules —
+    preemption never triggers and anchors are untouched."""
+    trace = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_smoke.json"))
+    pr3 = simulate(trace, mode="warm", **_SMALL)
+    pre = simulate(trace, mode="warm", policy=PREEMPT, **_SMALL)
+    assert pre.n_preemptions == 0
+    assert len(pr3.epochs) == len(pre.epochs)
+    for e3, ep in zip(pr3.epochs, pre.epochs):
+        assert _plans(e3) == _plans(ep)
+        assert e3.tenant_order == ep.tenant_order
+
+
+# ---------------------- differential (b): single-class reduction ------------
+
+@pytest.mark.parametrize("fixture", ["trace_dc_churn_smoke.json",
+                                     "trace_xr8_cadence.json"])
+def test_single_class_metrics_reduce_to_unweighted(fixture):
+    """(b) All tenants in one class -> the class-weighted metrics equal the
+    PR 3 unweighted ones exactly (same floats, not approx)."""
+    trace = Trace.load(os.path.join(FIXTURES, fixture))
+    kw = _SMALL if trace.kind == "churn" else dict(
+        pattern="het_sides", rows=3, cols=3, n_pe=256,
+        cfg=SearchConfig(path_cap=32, seg_cap=64))
+    sim = simulate(trace, mode="warm", **kw)
+    rep = slo_report(sim)
+    base = qos_report(sim)
+    assert rep.base == base                       # wraps the PR 3 report
+    assert [c.slo for c in rep.per_class] == ["standard"]
+    pooled = [s for ss in sim.latency_samples.values() for s in ss]
+    assert rep.weighted_p50 == weighted_percentile(pooled, 50.0)
+    assert rep.weighted_p99 == weighted_percentile(pooled, 99.0)
+    cls = rep.per_class[0]
+    assert cls.p50_latency == weighted_percentile(pooled, 50.0)
+    assert cls.n_samples == pytest.approx(sum(w for _, w in pooled))
+    # frame misses flow through identically to the per-model report
+    if trace.kind == "cadence":
+        n = sum(len(ss) for ss in sim.latency_samples.values())
+        miss = sum(1 for f in sim.frames if f.missed)
+        assert rep.weighted_miss_rate == pytest.approx(miss / n)
+    else:
+        assert rep.weighted_miss_rate == 0.0      # fluid mode never queues
+    assert rep.slo_attainment == 1.0 - rep.weighted_miss_rate
+
+
+# ---------------------- differential (c): hysteresis = inf ------------------
+
+def test_reconfig_hysteresis_inf_is_fixed_pattern():
+    """(c) Reconfiguration armed with infinite hysteresis replays the
+    fixed-pattern simulation event-for-event."""
+    trace = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_slo_smoke.json"))
+    fixed = simulate(trace, mode="warm", policy=PREEMPT, **_SMALL)
+    inf_h = simulate(trace, mode="warm",
+                     policy=OnlinePolicy(
+                         boundary="preempt",
+                         reconfig_patterns=("het_sides", "het_cb"),
+                         reconfig_hysteresis=math.inf), **_SMALL)
+    assert inf_h.n_switches == 0
+    assert len(fixed.epochs) == len(inf_h.epochs)
+    for ef, ei in zip(fixed.epochs, inf_h.epochs):
+        assert _epoch_key(ef) == _epoch_key(ei)
+        assert not ei.switched
+    assert inf_h.slo_samples == fixed.slo_samples
+    assert inf_h.total_energy == fixed.total_energy
+
+
+# ---------------------- preemption semantics --------------------------------
+
+def _two_tenant_trace(slo0, slo1, t1=0.02, horizon=0.6):
+    """bert-l tenant (class ``slo0``) from t=0; googlenet tenant (``slo1``)
+    arrives at ``t1`` — mid-iteration of the first tenant's plan."""
+    events = (Event(t=0.0, kind="arrive", model="bert-l", tenant=0, batch=3,
+                    slo=slo0),
+              Event(t=t1, kind="arrive", model="googlenet", tenant=1,
+                    batch=4, slo=slo1))
+    return Trace(name="two", kind="churn", horizon=horizon, events=events)
+
+
+def test_preemption_cuts_arrival_wait_vs_drain():
+    """An lc tenant arriving mid-iteration of a best-effort plan starts
+    sooner under preemption than under drain, and the preempted best-effort
+    iteration is conserved (its deferred sample is inflated, not lost)."""
+    trace = _two_tenant_trace("best_effort", "latency_critical")
+    drain = simulate(trace, mode="warm",
+                     policy=OnlinePolicy(boundary="drain"), **_SMALL)
+    pre = simulate(trace, mode="warm", policy=PREEMPT, **_SMALL)
+    assert pre.n_preemptions >= 1
+
+    def first_lc(sim):
+        ss = [s for s in sim.slo_samples if s.tenant == 1]
+        return min(ss, key=lambda s: s.t)
+    lc_drain, lc_pre = first_lc(drain), first_lc(pre)
+    # the drain wait includes the rest of the in-flight iteration; the
+    # preempt wait only the distance to the next chunk boundary
+    assert lc_pre.latency < lc_drain.latency
+    # deferred best-effort iteration: completes late but completes
+    be_pre = [s for s in pre.slo_samples if s.tenant == 0]
+    assert any(s.latency > min(x.latency for x in be_pre) for s in be_pre)
+    # best-effort never misses (deadline factor inf), lc deadline honoured
+    assert all(s.missed == 0 for s in pre.slo_samples if s.tenant == 0)
+
+
+def test_nonpreemptible_standard_tenant_drains_under_preempt_policy():
+    """With only non-preemptible tenants the preempt boundary defers
+    nothing: in-flight iterations complete (no preemptions counted)."""
+    trace = _two_tenant_trace("standard", "standard")
+    pre = simulate(trace, mode="warm", policy=PREEMPT, **_SMALL)
+    assert pre.n_preemptions == 0
+
+
+# ---------------------- MCM reconfiguration ---------------------------------
+
+def test_reconfig_switches_and_records_pattern():
+    trace = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_slo_smoke.json"))
+    pol = OnlinePolicy(boundary="preempt",
+                       reconfig_patterns=("het_sides", "het_cb"),
+                       reconfig_hysteresis=0.05)
+    sim = simulate(trace, mode="warm", policy=pol, **_SMALL)
+    assert sim.n_switches >= 1
+    pats = [e.pattern for e in sim.epochs if e.outcome is not None]
+    assert set(pats) - {"het_cross"}          # actually reconfigured
+    switches = [e for e in sim.epochs if e.switched]
+    assert len(switches) == sim.n_switches
+    # a switch epoch reloads from DRAM: no carried anchors
+    for e in switches:
+        assert e.outcome is not None
+
+
+def test_reconfig_warm_cold_parity():
+    """Reconfiguration decisions are part of the deterministic plan state:
+    warm and cold replays switch at the same epochs to the same patterns."""
+    trace = Trace.load(os.path.join(FIXTURES, "trace_dc_churn_slo_smoke.json"))
+    pol = OnlinePolicy(boundary="preempt",
+                       reconfig_patterns=("het_sides", "het_cb"),
+                       reconfig_hysteresis=0.05)
+    cold = simulate(trace, mode="cold", policy=pol, **_SMALL)
+    warm = simulate(trace, mode="warm", policy=pol, **_SMALL)
+    assert [e.pattern for e in cold.epochs] == \
+        [e.pattern for e in warm.epochs]
+    assert [e.switched for e in cold.epochs] == \
+        [e.switched for e in warm.epochs]
+    for ec, ew in zip(cold.epochs, warm.epochs):
+        assert _epoch_key(ec) == _epoch_key(ew)
+
+
+def test_slorescheduler_reuses_warm_caches_across_switches():
+    """Candidate scoring shares each pattern's plan memo: committing a
+    switch right after scoring the winner is a memo hit, and revisiting a
+    previously-served (mix, pattern) state short-circuits entirely."""
+    mcm = make_mcm("het_cross", rows=3, cols=3, n_pe=1024)
+    rs = SLORescheduler(mcm, cfg=_SMALL["cfg"], mode="warm",
+                        patterns=("het_sides",), hysteresis=0.0)
+    tenants = [(0, "bert-l", 3)]
+    r0 = rs.replan(tenants)
+    assert r0.pattern in ("het_cross", "het_sides")
+    planner = rs._planners[r0.pattern]
+    assert len(planner._plan_memo) >= 1
+    # same mix again from a fresh anchor state -> plan memo hit
+    planner._last = None
+    r1 = rs.replan([(9, "bert-l", 3)])
+    assert r1.memo_hit
