@@ -20,6 +20,13 @@ rises more than ``tolerance`` above.  Gating dimensionless factors
 machine generations — commit a new baseline alongside any intentional
 change.
 
+``--update-baselines`` refreshes the committed baselines instead of gating:
+every current row overwrites (or creates) its baseline file, carrying over
+the existing baseline's ``gate`` object so which metrics are enforced is a
+deliberate, reviewed property of the repo rather than of a bench run.  New
+benchmarks get a gate-less baseline — add the ``gate`` object by hand when
+opting them into the gate.
+
 Exit status: 0 clean, 1 on any regression or missing current file.
 """
 
@@ -100,10 +107,33 @@ def main() -> None:
         default=0.15,
         help="allowed relative regression (default 0.15)",
     )
+    ap.add_argument(
+        "--update-baselines",
+        action="store_true",
+        help="write current rows over the baseline files (preserving each "
+        "existing baseline's gate object) instead of gating",
+    )
     args = ap.parse_args()
 
     base_rows = load_rows(args.baseline)
     cur_rows = load_rows(args.current)
+
+    if args.update_baselines:
+        if not cur_rows:
+            print(f"no BENCH_*.json under {args.current}", file=sys.stderr)
+            sys.exit(1)
+        for name, row in sorted(cur_rows.items()):
+            gate = base_rows.get(name, {}).get("gate")
+            if gate is not None:
+                row = {**row, "gate": gate}
+            path = os.path.join(args.baseline, f"BENCH_{name}.json")
+            with open(path, "w") as fh:
+                json.dump(row, fh, indent=2, sort_keys=True)
+                fh.write("\n")
+            status = "gated" if gate else "ungated (add a gate object to opt in)"
+            print(f"updated {path} [{status}]")
+        return
+
     if not base_rows:
         print(f"no BENCH_*.json baselines under {args.baseline}", file=sys.stderr)
         sys.exit(1)

@@ -206,6 +206,63 @@ def bench_sched_throughput() -> None:
         f"(target >=5x)")
 
 
+def bench_fused_search() -> None:
+    """Whole-search-on-device: fused ``algo="beam_jax"`` schedule vs the
+    split host pipeline (``algo="beam"`` + jax_ref eval — the PR 4 path) on
+    a 16x16 pod at production search width (path_cap=8192, beam=keep=128).
+
+    Guards the two contracts of the fused device program: >=5x end-to-end
+    schedule construction, and O(1) host-device syncs per window (exactly
+    one counted ``device_fetch`` per window vs one per (model, window) on
+    the split path).  Plan identity between the two paths is asserted on
+    the live schedules while at it.
+    """
+    import time as _time
+    from repro.core import SearchConfig, get_scenario, make_mcm, schedule
+    from repro.core.scheduler import get_cost_db
+    from repro.launch import platform as lp
+
+    sc = get_scenario("dc4_lms_seg_image")
+    mcm = make_mcm("het_cb", rows=16, cols=16, n_pe=4096)
+    get_cost_db(sc, mcm)                   # cost DB outside the timing
+    kw = dict(n_splits=4, path_cap=8192, keep_per_model=128, beam=128)
+    cfg_host = SearchConfig(algo="beam", eval_backend="jax_ref", **kw)
+    cfg_dev = SearchConfig(algo="beam_jax", **kw)
+
+    dev = schedule(sc, mcm, cfg_dev)       # compile warmup
+    host = schedule(sc, mcm, cfg_host)
+    assert all(h.plan == d.plan for h, d in zip(host.windows, dev.windows)), \
+        "fused device schedule diverged from the host pipeline"
+    n_windows = len(dev.windows)
+
+    # the fused sync contract: exactly one fetch per window
+    lp.reset_sync_count()
+    schedule(sc, mcm, cfg_dev)
+    syncs = lp.sync_count()
+    assert syncs == n_windows, (
+        f"fused schedule performed {syncs} host-device syncs for "
+        f"{n_windows} windows (contract: exactly one per window)")
+
+    def best_of(cfg, n=3) -> float:
+        times = []
+        for _ in range(n):
+            t0 = _time.perf_counter()
+            schedule(sc, mcm, cfg)
+            times.append(_time.perf_counter() - t0)
+        return min(times)
+
+    t_host = best_of(cfg_host)
+    t_dev = best_of(cfg_dev)
+    speedup = t_host / t_dev
+    emit("fused_search_16x16", t_dev * 1e6,
+         f"host_ms={t_host * 1e3:.1f};dev_ms={t_dev * 1e3:.1f};"
+         f"speedup={speedup:.2f}x;syncs_per_schedule={syncs};"
+         f"windows={n_windows};target=5x")
+    assert speedup >= 5.0, (
+        f"fused device search regressed to {speedup:.2f}x vs the split "
+        f"host pipeline on 16x16 (target >=5x)")
+
+
 def bench_candidate_construction() -> None:
     """Path-construction throughput: batched frontier expansion vs the
     recursive DFS oracle (``sched.enumerate_paths``).
@@ -361,5 +418,6 @@ def bench_roofline_table(path: str = "dryrun_results.jsonl") -> None:
 
 
 ALL = [bench_scar_eval_throughput, bench_eval_backend,
-       bench_sched_throughput, bench_candidate_construction,
-       bench_kernel_agreement, bench_roofline_table]
+       bench_sched_throughput, bench_fused_search,
+       bench_candidate_construction, bench_kernel_agreement,
+       bench_roofline_table]

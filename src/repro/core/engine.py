@@ -15,6 +15,13 @@ search algorithm evaluates candidates in batched passes:
   ``argsort``.  It reproduces the reference Python loop *bit-identically*
   (same expansion budget accounting, same stable tie-breaking), verified by
   ``tests/test_engine.py`` against ``reference_combine``.
+* ``DeviceBeamEngine`` (``algo="beam_jax"``) moves the whole window search
+  onto the accelerator: candidate scoring, disjointness screening, beam
+  expansion and top-k selection compile into ONE jitted device program per
+  (mesh, window-shape) bucket (``core.device_search``), so a schedule does
+  O(n_windows) host-device syncs instead of O(models x windows).  Its
+  protocol-form ``combine`` is bit-identical to ``reference_combine`` under
+  scoped float64.
 * ``EvolutionaryEngine`` keeps the paper's (mu + lambda) EA trajectory (same
   RNG call sequence) but evaluates population fitness and overlap penalty in
   one ``batched_fitness`` pass — no per-row Python ``_fitness`` calls.
@@ -29,7 +36,8 @@ All engines satisfy the ``SearchEngine`` protocol and return the same
 from __future__ import annotations
 
 import dataclasses
-from typing import Protocol
+import os
+from typing import Optional, Protocol
 
 import numpy as np
 
@@ -217,6 +225,38 @@ def batched_fitness(ct: CandidateTensors, picks: np.ndarray, metric: str
     return base * (1.0 + 10.0 * overlap), lmax, esum, overlap
 
 
+def _raise_no_disjoint(model_idx: int, n_cands: int):
+    # the exact BeamEngine / reference_combine failure contract
+    raise RuntimeError(
+        f"no disjoint placement for model {model_idx} even "
+        f"after scanning all {n_cands} candidates; "
+        f"increase path_cap or reduce provisioned nodes")
+
+
+def _backtrack(parents: np.ndarray, cands: np.ndarray) -> np.ndarray:
+    """Per-stage picks of beam row 0 from the device scan's (parent, cand)
+    link tables ([M, beam] each): walk the links backwards from the best
+    final beam item."""
+    m = parents.shape[0]
+    picks = np.zeros(m, dtype=np.int64)
+    row = 0
+    for st in range(m - 1, -1, -1):
+        picks[st] = cands[st, row]
+        row = int(parents[st, row])
+    return picks
+
+
+def _explored(tlats: np.ndarray, tes: np.ndarray,
+              counts: np.ndarray) -> list[tuple[float, float]]:
+    """Per-stage (lat, energy) cloud, first ``counts[m]`` beam rows each —
+    the rows past a stage's live count are top-k filler."""
+    explored: list[tuple[float, float]] = []
+    for m in range(tlats.shape[0]):
+        n = int(counts[m])
+        explored.extend(zip(tlats[m, :n].tolist(), tes[m, :n].tolist()))
+    return explored
+
+
 def _plans_from_picks(sets, picks) -> WindowPlan:
     plans = []
     for cs, ci in zip(sets, picks):
@@ -360,6 +400,176 @@ def reference_combine(db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
 
 
 # ---------------------------------------------------------------------------
+# Whole-search-on-device beam (jax)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceBeamEngine:
+    """Beam search whose window combine runs as one jitted device program.
+
+    Two entry points share the ``core.device_search`` beam scan:
+
+    * ``combine`` — the ``SearchEngine`` protocol form.  Consumes host-scored
+      candidate sets and runs the *combination* (disjointness screen via the
+      ``kernels.scar_search`` AND+popcount op, keep/budget accounting, beam
+      expansion, top-k) on device under scoped float64.  Each stage performs
+      the reference's exact IEEE ops (one max, one add, one multiply per
+      item) and ``lax.top_k``'s lowest-flat-index tie rule equals the
+      reference's stable row-major acceptance order, so plans, metrics and
+      the explored cloud are bit-identical to ``reference_combine`` /
+      ``BeamEngine`` (asserted on all ten paper scenarios in
+      ``tests/test_device_search.py``).
+    * ``combine_window`` — the fused throughput form ``scheduler.schedule``
+      routes ``algo="beam_jax"`` through.  The host only *constructs*
+      candidates (PROV + SEG + tensor assembly); scoring
+      (``kernels.scar_eval``), quantised (tier, score) candidate ordering,
+      model ordering, the beam scan and top-k all compile into one float32
+      device program per (mesh, window-shape) bucket, and the whole window
+      result returns in a single counted ``launch.platform.device_fetch`` —
+      O(1) syncs per window, O(n_windows) per schedule, independent of
+      models x candidates.  The final plan is re-scored and validated by the
+      float64 numpy oracle (``evaluate_window``), so reported metrics stay
+      exact.
+
+    ``use_kernel=None`` auto-selects the Pallas kernels on TPU and the
+    jax_ref forms elsewhere; ``interpret=True`` runs the kernels anywhere
+    (tests/nightly).
+    """
+
+    beam: int = 64
+    max_expansions: int = 20000
+    use_kernel: Optional[bool] = None
+    interpret: bool = False
+
+    def _kernels(self) -> bool:
+        if self.use_kernel is not None:
+            return self.use_kernel
+        from .evaluator import _jax_platform
+        return _jax_platform() == "tpu"
+
+    def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
+                prev_end: dict[int, int],
+                metric: str = "edp") -> WindowSearchResult:
+        from jax.experimental import enable_x64
+
+        from repro.launch import platform as launch_platform
+
+        from . import device_search as ds
+
+        sets = sorted(sets, key=lambda s: -float(np.min(s.lat)))
+        n_words = max(1, (mcm.n_chiplets + 63) // 64)
+        m_models = len(sets)
+        n_pad = ds.bucket_size(max(cs.n_cands for cs in sets))
+        masks = np.zeros((m_models, n_pad, 2 * n_words), dtype=np.uint32)
+        lat = np.full((m_models, n_pad), np.inf)
+        energy = np.full((m_models, n_pad), np.inf)
+        sizes = np.zeros(m_models, dtype=np.int32)
+        keeps = np.zeros(m_models, dtype=np.int32)
+        for m, cs in enumerate(sets):
+            n = cs.n_cands
+            masks[m, :n] = ds.split_words_u32(cs.words(n_words))
+            lat[m, :n] = cs.lat
+            energy[m, :n] = cs.energy
+            sizes[m], keeps[m] = n, cs.keep
+        # scoped x64: the combination ops then run in float64 and match the
+        # host reference bit-for-bit
+        with enable_x64():
+            out = ds.protocol_program(
+                masks, lat, energy, sizes, keeps, beam=self.beam,
+                metric=metric, max_exp=self.max_expansions,
+                t0=ds.probe_width(n_pad, int(keeps.max())),
+                use_kernel=self._kernels(), interpret=self.interpret)
+            # the single host transfer of the whole combination
+            parents, cands, tlats, tes, counts, fails = \
+                launch_platform.device_fetch(out)
+        failed = np.flatnonzero(fails)
+        if failed.size:
+            cs = sets[int(failed[0])]
+            _raise_no_disjoint(cs.model_idx, cs.n_cands)
+        plan = _plans_from_picks(sets, _backtrack(parents, cands))
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        return WindowSearchResult(plan=plan, result=result,
+                                  explored=_explored(tlats, tes, counts))
+
+    def combine_window(self, db: CostDB, mcm: MCM, cfg,
+                       ranges: dict[int, tuple[int, int]],
+                       prev_end: dict[int, int],
+                       metric: Optional[str] = None) -> WindowSearchResult:
+        # local imports: sched/scheduler import this module at module level
+        from repro.kernels.scar_eval import pack_candidates
+        from repro.launch import platform as launch_platform
+
+        from . import device_search as ds
+        from .evaluator import EVAL_BLOCK_B
+        from .provision import provision
+        from .sched import assemble_candidates
+        from .segmentation import top_k_segmentations
+
+        metric = metric or cfg.metric
+        alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
+                          metric=cfg.metric,
+                          max_nodes_per_model=cfg.max_nodes_per_model)
+        n_active = len(ranges)
+        inputs, modes, built = [], [], []
+        for mi, (s, e) in sorted(ranges.items()):
+            segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
+                                       k=cfg.seg_top_k, cap=cfg.seg_cap,
+                                       metric=cfg.metric)
+            use_kernel = self._kernels()
+            cand, tiers, (words, chips, seg_arr) = assemble_candidates(
+                mcm, mi, (s, e), segs, prev_end.get(mi),
+                path_cap=cfg.path_cap, frontier_cap=cfg.frontier_cap,
+                need_seg_id=use_kernel)
+            args, statics, n_real = pack_candidates(
+                db, mcm, cand, n_active, prev_end=prev_end.get(mi),
+                pad_b=EVAL_BLOCK_B, dense=use_kernel)
+            w32 = ds.split_words_u32(words)
+            t32 = tiers.astype(np.int32)
+            pad = args[5].shape[0] - n_real          # chips are [B_pad, S]
+            if pad:
+                w32 = np.concatenate(
+                    [w32, np.zeros((pad, w32.shape[1]), np.uint32)])
+                t32 = np.concatenate([t32, np.zeros(pad, np.int32)])
+            inputs.append((args, w32, t32, np.int32(n_real)))
+            modes.append((statics["pipelined"], statics["has_prev"]))
+            built.append((cand, chips, seg_arr))
+
+        n_pad = ds.bucket_size(max(i[1].shape[0] for i in inputs))
+        keep = int(cfg.keep_per_model)
+        t0, t1 = ds.pool_widths(keep)
+        out = ds.fused_program(
+            tuple(inputs), modes=tuple(modes), pkg=mcm.pkg,
+            mcm_cols=mcm.cols, n_active=n_active, n_pad=n_pad,
+            beam=self.beam, keep=keep, metric=metric,
+            max_exp=self.max_expansions, t0=t0, t1=t1,
+            use_kernel=self._kernels(), interpret=self.interpret)
+        # the single counted host transfer of the whole window search
+        (morder, parents, cands, tlats, tes,
+         counts, fails) = launch_platform.device_fetch(out)
+        failed = np.flatnonzero(fails)
+        if failed.size:
+            cand = built[int(morder[int(failed[0])])][0]
+            _raise_no_disjoint(cand.model_idx, cand.seg_id.shape[0])
+        picks = _backtrack(parents, cands)
+        plans = []
+        for st in range(len(built)):
+            cand, chips, seg_arr = built[int(morder[st])]
+            # the scan emits assembled-candidate row indices directly
+            r = int(picks[st])
+            ns = int(cand.n_segs[r])
+            plans.append(ModelWindowPlan(
+                model_idx=cand.model_idx, start=cand.start, end=cand.end,
+                seg_ends=tuple(int(x) for x in seg_arr[r, :ns]),
+                chiplets=tuple(int(c) for c in chips[r, :ns]),
+                pipelined=True))
+        plan = WindowPlan(plans=tuple(sorted(plans,
+                                             key=lambda p: p.model_idx)))
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        return WindowSearchResult(plan=plan, result=result,
+                                  explored=_explored(tlats, tes, counts))
+
+
+# ---------------------------------------------------------------------------
 # Evolutionary search
 # ---------------------------------------------------------------------------
 
@@ -494,10 +704,20 @@ def get_engine(cfg, seed: int = 0) -> SearchEngine:
 
     ``seed`` is the per-window seed (``cfg.seed + window_index``) so
     stochastic engines decorrelate across windows like the seed code did.
+
+    The ``SCAR_SEARCH_BACKEND`` env var overrides the *beam-family* choice
+    (``brute``/``beam`` -> host numpy, ``beam_jax`` -> device) without
+    touching configs — mirroring ``SCAR_EVAL_BACKEND`` — and is ignored for
+    the stochastic engines, whose trajectories are algorithm-specific.
     """
     algo = cfg.algo
+    env = os.environ.get("SCAR_SEARCH_BACKEND", "").strip()
+    if env and algo in ("brute", "beam", "beam_jax"):
+        algo = env
     if algo in ("brute", "beam"):
         return BeamEngine(beam=cfg.beam)
+    if algo == "beam_jax":
+        return DeviceBeamEngine(beam=cfg.beam)
     if algo == "evolutionary":
         return EvolutionaryEngine(population=cfg.ea_population,
                                   generations=cfg.ea_generations,
@@ -508,4 +728,4 @@ def get_engine(cfg, seed: int = 0) -> SearchEngine:
                             temperature=cfg.anneal_temperature,
                             seed=seed)
     raise KeyError(f"unknown search algo {algo!r}; "
-                   "have brute|beam|evolutionary|anneal")
+                   "have brute|beam|beam_jax|evolutionary|anneal")

@@ -118,12 +118,33 @@ def eval_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
             f"{_jax_platform()!r}); use 'jax_ref' here, or interpret=True "
             "for kernel tests")
     from repro.kernels.scar_eval import evaluate, pack_candidates
+    from repro.launch import platform
     args, statics, b_real = pack_candidates(db, mcm, cand, n_active,
                                             prev_end=prev_end,
                                             pad_b=EVAL_BLOCK_B,
-                                            pipelined=pipelined)
-    out = np.asarray(evaluate(*args, **statics, block_b=EVAL_BLOCK_B,
-                              interpret=interpret,
-                              use_kernel=(resolved == "pallas")))
+                                            pipelined=pipelined,
+                                            dense=(resolved == "pallas"))
+    # the counted host-transfer point: one device->host sync per batch
+    out = platform.device_fetch(
+        evaluate(*args, **statics, block_b=EVAL_BLOCK_B, interpret=interpret,
+                 use_kernel=(resolved == "pallas")))
     return (out[:b_real, 0].astype(np.float64),
             out[:b_real, 1].astype(np.float64))
+
+
+def traceable_scores(args, statics, *, use_kernel: bool = False,
+                     interpret: bool = False):
+    """In-jit (lat[B], energy[B]) for composition into a larger program.
+
+    Takes the exact ``(args, statics)`` that ``pack_candidates`` produces
+    and returns traced arrays instead of host numpy — the fused device
+    search program (``engine.DeviceBeamEngine``) calls this under its own
+    ``jax.jit`` so candidate scoring, beam combination and top-k selection
+    compile into ONE device program with no intermediate host transfer.
+    ``eval_candidates`` above is the standalone (host-returning) form of the
+    same computation.
+    """
+    from repro.kernels.scar_eval import evaluate_traceable
+    out = evaluate_traceable(*args, **statics, interpret=interpret,
+                             use_kernel=use_kernel)
+    return out[:, 0], out[:, 1]

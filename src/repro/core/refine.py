@@ -33,6 +33,7 @@ from .cost import (BatchedModelCandidates, ModelWindowPlan, WindowPlan,
                    WindowResult, evaluate_schedule, evaluate_window)
 from .engine import metric_score
 from .evaluator import eval_candidates
+from .quantize import SCORE_SIG, quantize_scores
 from .maestro import CostDB
 from .scheduler import ScheduleOutcome, get_cost_db
 
@@ -183,8 +184,10 @@ def _try_relocate(rng, windows, ctx) -> _Move | None:
         prev_end=ev.prev_end_at(w).get(p.model_idx),
         pipelined=p.pipelined, backend=backend)
     # sample among the screened top-k: pure argmin starves the annealer of
-    # proposal diversity and gets stuck re-proposing one target
-    score = metric_score(lat, energy, metric)
+    # proposal diversity and gets stuck re-proposing one target.  Scores are
+    # quantised to the shared candidate-ordering grain so the screen picks
+    # the same top-k set on every evaluator backend (f32 noise absorbed).
+    score = quantize_scores(metric_score(lat, energy, metric), sig=SCORE_SIG)
     k = min(4, n_free)
     top = np.argpartition(score, k - 1)[:k]
     pick = int(top[int(rng.integers(k))])

@@ -28,7 +28,7 @@ from .engine import BeamEngine, ModelCandidateSet, WindowSearchResult
 from .evaluator import eval_candidates
 from .maestro import CostDB
 from .paths import frontier_paths
-from .segmentation import quantize_scores
+from .quantize import SCORE_SIG, quantize_scores
 
 __all__ = ["enumerate_paths", "assemble_candidates", "build_candidates",
            "combine_candidates", "ModelCandidateSet", "WindowSearchResult"]
@@ -76,7 +76,8 @@ def assemble_candidates(mcm: MCM, model_idx: int,
                         segmentations: list[tuple[int, ...]],
                         prev_end: Optional[int],
                         path_cap: int = 256,
-                        frontier_cap: Optional[int] = None
+                        frontier_cap: Optional[int] = None,
+                        need_seg_id: bool = True
                         ) -> tuple[BatchedModelCandidates, np.ndarray, tuple]:
     """Candidate *construction* only, no scoring.
 
@@ -85,6 +86,12 @@ def assemble_candidates(mcm: MCM, model_idx: int,
     The (segmentation x tier x path) tensor assembly of ``build_candidates``
     without the scoring stage, so benchmarks and tests can time/exercise the
     evaluator backends on exactly the production candidate batches.
+
+    ``need_seg_id=False`` leaves ``cand.seg_id`` a zero-stride placeholder
+    view (correct shape, no ``[B, Lw]`` materialisation) — only the numpy
+    oracle and the dense Pallas eval form read its values, so the fused
+    device search path (jax_ref scoring + ``seg_ends``-derived boundaries)
+    skips the batch's largest concatenation.
     """
     start, end = rng_range
     starts = list(mcm.dram_ports())
@@ -138,9 +145,10 @@ def assemble_candidates(mcm: MCM, model_idx: int,
         words_parts.append(pool_words)
         tier_parts.append(np.full(n_paths, tier, dtype=np.int64))
         seg_rel = np.asarray(seg, dtype=np.int64)
-        seg_row = np.repeat(np.arange(n_seg, dtype=np.int64),
-                            np.diff(np.concatenate([[0], seg_rel])))
-        segid_parts.append(np.broadcast_to(seg_row, (n_paths, Lw)))
+        if need_seg_id:
+            seg_row = np.repeat(np.arange(n_seg, dtype=np.int64),
+                                np.diff(np.concatenate([[0], seg_rel])))
+            segid_parts.append(np.broadcast_to(seg_row, (n_paths, Lw)))
         ends_row = np.full(S, -1, dtype=np.int64)
         ends_row[:n_seg] = start + seg_rel
         segarr_parts.append(np.broadcast_to(ends_row, (n_paths, S)))
@@ -149,7 +157,11 @@ def assemble_candidates(mcm: MCM, model_idx: int,
     chips = np.concatenate(chips_parts)                    # [B, S] int16
     words = np.concatenate(words_parts)                    # [B, W] uint64
     tiers = np.concatenate(tier_parts)
-    seg_id = np.concatenate(segid_parts)                   # [B, Lw]
+    if need_seg_id:
+        seg_id = np.concatenate(segid_parts)               # [B, Lw]
+    else:                                                  # shape-only view
+        seg_id = np.broadcast_to(np.zeros(Lw, np.int64),
+                                 (chips.shape[0], Lw))
     seg_arr = np.concatenate(segarr_parts)                 # [B, S]
     n_segs = np.concatenate(nseg_parts)
 
@@ -207,7 +219,7 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
     # Keep ALL candidates sorted by (tier, score); the combiner expands the
     # first ``keep`` per beam item and falls back deeper (eventually into the
     # unconstrained-root tier) only when blocked by exclusive occupancy.
-    order = np.lexsort((quantize_scores(score, sig=5), tiers))
+    order = np.lexsort((quantize_scores(score, sig=SCORE_SIG), tiers))
     return ModelCandidateSet(
         model_idx=model_idx, start=start, end=end,
         lat=lat[order], energy=energy[order], keep=keep,
@@ -220,12 +232,16 @@ def combine_candidates(db: CostDB, mcm: MCM,
                        prev_end: dict[int, int],
                        metric: str = "edp",
                        beam: int = 64,
-                       max_expansions: int = 20000) -> WindowSearchResult:
+                       max_expansions: int = 20000,
+                       engine=None) -> WindowSearchResult:
     """Beam search over disjoint per-model path combinations.
 
     Backward-compatible wrapper around the vectorized ``engine.BeamEngine``
     (bit-identical results to the original Python loop; see
-    ``engine.reference_combine`` for the oracle).
+    ``engine.reference_combine`` for the oracle).  ``engine`` substitutes any
+    other ``SearchEngine`` — e.g. ``engine.DeviceBeamEngine`` to run the
+    combination on device (itself bit-identical to the reference; benchmarks
+    and parity tests thread both through this one entry point).
     """
-    return BeamEngine(beam=beam, max_expansions=max_expansions).combine(
-        db, mcm, sets, prev_end, metric=metric)
+    eng = engine or BeamEngine(beam=beam, max_expansions=max_expansions)
+    return eng.combine(db, mcm, sets, prev_end, metric=metric)

@@ -31,7 +31,13 @@ class SearchConfig:
     metric: str = "edp"                 # latency | energy | edp
     n_splits: int = 4                   # paper default (5 windows)
     packing: str = "greedy"             # greedy | uniform (ablation)
-    algo: str = "brute"                 # brute|beam | evolutionary | anneal
+    algo: str = "brute"                 # brute|beam (host numpy) | beam_jax
+    #                                     (whole window search as one jitted
+    #                                     device program; see
+    #                                     engine.DeviceBeamEngine) |
+    #                                     evolutionary | anneal.  Env
+    #                                     override for the beam family:
+    #                                     SCAR_SEARCH_BACKEND.
     seg_top_k: int = 4
     seg_cap: int = 512
     path_cap: int = 128
@@ -206,10 +212,20 @@ def schedule(sc: Scenario, mcm: MCM,
         if key is not None and key in window_memo:
             wr = window_memo[key]
         else:
-            sets = build_window_sets(db, mcm, cfg, ranges, anchors,
-                                     memo=window_memo, memo_base=memo_base)
             engine = get_engine(cfg, seed=cfg.seed + w)
-            wr = engine.combine(db, mcm, sets, anchors, metric=cfg.metric)
+            if hasattr(engine, "combine_window"):
+                # fused device path: PROV + SEG + candidate construction stay
+                # on host, but scoring, ordering, beam combination and top-k
+                # run as one jitted device program with a single fetch per
+                # window (engine.DeviceBeamEngine.combine_window)
+                wr = engine.combine_window(db, mcm, cfg, ranges, anchors,
+                                           metric=cfg.metric)
+            else:
+                sets = build_window_sets(db, mcm, cfg, ranges, anchors,
+                                         memo=window_memo,
+                                         memo_base=memo_base)
+                wr = engine.combine(db, mcm, sets, anchors,
+                                    metric=cfg.metric)
             if key is not None:
                 window_memo[key] = wr
         window_results.append(wr)

@@ -15,6 +15,9 @@ import numpy as np
 
 from .chiplet import MCM
 from .maestro import CostDB
+# quantize_scores lives in repro.core.quantize since the device search path
+# (which needs its traceable twin); re-exported here for backward compat.
+from .quantize import quantize_scores
 
 
 def enumerate_segmentations(n_layers: int, max_segments: int,
@@ -136,21 +139,6 @@ def score_segmentations_batch(db: CostDB, mcm: MCM, start: int,
     if metric == "energy":
         return energy
     return lat * energy
-
-
-def quantize_scores(scores: np.ndarray, sig: int = 11) -> np.ndarray:
-    """Round to ``sig + 1`` significant digits (12 at the default) so
-    structurally tied candidates
-    (identical segments summed in a different order by the batched pass)
-    compare exactly equal and fall back to stable enumeration order, matching
-    the scalar loop's stable sort.  ``sched.build_candidates`` uses a coarser
-    ``sig`` to also absorb float32-backend noise (see there)."""
-    out = np.asarray(scores, dtype=np.float64).copy()
-    nz = np.isfinite(out) & (out != 0)
-    exp = np.floor(np.log10(np.abs(out[nz])))
-    scale = 10.0 ** (exp - sig)
-    out[nz] = np.round(out[nz] / scale) * scale
-    return out
 
 
 def top_k_segmentations(db: CostDB, mcm: MCM, start: int, end: int,

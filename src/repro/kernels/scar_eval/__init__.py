@@ -1,3 +1,3 @@
-from .ops import evaluate, pack_candidates
+from .ops import evaluate, evaluate_traceable, pack_candidates
 from .kernel import scar_eval
 from .ref import scar_eval_ref

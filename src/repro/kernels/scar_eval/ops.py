@@ -45,20 +45,24 @@ from repro.core.cost import comm_from_parts, segment_last_layers
 from .kernel import scar_eval
 
 
-@partial(jax.jit, static_argnames=("pkg", "mcm_cols", "n_active",
-                                   "pipelined", "has_prev", "block_b",
-                                   "interpret", "use_kernel"))
-def evaluate(lat_tab, e_tab, w_bytes, out_bytes, class_map, chips, seg_id,
-             last, n_segs, act_in, prev_idx, *, pkg, mcm_cols: int,
-             n_active: int, pipelined: bool = True, has_prev: bool = False,
-             block_b: int = 128, interpret: bool = False,
-             use_kernel: bool = True):
-    """[B, 2] (latency, energy) from compact packed inputs.
+def evaluate_traceable(lat_tab, e_tab, w_bytes, out_bytes, class_map, chips,
+                       seg_id, last, n_segs, act_in, prev_idx, *, pkg,
+                       mcm_cols: int, n_active: int, pipelined: bool = True,
+                       has_prev: bool = False, block_b: int = 128,
+                       interpret: bool = False, use_kernel: bool = True):
+    """[B, 2] (latency, energy) from compact packed inputs — traceable form.
 
     ``chips``/``seg_id``/``last``/``n_segs`` are integer ids (``last`` is
     the window-relative index of each segment's final layer); reductions and
     ``comm_from_parts`` run on device, fused into the jit.  ``prev_idx`` is
     the (traced) locality anchor, consulted only when ``has_prev``.
+
+    This un-jitted form exists for *composition*: the fused device search
+    program (``core.engine.DeviceBeamEngine``) inlines candidate scoring
+    into its own jitted window program by calling it under trace (via
+    ``core.evaluator.traceable_scores``), so scores never leave the device
+    between evaluation and beam combination.  Standalone callers use the
+    jitted ``evaluate`` wrapper below.
     """
     B, S = chips.shape
     Lw, C = lat_tab.shape
@@ -118,8 +122,17 @@ def evaluate(lat_tab, e_tab, w_bytes, out_bytes, class_map, chips, seg_id,
     return jnp.stack([lat, energy], axis=-1)
 
 
+# The standalone entry point: identical signature/semantics, one jit cache
+# keyed on the static mode flags (the traced ``prev_idx`` anchor does not
+# recompile).
+evaluate = partial(jax.jit, static_argnames=(
+    "pkg", "mcm_cols", "n_active", "pipelined", "has_prev", "block_b",
+    "interpret", "use_kernel"))(evaluate_traceable)
+
+
 def pack_candidates(db, mcm, cand, n_active: int, prev_end=None,
-                    pad_b: int = 128, *, pipelined: bool = True):
+                    pad_b: int = 128, *, pipelined: bool = True,
+                    dense: bool = True):
     """Compact, shape-bucketed inputs for one model's candidate batch.
 
     Returns ``(args, statics, B)``: positional arrays for ``evaluate``, the
@@ -127,6 +140,11 @@ def pack_candidates(db, mcm, cand, n_active: int, prev_end=None,
     ``pipelined``/``has_prev``) and the real (pre-padding) candidate count.
     ``pipelined=False`` selects the sequential (sum over segments) latency
     mode, matching ``eval_model_candidates(..., pipelined=False)``.
+
+    ``dense=False`` ships a ``[B, 1]`` placeholder in the ``seg_id`` slot —
+    the per-layer segment ids are consumed only by the ``use_kernel=True``
+    dense form, and at large path caps they are the batch's largest array
+    (``[B, Lw]``), so jax_ref callers skip that cast + host->device copy.
     """
     B, Lw = cand.seg_id.shape
     S = max(1, int(cand.n_segs.max()))           # shrink to per-batch max
@@ -137,7 +155,8 @@ def pack_candidates(db, mcm, cand, n_active: int, prev_end=None,
     class_map = np.asarray(mcm.class_map, dtype=np.int32)
 
     chips = cand.chiplets[:, :S].astype(np.int32)
-    seg_id = cand.seg_id.astype(np.int32)
+    seg_id = (cand.seg_id.astype(np.int32) if dense
+              else np.zeros((B, 1), np.int32))
     n_segs = cand.n_segs.astype(np.int32)
     if cand.seg_ends is not None:                # free at construction time
         last = (cand.seg_ends[:, :S] - cand.start - 1).astype(np.int32)

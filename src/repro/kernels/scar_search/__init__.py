@@ -1,0 +1,3 @@
+from .kernel import scar_search
+from .ops import conflict_counts, conflict_counts_traceable, masked_topk
+from .ref import conflict_counts_ref, masked_topk_ref

@@ -1,0 +1,48 @@
+"""Scalar numpy oracles for the ``scar_search`` ops.
+
+Python-loop semantics the kernel and jax_ref forms are pinned to, mirroring
+how ``scar_eval_ref`` anchors the evaluation kernel and
+``engine.reference_combine`` anchors the beam engines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def conflict_counts_ref(beam_words: np.ndarray,
+                        cand_words: np.ndarray) -> np.ndarray:
+    """[Bm, N] int32 popcount of the occupancy-word intersection.
+
+    ``beam_words`` [Bm, W] and ``cand_words`` [N, W] are uint32 occupancy
+    words (two per ``engine.CandidateTensors`` uint64 word).  Entry
+    ``[b, n]`` is the number of chiplets beam item ``b`` and candidate ``n``
+    both occupy — 0 means disjoint, matching ``batched_fitness``'s
+    ``np.bitwise_count`` overlap semantics word-for-word.
+    """
+    bm, w = beam_words.shape
+    n = cand_words.shape[0]
+    out = np.zeros((bm, n), dtype=np.int32)
+    for b in range(bm):
+        for c in range(n):
+            acc = 0
+            for k in range(w):
+                acc += int(beam_words[b, k] & cand_words[c, k]).bit_count()
+            out[b, c] = acc
+    return out
+
+
+def masked_topk_ref(scores: np.ndarray, valid: np.ndarray,
+                    k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Smallest-``k`` selection over ``valid`` entries, ties by lowest index.
+
+    Returns ``(values[k], indices[k])``; slots past the number of valid
+    entries carry ``(+inf, -1)``.  The tie rule (equal scores -> lower
+    index first) is the flat row-major acceptance order both host beam
+    engines use, which ``lax.top_k`` reproduces on device.
+    """
+    order = sorted((float(s), i) for i, s in enumerate(scores) if valid[i])
+    vals = np.full(k, np.inf)
+    idx = np.full(k, -1, dtype=np.int64)
+    for j, (s, i) in enumerate(order[:k]):
+        vals[j], idx[j] = s, i
+    return vals, idx

@@ -1,2 +1,4 @@
 # NOTE: do not import dryrun here (it sets XLA_FLAGS at import time).
 from .mesh import make_production_mesh, make_test_mesh
+from .platform import (device_fetch, jax_enable_x64, reset_sync_count,
+                       set_host_device_count, set_platform, sync_count)

@@ -189,3 +189,57 @@ def test_scar_eval_kernel_matches_core_evaluator(seed):
     np.testing.assert_allclose(out_k[:, 1], e_ref, rtol=1e-5)
     np.testing.assert_allclose(out_r[:, 0], lat_ref, rtol=1e-5)
     np.testing.assert_allclose(out_r[:, 1], e_ref, rtol=1e-5)
+
+
+# ------------------------- device beam search -------------------------------
+
+@pytest.fixture(scope="module")
+def _device_windows():
+    """Window candidate sets for randomized-mesh device-beam properties,
+    built once per (scenario, pattern) and shared across examples."""
+    pytest.importorskip("jax")
+    from repro.core.reconfig import greedy_pack
+    from repro.core.scheduler import (SearchConfig, build_window_sets,
+                                      get_cost_db)
+    cache: dict = {}
+
+    def build(scenario, pattern):
+        if (scenario, pattern) not in cache:
+            sc = get_scenario(scenario)
+            mcm = make_mcm(pattern, n_pe=256)
+            cfg = SearchConfig()
+            db = get_cost_db(sc, mcm)
+            wa = greedy_pack(db, mcm.class_counts(), cfg.n_splits)
+            sets = build_window_sets(db, mcm, cfg, wa.ranges[0], {})
+            cache[(scenario, pattern)] = (db, mcm, sets)
+        return cache[(scenario, pattern)]
+
+    return build
+
+
+@given(scenario=st.sampled_from(["xr7_ar_gaming", "xr9_social"]),
+       pattern=st.sampled_from(["het_sides", "het_cb"]),
+       beam=st.sampled_from([3, 16, 48]),
+       keep=st.sampled_from([2, 8, 48]),
+       budget=st.sampled_from([5, 37, 20000]),
+       metric=st.sampled_from(["latency", "energy", "edp"]))
+@settings(max_examples=25, deadline=None)
+def test_device_beam_matches_reference_combine(_device_windows, scenario,
+                                               pattern, beam, keep, budget,
+                                               metric):
+    """Property: the fully-jitted device beam combination is plan- and
+    explored-cloud-identical to ``reference_combine`` across meshes, beam
+    widths, expansion widths (``keep``: forces both the pool-prefix branch
+    and the exact-fallback sort) and expansion budgets."""
+    import dataclasses
+    from repro.core.engine import DeviceBeamEngine, reference_combine
+    db, mcm, sets = _device_windows(scenario, pattern)
+    sets = [dataclasses.replace(cs, keep=keep) for cs in sets]
+    ref = reference_combine(db, mcm, sets, {}, metric=metric, beam=beam,
+                            max_expansions=budget)
+    dev = DeviceBeamEngine(beam=beam, max_expansions=budget).combine(
+        db, mcm, sets, {}, metric=metric)
+    assert dev.plan == ref.plan
+    assert dev.result.latency == ref.result.latency
+    assert dev.result.energy == ref.result.energy
+    assert dev.explored == ref.explored

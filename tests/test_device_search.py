@@ -1,0 +1,208 @@
+"""Device search path tests: protocol bit-parity with the reference beam,
+fused-schedule plan identity, the O(1)-syncs-per-window contract, shared
+quantisation parity, and the shape-bucketing helpers.
+
+The hypothesis property over randomized meshes/beam widths lives in
+``test_cost_properties.py`` (hypothesis-gated); everything here is
+deterministic."""
+import numpy as np
+import pytest
+
+from repro.core import (SCENARIO_NAMES, SearchConfig, get_scenario,
+                        make_mcm, schedule)
+from repro.core.engine import DeviceBeamEngine, reference_combine
+from repro.core.quantize import SCORE_SIG, quantize_scores
+from repro.core.reconfig import greedy_pack
+from repro.core.scheduler import build_window_sets, get_cost_db
+from repro.launch import platform as lp
+
+pytest.importorskip("jax")
+
+
+def _windows(sc, mcm, cfg):
+    """Per-window (sets, anchors) exactly as the scheduler builds them,
+    advancing anchors along the reference trajectory."""
+    db = get_cost_db(sc, mcm)
+    wa = greedy_pack(db, mcm.class_counts(), cfg.n_splits)
+    prev_end: dict[int, int] = {}
+    out = []
+    for ranges in wa.ranges:
+        sets = build_window_sets(db, mcm, cfg, ranges, prev_end)
+        out.append((sets, dict(prev_end)))
+        wr = reference_combine(db, mcm, sets, prev_end, metric=cfg.metric,
+                               beam=cfg.beam)
+        prev_end = dict(prev_end)
+        prev_end.update(wr.result.end_chiplet)
+    return db, out
+
+
+# --------------------- protocol bit-parity (oracle) -------------------------
+
+@pytest.mark.parametrize("scenario", SCENARIO_NAMES)
+def test_device_beam_bit_identical_to_reference(scenario):
+    """Every window of every 3x3 paper scenario: the device combination
+    (scoped float64) returns the same best WindowPlan, the same metrics, and
+    the same explored cloud — bit-for-bit — as the reference Python beam."""
+    npe = 4096 if scenario.startswith("dc") else 256
+    sc = get_scenario(scenario)
+    mcm = make_mcm("het_sides", n_pe=npe)
+    cfg = SearchConfig()
+    db, windows = _windows(sc, mcm, cfg)
+    engine = DeviceBeamEngine(beam=cfg.beam)
+    for sets, prev_end in windows:
+        ref = reference_combine(db, mcm, sets, prev_end, metric=cfg.metric,
+                                beam=cfg.beam)
+        dev = engine.combine(db, mcm, sets, prev_end, metric=cfg.metric)
+        assert dev.plan == ref.plan
+        assert dev.result.latency == ref.result.latency
+        assert dev.result.energy == ref.result.energy
+        assert dev.explored == ref.explored
+
+
+@pytest.mark.parametrize("budget", [1, 7, 50])
+def test_device_beam_expansion_budget_parity(budget):
+    """The device scan's cumulative-sum budget truncation reproduces the
+    reference's row-major acceptance order at tight budgets (which force
+    the exact-fallback branch deep into the candidate order)."""
+    sc = get_scenario("xr10_vr_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    cfg = SearchConfig()
+    db, windows = _windows(sc, mcm, cfg)
+    engine = DeviceBeamEngine(beam=cfg.beam, max_expansions=budget)
+    for sets, prev_end in windows:
+        ref = reference_combine(db, mcm, sets, prev_end, metric=cfg.metric,
+                                beam=cfg.beam, max_expansions=budget)
+        dev = engine.combine(db, mcm, sets, prev_end, metric=cfg.metric)
+        assert dev.plan == ref.plan
+        assert dev.explored == ref.explored
+
+
+def test_device_beam_interpret_kernel_parity():
+    """``use_kernel=True, interpret=True``: the Pallas ``scar_search``
+    screening kernel (interpret mode, so it runs off-TPU) slots into the
+    protocol combine with unchanged bit-parity."""
+    sc = get_scenario("xr7_ar_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    cfg = SearchConfig()
+    db, windows = _windows(sc, mcm, cfg)
+    sets, prev_end = windows[0]
+    ref = reference_combine(db, mcm, sets, prev_end, metric=cfg.metric,
+                            beam=cfg.beam)
+    dev = DeviceBeamEngine(beam=cfg.beam, use_kernel=True,
+                           interpret=True).combine(db, mcm, sets, prev_end,
+                                                   metric=cfg.metric)
+    assert dev.plan == ref.plan
+    assert dev.explored == ref.explored
+
+
+# ------------------------ fused schedule contract ---------------------------
+
+def test_fused_schedule_matches_host_and_sync_contract(monkeypatch):
+    """``algo="beam_jax"`` end to end: identical window plans and schedule
+    metrics to the host beam pipeline, with exactly ONE counted host-device
+    fetch per window — while the split jax pipeline pays one per scored
+    batch (>= one per (model, window))."""
+    # pin: the host/split baselines must not be rerouted by the CI shard env
+    monkeypatch.delenv("SCAR_SEARCH_BACKEND", raising=False)
+    sc = get_scenario("dc4_lms_seg_image")
+    mcm = make_mcm("het_cb", n_pe=4096)
+    host = schedule(sc, mcm, SearchConfig(algo="beam"))
+
+    lp.reset_sync_count()
+    dev = schedule(sc, mcm, SearchConfig(algo="beam_jax"))
+    dev_syncs = lp.sync_count()
+    assert dev_syncs == len(dev.windows)
+
+    assert all(h.plan == d.plan for h, d in zip(host.windows, dev.windows))
+    assert dev.result.latency == host.result.latency
+    assert dev.result.energy == host.result.energy
+
+    # the split pipeline on the same jax backend: one fetch per batch
+    lp.reset_sync_count()
+    split = schedule(sc, mcm, SearchConfig(algo="beam",
+                                           eval_backend="jax_ref"))
+    split_syncs = lp.sync_count()
+    n_batches = sum(len(w.plan.plans) for w in split.windows)
+    assert split_syncs >= n_batches > dev_syncs
+
+
+def test_fused_schedule_respects_env_override(monkeypatch):
+    """SCAR_SEARCH_BACKEND=beam_jax reroutes a beam schedule through the
+    fused device path (the CI shard mechanism)."""
+    sc = get_scenario("xr7_ar_gaming")
+    mcm = make_mcm("het_sides", n_pe=256)
+    monkeypatch.delenv("SCAR_SEARCH_BACKEND", raising=False)
+    host = schedule(sc, mcm, SearchConfig(algo="beam"))
+    monkeypatch.setenv("SCAR_SEARCH_BACKEND", "beam_jax")
+    lp.reset_sync_count()
+    dev = schedule(sc, mcm, SearchConfig(algo="beam"))
+    assert lp.sync_count() == len(dev.windows)
+    assert all(h.plan == d.plan for h, d in zip(host.windows, dev.windows))
+
+
+# ------------------------- shared quantisation ------------------------------
+
+def test_quantize_scores_jax_matches_numpy():
+    """The traceable quantiser agrees with the host helper on the shared
+    candidate-ordering grain (within the grain itself: XLA's log10 can land
+    one representable value away from libm's at a bucket boundary — the
+    documented caveat — so the contract is same-bucket-or-adjacent, not
+    bitwise), and exact tie collapse is preserved: inputs the host helper
+    maps to one value stay collapsed on device too."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.quantize import quantize_scores_jax
+
+    rng = np.random.default_rng(0)
+    s = np.concatenate([
+        10.0 ** rng.uniform(-9, 9, 512),
+        [0.0, np.inf, 1.0, 1.0 + 1e-12],
+    ])
+    with enable_x64():
+        got = np.asarray(jax.jit(
+            lambda x: quantize_scores_jax(x, sig=SCORE_SIG))(s))
+    ref = quantize_scores(s, sig=SCORE_SIG)
+    np.testing.assert_allclose(got, ref, rtol=10.0 ** -SCORE_SIG)
+    # the majority agree bitwise; only log10 boundary cases may not
+    assert np.mean(got == ref) > 0.9
+    # zeros / inf pass through exactly
+    np.testing.assert_array_equal(got[-4:-2], [0.0, np.inf])
+    # f32 noise below the grain collapses to the same bucket (the property
+    # the fused path relies on; cf. test_quantize_scores_absorbs_f32_noise)
+    base = np.float32(1.2345678)
+    noisy = base * (1 + np.float32(1e-7))
+    q = np.asarray(quantize_scores_jax(jnp.asarray([base, noisy]),
+                                       sig=SCORE_SIG))
+    assert q[0] == q[1]
+
+    # float32 device values land in the same grain as the host quantiser
+    s32 = s.astype(np.float32)
+    got32 = np.asarray(quantize_scores_jax(jnp.asarray(s32), sig=SCORE_SIG))
+    ref32 = quantize_scores(s32.astype(np.float64), sig=SCORE_SIG)
+    np.testing.assert_allclose(got32, ref32, rtol=10.0 ** -SCORE_SIG)
+
+
+# --------------------------- bucketing helpers ------------------------------
+
+def test_bucket_size_shapes():
+    from repro.core.device_search import bucket_size
+    assert bucket_size(1) == 256
+    assert bucket_size(256) == 256
+    assert bucket_size(257) == 512
+    assert bucket_size(8192) == 8192
+    assert bucket_size(8193) == 16384 or bucket_size(8193) == 8192 * 2
+    assert bucket_size(40000) == 40960          # multiple of 8192, not 65536
+    for n in (1, 100, 5000, 47104, 100000):
+        b = bucket_size(n)
+        assert b >= n
+        assert b == 256 or b % 256 == 0
+
+
+def test_pool_widths_scale_with_keep():
+    from repro.core.device_search import pool_widths
+    t0, t1 = pool_widths(48)
+    assert t0 >= 4 * 48 and t1 >= 2 * 48
+    t0b, t1b = pool_widths(1024)
+    assert t0b == 4096 and t1b == 2048

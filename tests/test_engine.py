@@ -178,12 +178,29 @@ def test_anneal_no_worse_than_greedy_seed():
 
 # --------------------------- engine factory ---------------------------------
 
-def test_get_engine_selects_algo():
+def test_get_engine_selects_algo(monkeypatch):
+    from repro.core.engine import DeviceBeamEngine
+    monkeypatch.delenv("SCAR_SEARCH_BACKEND", raising=False)
     assert isinstance(get_engine(SearchConfig(algo="brute")), BeamEngine)
     assert isinstance(get_engine(SearchConfig(algo="beam")), BeamEngine)
+    dev = get_engine(SearchConfig(algo="beam_jax", beam=96))
+    assert isinstance(dev, DeviceBeamEngine) and dev.beam == 96
     ea = get_engine(SearchConfig(algo="evolutionary"), seed=7)
     assert isinstance(ea, EvolutionaryEngine) and ea.seed == 7
     an = get_engine(SearchConfig(algo="anneal"), seed=9)
     assert isinstance(an, AnnealEngine) and an.seed == 9
     with pytest.raises(KeyError):
         get_engine(SearchConfig(algo="gradient_descent"))
+
+
+def test_search_backend_env_override(monkeypatch):
+    """SCAR_SEARCH_BACKEND flips the beam family only: the stochastic
+    engines' trajectories are algorithm-specific and stay put."""
+    from repro.core.engine import DeviceBeamEngine
+    monkeypatch.setenv("SCAR_SEARCH_BACKEND", "beam_jax")
+    assert isinstance(get_engine(SearchConfig(algo="beam")),
+                      DeviceBeamEngine)
+    assert isinstance(get_engine(SearchConfig(algo="evolutionary")),
+                      EvolutionaryEngine)
+    monkeypatch.setenv("SCAR_SEARCH_BACKEND", "beam")
+    assert isinstance(get_engine(SearchConfig(algo="beam_jax")), BeamEngine)

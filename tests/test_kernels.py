@@ -134,3 +134,45 @@ def test_scar_eval_dense_ref_matches_kernel():
                           valid, pipe)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                rtol=1e-6, atol=1e-12)
+
+
+@pytest.mark.parametrize("Bm,N,W", [(4, 64, 2), (48, 300, 8), (1, 17, 2)])
+def test_scar_search_conflict_counts_match_ref(Bm, N, W):
+    """Pallas kernel (interpret, padded-block path) and jax_ref form both
+    reproduce the scalar popcount oracle, including zero masks (conflict-free
+    everywhere) and a full-overlap row."""
+    from repro.kernels.scar_search import (conflict_counts,
+                                           conflict_counts_ref)
+    rng = np.random.default_rng(Bm * N)
+    beam = rng.integers(0, 2 ** 32, (Bm, W), dtype=np.uint32)
+    cand = rng.integers(0, 2 ** 32, (N, W), dtype=np.uint32)
+    beam[0] = 0                       # empty beam mask: zero conflicts
+    cand[-1] = beam[-1]               # full overlap: popcount of the row
+    ref = conflict_counts_ref(beam, cand)
+    out_r = np.asarray(conflict_counts(jnp.asarray(beam), jnp.asarray(cand)))
+    out_k = np.asarray(conflict_counts(jnp.asarray(beam), jnp.asarray(cand),
+                                       use_kernel=True, interpret=True,
+                                       block_n=32))
+    np.testing.assert_array_equal(out_r, ref)
+    np.testing.assert_array_equal(out_k, ref)
+    assert (out_r[0] == 0).all()
+    assert out_r[-1, -1] == sum(int(w).bit_count() for w in beam[-1])
+
+
+def test_scar_search_masked_topk_matches_ref():
+    """lax.top_k lowest-flat-index tie rule == the oracle's stable sort,
+    exercised on exact ties, an all-invalid row, and k > n_valid padding."""
+    from repro.kernels.scar_search import masked_topk, masked_topk_ref
+    scores = np.array([3.0, 1.0, 2.0, 1.0, 2.0, 0.5], np.float32)
+    valid = np.array([1, 1, 1, 1, 0, 1], bool)
+    for k in (2, 4, 6):
+        rv, ri = masked_topk_ref(scores, valid, k)
+        dv, di = masked_topk(jnp.asarray(scores), jnp.asarray(valid), k)
+        np.testing.assert_array_equal(np.asarray(dv), rv)
+        np.testing.assert_array_equal(np.asarray(di), ri)
+    # exact tie at 1.0 resolves to index 1 before index 3
+    _, ri = masked_topk_ref(scores, valid, 3)
+    assert list(ri) == [5, 1, 3]
+    # all-invalid: every slot pads with (+inf, -1)
+    dv, di = masked_topk(jnp.asarray(scores), jnp.zeros(6, bool), 4)
+    assert np.isinf(np.asarray(dv)).all() and (np.asarray(di) == -1).all()
