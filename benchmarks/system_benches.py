@@ -336,6 +336,66 @@ def bench_candidate_construction() -> None:
         f"oracle (target >=5x)")
 
 
+def bench_comm_congestion() -> None:
+    """Congestion comm model (``comm_model="congestion"``) vs the analytic
+    hop model: end-to-end schedule construction on a 6x6 package with the
+    ``het_rows`` interposer NoC (dc4, production search width).
+
+    Guards the congestion model's two contracts: plan identity across the
+    numpy beam, the jax_ref evaluator, and the fused device search under
+    contention pricing, and a bounded scheduling-time overhead over the
+    analytic model (routing + per-link occupancy must stay a small tax on
+    the host pipeline, not a second scheduler).
+    """
+    import time as _time
+    from repro.core import SearchConfig, get_scenario, make_mcm, schedule
+    from repro.core.scenarios import noc_config
+    from repro.core.scheduler import get_cost_db
+
+    sc = get_scenario("dc4_lms_seg_image")
+    mcm = make_mcm("het_cross", rows=6, cols=6, n_pe=4096,
+                   noc=noc_config("het_rows"))
+    get_cost_db(sc, mcm)                   # cost DB outside the timing
+    kw = dict(path_cap=64, seg_cap=128)
+    cfg_an = SearchConfig(algo="beam", eval_backend="jax_ref", **kw)
+    cfg_cg = SearchConfig(algo="beam", eval_backend="jax_ref",
+                          comm_model="congestion", **kw)
+    cfg_np = SearchConfig(algo="beam", eval_backend="numpy",
+                          comm_model="congestion", **kw)
+    cfg_dev = SearchConfig(algo="beam_jax", comm_model="congestion", **kw)
+
+    out_cg = schedule(sc, mcm, cfg_cg)     # also the jax compile warmup
+    out_np = schedule(sc, mcm, cfg_np)
+    out_dev = schedule(sc, mcm, cfg_dev)
+    for other in (out_np, out_dev):        # acceptance: bit-identical plans
+        assert all(a.plan == b.plan
+                   for a, b in zip(out_cg.windows, other.windows)), \
+            "congestion plans diverged across backends"
+        assert other.result.latency == out_cg.result.latency
+        assert other.result.energy == out_cg.result.energy
+    out_an = schedule(sc, mcm, cfg_an)     # warm analytic jit too
+
+    def best_of(cfg, n=3) -> float:
+        times = []
+        for _ in range(n):
+            t0 = _time.perf_counter()
+            schedule(sc, mcm, cfg)
+            times.append(_time.perf_counter() - t0)
+        return min(times)
+
+    t_an = best_of(cfg_an)
+    t_cg = best_of(cfg_cg)
+    overhead = t_cg / t_an
+    d_lat = out_cg.result.latency / out_an.result.latency - 1.0
+    emit("comm_congestion_6x6", t_cg * 1e6,
+         f"analytic_ms={t_an * 1e3:.1f};congestion_ms={t_cg * 1e3:.1f};"
+         f"overhead={overhead:.2f}x;windows={len(out_cg.windows)};"
+         f"priced_latency_delta={d_lat:.4f};limit=3x")
+    assert overhead <= 3.0, (
+        f"congestion comm model costs {overhead:.2f}x the analytic "
+        f"schedule time on 6x6 (limit 3x)")
+
+
 def bench_kernel_agreement() -> None:
     """Kernel-vs-oracle max error at a production-ish tile (interpret mode)."""
     from repro.kernels.flash_attention import mha
@@ -419,5 +479,5 @@ def bench_roofline_table(path: str = "dryrun_results.jsonl") -> None:
 
 ALL = [bench_scar_eval_throughput, bench_eval_backend,
        bench_sched_throughput, bench_fused_search,
-       bench_candidate_construction, bench_kernel_agreement,
-       bench_roofline_table]
+       bench_candidate_construction, bench_comm_congestion,
+       bench_kernel_agreement, bench_roofline_table]

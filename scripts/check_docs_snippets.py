@@ -1,0 +1,95 @@
+"""Docs checker: execute fenced Python snippets and verify relative links.
+
+Every ```` ```python ```` fence in the given markdown files is executed in a
+fresh interpreter with ``PYTHONPATH=src`` from the repo root — a snippet that
+raises (or times out) fails the check, so the docs cannot drift from the
+code.  Fences opting out (shell transcripts, pseudo-code) use a different
+info string (```` ```text ````, ```` ```bash ````, …) or start with a
+``# docs: no-run`` line.
+
+Relative markdown links (``[x](docs/foo.md)``, ``[y](../src/bar.py#L10)``)
+must resolve to an existing file or directory; external (``http…``,
+``mailto:``) and pure-anchor (``#section``) links are ignored.
+
+Usage: python scripts/check_docs_snippets.py [files...]
+       (default: README.md docs/*.md)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FENCE_RE = re.compile(r"^```python[ \t]*\n(.*?)^```[ \t]*$",
+                      re.S | re.M)
+# [text](target) — skips images ![...](...) via the negative lookbehind
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+NO_RUN = "# docs: no-run"
+
+
+def run_snippet(code: str, timeout: float) -> tuple[bool, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    try:
+        r = subprocess.run([sys.executable, "-c", code], cwd=REPO_ROOT,
+                           env=env, capture_output=True, text=True,
+                           timeout=timeout)
+    except subprocess.TimeoutExpired:
+        return False, f"timed out after {timeout:.0f}s"
+    return r.returncode == 0, r.stderr.strip().splitlines()[-1] if (
+        r.returncode != 0 and r.stderr.strip()) else ""
+
+
+def check_links(path: str, text: str) -> list[str]:
+    problems = []
+    base = os.path.dirname(os.path.abspath(path))
+    for target in LINK_RE.findall(text):
+        if re.match(r"[a-z][a-z0-9+.-]*:", target) or target.startswith("#"):
+            continue                       # external scheme or in-page anchor
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(resolved):
+            problems.append(f"{path}: dead relative link -> {target}")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    default=["README.md"] + sorted(glob.glob(
+                        os.path.join(REPO_ROOT, "docs", "*.md"))))
+    ap.add_argument("--timeout", type=float, default=300.0,
+                    help="per-snippet wall-clock limit (seconds)")
+    args = ap.parse_args()
+
+    failures: list[str] = []
+    n_snippets = 0
+    for path in args.files:
+        with open(path) as fh:
+            text = fh.read()
+        failures += check_links(path, text)
+        for i, code in enumerate(FENCE_RE.findall(text)):
+            if code.lstrip().startswith(NO_RUN):
+                continue
+            n_snippets += 1
+            ok, err = run_snippet(code, args.timeout)
+            status = "ok" if ok else f"FAILED ({err})"
+            print(f"{path} snippet {i}: {status}")
+            if not ok:
+                failures.append(f"{path} snippet {i}: {err}")
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    print(f"# {n_snippets} snippets run, {len(failures)} problems",
+          file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

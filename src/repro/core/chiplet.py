@@ -40,6 +40,34 @@ class PackageParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class NoCConfig:
+    """Interposer NoC link parameters for the congestion comm model.
+
+    The interposer is the 2D-mesh link graph between chiplet sites:
+    ``rows * (cols - 1)`` horizontal links plus ``(rows - 1) * cols``
+    vertical links (see ``cost.xy_route_links`` for the id layout).  The
+    analytic comm model (``cost.comm_from_parts``) ignores it — transfers
+    see the flat per-chiplet ``PackageParams.nop_bw`` — while
+    ``comm_model="congestion"`` routes every transfer over XY links,
+    rate-limits it by the slowest link *class* it traverses, and adds a
+    bottleneck-link waiting term from co-scheduled tenants' traffic.
+
+    All bandwidths are bytes/s.  ``congestion_alpha`` is a documented
+    extra-paper constant: the fraction of the bottleneck link's
+    background serialization time (bg bytes / link bw) a transfer waits,
+    i.e. 0 = no contention, 1 = fully serialized behind co-tenants.
+    With the defaults (``h_bw == v_bw == PackageParams.nop_bw`` and both
+    >= ``dram_bw``) the rate terms vanish and congestion differs from
+    the analytic model *only* by the waiting term, which is what makes
+    zero route-overlap reduce to the analytic model exactly.
+    """
+
+    h_bw: float = 100e9                 # horizontal interposer links (bytes/s)
+    v_bw: float = 100e9                 # vertical interposer links (bytes/s)
+    congestion_alpha: float = 0.5       # bottleneck-wait fraction per transfer
+
+
+@dataclasses.dataclass(frozen=True)
 class ChipletClass:
     """Definition 2: c = {df, N_PE, BW_noc, BW_mem, Sz_mem}."""
 
@@ -60,6 +88,7 @@ class MCM:
     class_map: tuple[int, ...]          # per-position index into ``classes``
     classes: tuple[ChipletClass, ...]
     pkg: PackageParams = PackageParams()
+    noc: NoCConfig = NoCConfig()        # interposer links (congestion model)
 
     @property
     def n_chiplets(self) -> int:
@@ -122,12 +151,14 @@ def _classes(n_pe: int) -> tuple[ChipletClass, ChipletClass]:
 
 
 def make_mcm(pattern: str, rows: int = 3, cols: int = 3,
-             n_pe: int = 4096) -> MCM:
+             n_pe: int = 4096, noc: NoCConfig | None = None) -> MCM:
     """Build one of the five evaluated MCM organisations.
 
     Patterns: ``simba_nvdla``, ``simba_shi`` (homogeneous), ``het_cb``
     (checkerboard), ``het_sides`` (left half NVDLA / right half Shi-diannao),
     ``het_cross`` (Shi-diannao on the centre row+column, NVDLA elsewhere).
+    ``noc`` overrides the interposer link parameters used by the
+    congestion comm model (defaults to uniform 100 GB/s links).
     """
     classes = _classes(n_pe)
     n = rows * cols
@@ -146,7 +177,8 @@ def make_mcm(pattern: str, rows: int = 3, cols: int = 3,
     else:
         raise ValueError(f"unknown MCM pattern {pattern!r}")
     return MCM(name=f"{pattern}_{rows}x{cols}", rows=rows, cols=cols,
-               class_map=tuple(cmap), classes=classes)
+               class_map=tuple(cmap), classes=classes,
+               noc=noc if noc is not None else NoCConfig())
 
 
 ALL_PATTERNS = ("simba_nvdla", "simba_shi", "het_cb", "het_sides", "het_cross")

@@ -147,19 +147,185 @@ def _dram_energy(sz: float, hops_to_port: int, mcm: MCM) -> float:
             + bits * mcm.pkg.nop_e_pj_per_bit * hops_to_port) * 1e-12
 
 
+# ---------------------------------------------------------------------------
+# Interposer NoC link model (comm_model="congestion")
+#
+# The analytic model above prices hop *count*; the congestion model routes
+# every transfer over the concrete interposer links (XY routing), rate-limits
+# it by the slowest link class it traverses (NoCConfig.h_bw / v_bw), and adds
+# a waiting term on the bottleneck link shared with co-scheduled tenants.
+# Link id layout: horizontal link (r, c)-(r, c+1) has id ``r*(cols-1) + c``;
+# vertical link (r, c)-(r+1, c) has id ``rows*(cols-1) + r*cols + c``.
+# ---------------------------------------------------------------------------
+
+def n_interposer_links(rows: int, cols: int) -> int:
+    """Number of interposer mesh links: horizontal then vertical ids."""
+    return rows * (cols - 1) + (rows - 1) * cols
+
+
+def dram_edge_col(cols: int, c: int) -> int:
+    """Column of the DRAM port a chiplet in column ``c`` streams through.
+
+    Nearest package edge; ties (odd-width centre column) break left, and
+    ``MCM.hops_to_dram`` equals the resulting horizontal distance.
+    """
+    return 0 if c <= cols - 1 - c else cols - 1
+
+
+def xy_route_links(rows: int, cols: int, src: int, dst: int) -> list[int]:
+    """Interposer link ids of the XY route ``src -> dst`` (X first, then Y).
+
+    The horizontal leg runs on the *source* row, the vertical leg on the
+    *destination* column; the list is empty when ``src == dst``.  Link
+    count always equals ``MCM.hops(src, dst)``.
+    """
+    n_h = rows * (cols - 1)
+    r1, c1 = divmod(src, cols)
+    r2, c2 = divmod(dst, cols)
+    links = [r1 * (cols - 1) + c for c in range(min(c1, c2), max(c1, c2))]
+    links += [n_h + r * cols + c2 for r in range(min(r1, r2), max(r1, r2))]
+    return links
+
+
+def dram_route_links(rows: int, cols: int, cid: int) -> list[int]:
+    """Interposer link ids between chiplet ``cid`` and its DRAM port.
+
+    Horizontal-only (ports sit on the left/right package edges); empty when
+    the chiplet is itself a port.  Link count equals ``MCM.hops_to_dram``.
+    """
+    r, c = divmod(cid, cols)
+    e = dram_edge_col(cols, c)
+    return [r * (cols - 1) + cc for cc in range(min(c, e), max(c, e))]
+
+
+def link_bandwidths(mcm: MCM) -> np.ndarray:
+    """Per-link bandwidth (bytes/s), ``[n_links]`` float64, h then v ids."""
+    n_h = mcm.rows * (mcm.cols - 1)
+    bw = np.empty(n_interposer_links(mcm.rows, mcm.cols), dtype=np.float64)
+    bw[:n_h] = mcm.noc.h_bw
+    bw[n_h:] = mcm.noc.v_bw
+    return bw
+
+
+def plan_link_bytes(db: CostDB, mcm: MCM, plan: ModelWindowPlan,
+                    prev_end: Optional[dict[int, int]] = None) -> np.ndarray:
+    """Bytes one plan pushes over each interposer link, ``[n_links]`` f64.
+
+    Accumulates exactly the transfers ``evaluate_window`` prices: every
+    segment's weight stream to/from its DRAM port, the first segment's
+    input activations (DRAM route when cold, XY route from the anchor in
+    ``prev_end``, nothing when resident), inter-segment activation
+    forwards (XY), and the last segment's DRAM writeback.  This is the
+    scalar occupancy oracle the batched/jit forms are parity-tested
+    against.
+    """
+    prev_end = prev_end or {}
+    rows, cols = mcm.rows, mcm.cols
+    occ = np.zeros(n_interposer_links(rows, cols), dtype=np.float64)
+    seg_start = plan.start
+    for si, seg_end in enumerate(plan.seg_ends):
+        cid = plan.chiplets[si]
+        dram_links = dram_route_links(rows, cols, cid)
+        w_sz = float(db.w_bytes[seg_start:seg_end].sum())
+        occ[dram_links] += w_sz
+        if si == 0:
+            act_in = float(db.in_bytes[seg_start])
+            if prev_end.get(plan.model_idx) == cid:
+                pass  # resident on-chiplet: no interposer traffic
+            elif plan.model_idx in prev_end:
+                occ[xy_route_links(rows, cols, prev_end[plan.model_idx],
+                                   cid)] += act_in
+            else:
+                occ[dram_links] += act_in
+        act_out = float(db.out_bytes[seg_end - 1])
+        if si + 1 < plan.n_segments:
+            occ[xy_route_links(rows, cols, cid,
+                               plan.chiplets[si + 1])] += act_out
+        else:
+            occ[dram_links] += act_out
+        seg_start = seg_end
+    return occ
+
+
+def window_link_occupancy(db: CostDB, mcm: MCM, wp: WindowPlan,
+                          prev_end: Optional[dict[int, int]] = None
+                          ) -> np.ndarray:
+    """Total per-link byte occupancy of all plans in a window, ``[n_links]``."""
+    occ = np.zeros(n_interposer_links(mcm.rows, mcm.cols), dtype=np.float64)
+    for p in wp.plans:
+        occ += plan_link_bytes(db, mcm, p, prev_end)
+    return occ
+
+
+def _route_wait(bg_cost: np.ndarray, links: list[int]) -> float:
+    """Bottleneck waiting time (s) over a route: max of ``bg_cost[links]``."""
+    return float(bg_cost[links].max()) if links else 0.0
+
+
+def _dram_corr(sz: float, hops: int, wait: float, mcm: MCM) -> float:
+    """Congestion correction (s) added to ``_dram_lat`` for one transfer."""
+    if sz == 0:
+        return 0.0
+    noc = mcm.noc
+    rate = ((1.0 / min(mcm.pkg.dram_bw, noc.h_bw) - 1.0 / mcm.pkg.dram_bw)
+            if hops > 0 else 0.0)
+    return sz * rate + noc.congestion_alpha * wait
+
+
+def _nop_corr(sz: float, h_hops: int, v_hops: int, wait: float,
+              mcm: MCM) -> float:
+    """Congestion correction (s) added to ``_nop_lat`` for one transfer."""
+    if sz == 0 or h_hops + v_hops == 0:
+        return 0.0
+    noc = mcm.noc
+    inv_route = max(1.0 / noc.h_bw if h_hops > 0 else 0.0,
+                    1.0 / noc.v_bw if v_hops > 0 else 0.0)
+    return sz * (inv_route - 1.0 / mcm.pkg.nop_bw) + noc.congestion_alpha * wait
+
+
 def evaluate_window(db: CostDB, mcm: MCM, wp: WindowPlan,
                     prev_end: Optional[dict[int, int]] = None,
-                    validate: bool = False) -> WindowResult:
-    """Evaluate one time window (latency = max over models, energy = sum)."""
+                    validate: bool = False,
+                    comm_model: str = "analytic") -> WindowResult:
+    """Evaluate one time window of co-scheduled model plans.
+
+    Window latency (seconds) is the max over the per-model latencies,
+    energy (joules) the sum over every compute and transfer term.
+
+    ``comm_model`` selects the communication cost model: ``"analytic"``
+    (paper Sec. III-E hop geometry) or ``"congestion"``, which adds a
+    routed link-occupancy correction per transfer — each plan's traffic
+    is routed over concrete interposer links (``xy_route_links``) and
+    waits on the bottleneck link it shares with the *other* plans in the
+    window (see ``_dram_corr`` / ``_nop_corr``).  Corrections affect
+    latency only; bytes moved, and therefore energy, are identical under
+    both models.  This scalar float64 path is the parity oracle for the
+    batched (``eval_model_candidates``) and jitted
+    (``kernels.scar_eval``) forms.
+    """
     if validate:
         wp.validate()
     prev_end = prev_end or {}
+    congestion = comm_model == "congestion"
+    if not congestion and comm_model != "analytic":
+        raise ValueError(f"unknown comm_model {comm_model!r}")
+    rows, cols = mcm.rows, mcm.cols
+    if congestion:
+        occs = [plan_link_bytes(db, mcm, p, prev_end) for p in wp.plans]
+        bw = link_bandwidths(mcm)
     n_active = len(wp.plans)
     per_model_lat: dict[int, float] = {}
     per_model_segs: dict[int, tuple[tuple[float, int], ...]] = {}
     end_chiplet: dict[int, int] = {}
     total_energy = 0.0
-    for p in wp.plans:
+    for pi, p in enumerate(wp.plans):
+        if congestion:
+            # background = co-tenants' bytes on each link, never own traffic
+            bg = np.zeros_like(occs[pi])
+            for j, o in enumerate(occs):
+                if j != pi:
+                    bg = bg + o
+            bg_cost = bg / bw
         seg_lats = []
         seg_start = p.start
         for si, seg_end in enumerate(p.seg_ends):
@@ -175,29 +341,56 @@ def evaluate_window(db: CostDB, mcm: MCM, wp: WindowPlan,
             hops_dram = mcm.hops_to_dram(cid)
             ip_lat = _dram_lat(w_sz, hops_dram, mcm, n_active)
             ip_e = _dram_energy(w_sz, hops_dram, mcm)
+            ip_corr = op_corr = 0.0
+            if congestion:
+                wait_d = _route_wait(bg_cost,
+                                     dram_route_links(rows, cols, cid))
+                ip_corr = _dram_corr(w_sz, hops_dram, wait_d, mcm)
             if si == 0:
                 act_in = float(db.in_bytes[seg_start])
                 if prev_end.get(p.model_idx) == cid:
                     pass  # activations already resident on-chiplet
                 elif p.model_idx in prev_end:
-                    hops = mcm.hops(prev_end[p.model_idx], cid)
+                    src = prev_end[p.model_idx]
+                    hops = mcm.hops(src, cid)
                     ip_lat += _nop_lat(act_in, hops, mcm, n_active)
                     ip_e += _nop_energy(act_in, hops, mcm)
+                    if congestion:
+                        (r1, c1), (r2, c2) = mcm.pos(src), mcm.pos(cid)
+                        wait0 = _route_wait(
+                            bg_cost, xy_route_links(rows, cols, src, cid))
+                        ip_corr += _nop_corr(act_in, abs(c1 - c2),
+                                             abs(r1 - r2), wait0, mcm)
                 else:
                     ip_lat += _dram_lat(act_in, hops_dram, mcm, n_active)
                     ip_e += _dram_energy(act_in, hops_dram, mcm)
+                    if congestion:
+                        ip_corr += _dram_corr(act_in, hops_dram, wait_d, mcm)
             # op_com: forward activations to next segment (NoP), or write the
             # model's window output back to DRAM at the window boundary.
             act_out = float(db.out_bytes[seg_end - 1])
             if si + 1 < p.n_segments:
-                hops = mcm.hops(cid, p.chiplets[si + 1])
+                nxt = p.chiplets[si + 1]
+                hops = mcm.hops(cid, nxt)
                 op_lat = _nop_lat(act_out, hops, mcm, n_active)
                 op_e = _nop_energy(act_out, hops, mcm)
+                if congestion:
+                    (r1, c1), (r2, c2) = mcm.pos(cid), mcm.pos(nxt)
+                    wait_n = _route_wait(
+                        bg_cost, xy_route_links(rows, cols, cid, nxt))
+                    op_corr = _nop_corr(act_out, abs(c1 - c2), abs(r1 - r2),
+                                        wait_n, mcm)
             else:
                 op_lat = _dram_lat(act_out, hops_dram, mcm, n_active)
                 op_e = _dram_energy(act_out, hops_dram, mcm)
+                if congestion:
+                    op_corr = _dram_corr(act_out, hops_dram, wait_d, mcm)
                 end_chiplet[p.model_idx] = cid
-            seg_lats.append(comp_lat + ip_lat + op_lat)
+            if congestion:
+                seg_lats.append(comp_lat + (ip_lat + ip_corr)
+                                + (op_lat + op_corr))
+            else:
+                seg_lats.append(comp_lat + ip_lat + op_lat)
             total_energy += comp_e + ip_e + op_e
             seg_start = seg_end
         if p.pipelined and p.n_segments > 1:
@@ -218,18 +411,21 @@ def evaluate_window(db: CostDB, mcm: MCM, wp: WindowPlan,
 def evaluate_schedule(db: CostDB, mcm: MCM,
                       windows: Sequence[WindowPlan],
                       validate: bool = False,
-                      prev_end: Optional[dict[int, int]] = None
-                      ) -> ScheduleResult:
+                      prev_end: Optional[dict[int, int]] = None,
+                      comm_model: str = "analytic") -> ScheduleResult:
     """Lat(Sc) = sum over windows; E(Sc) = sum (Sec. III-E/F).
 
     ``prev_end`` seeds the cross-window data-locality anchors before the
     first window — the online re-scheduler uses it to account activations a
     persisting tenant left on-package at the previous epoch boundary.
+    ``comm_model`` selects the per-window communication model (see
+    ``evaluate_window``); anchors thread identically under both.
     """
     results = []
     prev_end = dict(prev_end) if prev_end else {}
     for wp in windows:
-        res = evaluate_window(db, mcm, wp, prev_end, validate=validate)
+        res = evaluate_window(db, mcm, wp, prev_end, validate=validate,
+                              comm_model=comm_model)
         results.append(res)
         prev_end = dict(prev_end)
         prev_end.update(res.end_chiplet)
@@ -382,6 +578,120 @@ def comm_from_parts(xp, pkg, cols: int, cpos, seg_w, seg_last_out, n_segs,
     return ip_lat, ip_e, op_lat, op_e
 
 
+def route_wait_tables(xp, link_cost, rows: int, cols: int):
+    """Bottleneck-wait lookup tables over all XY routes of a mesh.
+
+    ``link_cost`` is ``[n_links]`` per-link waiting time in seconds
+    (background bytes / link bandwidth, h then v link ids).  Returns
+    ``(wait_pair, wait_dram)``: ``wait_pair[s, d]`` is the max link cost
+    on the XY route ``s -> d`` (``[n, n]``), ``wait_dram[c]`` the max on
+    chiplet ``c``'s DRAM-port route (``[n]``).  Built from static range
+    masks so the same code runs host-side (numpy float64 oracle) and
+    inside the jitted fused search, where ``link_cost`` is a traced
+    float32 array; exactly matches ``_route_wait`` over
+    ``xy_route_links`` / ``dram_route_links``.
+    """
+    n_h = rows * (cols - 1)
+    if cols > 1:
+        h = link_cost[:n_h].reshape(rows, cols - 1)
+        a = np.arange(cols)
+        lo = np.minimum(a[:, None], a[None, :])[..., None]
+        hi = np.maximum(a[:, None], a[None, :])[..., None]
+        span = np.arange(cols - 1)[None, None, :]
+        mask = (span >= lo) & (span < hi)            # [cols, cols, cols-1]
+        hmax = xp.max(xp.where(mask[None], h[:, None, None, :], 0.0),
+                      axis=-1)                       # [rows, cols, cols]
+    else:
+        hmax = xp.zeros((rows, 1, 1), dtype=link_cost.dtype)
+    if rows > 1:
+        v = link_cost[n_h:].reshape(rows - 1, cols).T  # [cols, rows-1]
+        a = np.arange(rows)
+        lo = np.minimum(a[:, None], a[None, :])[..., None]
+        hi = np.maximum(a[:, None], a[None, :])[..., None]
+        span = np.arange(rows - 1)[None, None, :]
+        mask = (span >= lo) & (span < hi)            # [rows, rows, rows-1]
+        vmax = xp.max(xp.where(mask[None], v[:, None, None, :], 0.0),
+                      axis=-1)                       # [cols, rows, rows]
+    else:
+        vmax = xp.zeros((cols, 1, 1), dtype=link_cost.dtype)
+    idx = np.arange(rows * cols)
+    r, c = idx // cols, idx % cols
+    # XY route s->d: horizontal leg on the source row, vertical on the
+    # destination column — max of the two leg bottlenecks.
+    wait_pair = xp.maximum(hmax[r[:, None], c[:, None], c[None, :]],
+                           vmax[c[None, :], r[:, None], r[None, :]])
+    edge = np.where(c <= cols - 1 - c, 0, cols - 1)
+    wait_dram = hmax[r, c, edge]
+    return wait_pair, wait_dram
+
+
+def congestion_correction(xp, pkg, noc, cols: int, cpos, seg_w, seg_last_out,
+                          n_segs, act_in, prev_end, wait_pair, wait_dram):
+    """Routed-link latency corrections added on top of ``comm_from_parts``.
+
+    Mirrors the analytic term structure transfer-for-transfer (weights
+    stream, first-segment activations, boundary forwards, writeback) but
+    prices two link-level effects the hop-geometry model cannot see:
+
+    * **rate**: a transfer is limited by the slowest link *class* on its
+      XY route (``noc.h_bw`` / ``noc.v_bw``) instead of the flat
+      ``pkg.nop_bw`` / ``pkg.dram_bw``, contributing
+      ``sz * (1/bw_route - 1/bw_flat)``;
+    * **wait**: ``noc.congestion_alpha`` times the bottleneck-link
+      background serialization time, gathered from the precomputed
+      ``wait_pair`` / ``wait_dram`` tables (``route_wait_tables``).
+
+    Same xp-generic convention as ``comm_from_parts`` — identical code
+    produces the float64 host oracle and the float32 in-jit terms.
+    Returns ``(ip_corr, op_corr)``, each ``[B, S]`` seconds; energy has
+    no correction (bytes moved are identical under both models).
+    """
+    S = cpos.shape[1]
+    rows_, cols_ = cpos // cols, cpos % cols
+    hops_dram = xp.minimum(cols_, cols - 1 - cols_)              # [B, S]
+    nxt = xp.roll(cpos, -1, axis=1)
+    r2, c2 = nxt // cols, nxt % cols
+    h_next = xp.abs(cols_ - c2)
+    v_next = xp.abs(rows_ - r2)
+
+    alpha = noc.congestion_alpha
+    rate_d = 1.0 / min(pkg.dram_bw, noc.h_bw) - 1.0 / pkg.dram_bw
+    inv_h, inv_v = 1.0 / noc.h_bw, 1.0 / noc.v_bw
+    inv_nop = 1.0 / pkg.nop_bw
+
+    def dram_corr(sz, hops, wait):
+        return xp.where(sz > 0,
+                        sz * xp.where(hops > 0, rate_d, 0.0) + alpha * wait,
+                        0.0)
+
+    def nop_corr(sz, h_hops, v_hops, wait):
+        inv_route = xp.maximum(xp.where(h_hops > 0, inv_h, 0.0),
+                               xp.where(v_hops > 0, inv_v, 0.0))
+        return xp.where((sz > 0) & (h_hops + v_hops > 0),
+                        sz * (inv_route - inv_nop) + alpha * wait, 0.0)
+
+    wd = wait_dram[cpos]                                         # [B, S]
+    ip_corr = dram_corr(seg_w, hops_dram, wd)
+    fr, fc = cpos[:, 0] // cols, cpos[:, 0] % cols
+    act = act_in + 0 * fc                        # broadcast scalar -> [B]
+    if prev_end is None:
+        f_hops_dram = xp.minimum(fc, cols - 1 - fc)
+        add = dram_corr(act, f_hops_dram, wait_dram[cpos[:, 0]])
+    else:
+        pr, pc = prev_end // cols, prev_end % cols
+        add = nop_corr(act, xp.abs(fc - pc), xp.abs(fr - pr),
+                       wait_pair[prev_end, cpos[:, 0]])
+    first = xp.arange(S) == 0
+    ip_corr = ip_corr + xp.where(first[None, :], add[:, None], 0.0)
+
+    is_last = xp.arange(S)[None, :] == (n_segs - 1)[:, None]
+    op_corr = xp.where(is_last,
+                       dram_corr(seg_last_out, hops_dram, wd),
+                       nop_corr(seg_last_out, h_next, v_next,
+                                wait_pair[cpos, nxt]))
+    return ip_corr, op_corr
+
+
 def comm_terms(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
                n_active: int, prev_end: Optional[int] = None,
                s_max: Optional[int] = None
@@ -396,9 +706,12 @@ def comm_terms(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
     * ``op``: boundary activations forward to the next segment's chiplet
       (NoP) or, for the last segment, write back to DRAM.
 
-    Thin host-side wrapper over ``comm_from_parts`` (the shared geometry) +
-    ``segment_reductions``.  ``s_max`` shrinks the segment axis (shape
-    bucketing); values on segments ``>= n_segs`` are zero either way.
+    Host-side float64 entry point to ``comm_from_parts`` — the *same*
+    xp-generic geometry also runs in float32 inside the jitted
+    ``kernels.scar_eval.evaluate``, so this is one of two callers of a
+    shared model, not a wrapper the jit path bypasses.  ``s_max`` shrinks
+    the segment axis (shape bucketing); values on segments ``>= n_segs``
+    are zero either way.
     """
     S = int(s_max) if s_max is not None else cand.chiplets.shape[1]
     sl = slice(cand.start, cand.end)
@@ -411,17 +724,56 @@ def comm_terms(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
                            float(db.in_bytes[cand.start]), prev)
 
 
+def congestion_terms(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
+                     prev_end: Optional[int] = None,
+                     link_occ: Optional[np.ndarray] = None,
+                     s_max: Optional[int] = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Float64 congestion corrections for one candidate batch.
+
+    ``link_occ`` is the background byte occupancy ``[n_links]`` of all
+    *other* co-scheduled traffic (None means an uncontended interposer).
+    Returns ``(ip_corr, op_corr)``, each ``[B, S]`` seconds, to be added
+    to the corresponding ``comm_terms`` latencies.  Host-side entry
+    point to ``route_wait_tables`` + ``congestion_correction``, sharing
+    them with the jit path exactly like ``comm_terms`` shares
+    ``comm_from_parts``.
+    """
+    S = int(s_max) if s_max is not None else cand.chiplets.shape[1]
+    sl = slice(cand.start, cand.end)
+    cpos = np.maximum(cand.chiplets[:, :S], 0)
+    seg_w, seg_last_out = segment_reductions(
+        cand.seg_id, cand.n_segs, db.w_bytes[sl], db.out_bytes[sl], s_max=S)
+    if link_occ is None:
+        link_occ = np.zeros(n_interposer_links(mcm.rows, mcm.cols))
+    wait_pair, wait_dram = route_wait_tables(
+        np, np.asarray(link_occ, dtype=np.float64) / link_bandwidths(mcm),
+        mcm.rows, mcm.cols)
+    prev = int(prev_end) if prev_end is not None else None
+    return congestion_correction(np, mcm.pkg, mcm.noc, mcm.cols, cpos, seg_w,
+                                 seg_last_out, cand.n_segs,
+                                 float(db.in_bytes[cand.start]), prev,
+                                 wait_pair, wait_dram)
+
+
 def eval_model_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
                           n_active: int,
                           prev_end: Optional[int] = None,
-                          pipelined: bool = True) -> tuple[np.ndarray, np.ndarray]:
-    """Vectorised (lat[B], energy[B]) for one model's candidate plans.
+                          pipelined: bool = True,
+                          comm_model: str = "analytic",
+                          link_occ: Optional[np.ndarray] = None
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorised ``(lat[B], energy[B])`` for one model's candidate plans.
 
-    Exactly matches ``evaluate_window`` on singleton batches (tested).  This
-    float64 numpy path is the *parity oracle* for the backend-selectable
-    evaluator (``repro.core.evaluator``); the production large-batch path is
-    the ``kernels.scar_eval`` jax/Pallas bridge, which shares the comm
-    geometry through ``comm_terms``.
+    Latencies are seconds, energies joules.  Exactly matches
+    ``evaluate_window`` on singleton batches (tested) — under
+    ``comm_model="congestion"`` pass the co-tenants' byte occupancy as
+    ``link_occ`` (``[n_links]``, e.g. from ``plan_link_bytes``) to
+    reproduce the window oracle bitwise.  This float64 numpy path is the
+    *parity oracle* for the backend-selectable evaluator
+    (``repro.core.evaluator``); the production large-batch path is the
+    ``kernels.scar_eval`` jax/Pallas bridge, which shares the comm
+    geometry through ``comm_from_parts`` / ``congestion_correction``.
     """
     B, Lw = cand.seg_id.shape
     S = cand.chiplets.shape[1]
@@ -446,6 +798,13 @@ def eval_model_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
 
     ip_lat, ip_e, op_lat, op_e = comm_terms(db, mcm, cand, n_active,
                                             prev_end=prev_end)
+    if comm_model == "congestion":
+        ip_corr, op_corr = congestion_terms(db, mcm, cand, prev_end=prev_end,
+                                            link_occ=link_occ)
+        ip_lat = ip_lat + ip_corr
+        op_lat = op_lat + op_corr
+    elif comm_model != "analytic":
+        raise ValueError(f"unknown comm_model {comm_model!r}")
 
     seg_lat = np.where(valid_seg, seg_comp_lat + ip_lat + op_lat, 0.0)
     energy = np.where(valid_seg, seg_comp_e + ip_e + op_e, 0.0).sum(axis=1)

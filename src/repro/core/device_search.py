@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.kernels.scar_search import conflict_counts_traceable
 
+from .cost import route_wait_tables
 from .engine import metric_score
 from .evaluator import traceable_scores
 from .quantize import SCORE_SIG, quantize_scores_jax
@@ -62,9 +63,9 @@ _KEY_INVALID = np.uint32(0xFFFFFFFF)
 
 
 def bucket_size(n: int, base: int = 256) -> int:
-    """Round ``n`` up to a shape bucket: powers of two up to 8192, then
-    multiples of 8192.
+    """Round ``n`` up to a shape bucket.
 
+    Buckets are powers of two up to 8192, then multiples of 8192.
     The full-pool axis of the device programs is padded to this, so a whole
     schedule's windows land on a few discrete shapes (= a few jit entries)
     instead of recompiling per candidate count, without power-of-two
@@ -233,9 +234,11 @@ def beam_scan(pool, full, *, beam: int, metric: str, max_exp: int,
 def protocol_program(masks, lat, energy, sizes, keeps, *, beam: int,
                      metric: str, max_exp: int, t0: int, use_kernel: bool,
                      interpret: bool):
-    """Device combination over host-scored, host-ordered tables (the
-    bit-parity form).  The pool is simply the first ``t0`` candidates of
-    each model — already a prefix of the host order."""
+    """Device combination over host-scored tables (the bit-parity form).
+
+    The pool is simply the first ``t0`` candidates of each model —
+    already a prefix of the host order.
+    """
     m_models, n_pad = lat.shape
     arange = jnp.arange(t0, dtype=jnp.int32)
     pool = (masks[:, :t0], lat[:, :t0], energy[:, :t0],
@@ -246,6 +249,74 @@ def protocol_program(masks, lat, energy, sizes, keeps, *, beam: int,
     return beam_scan(pool, full, beam=beam, metric=metric, max_exp=max_exp,
                      t0_width=t0, use_kernel=use_kernel, interpret=interpret,
                      presorted=True)
+
+
+def _cand_link_bytes(args, best, *, rows: int, cols: int, has_prev: bool):
+    """Interposer link bytes ``[n_links]`` of ONE packed candidate, in-jit.
+
+    ``args`` is a ``scar_eval.pack_candidates`` tuple, ``best`` a traced
+    candidate row index.  Reproduces ``cost.plan_link_bytes`` — the same
+    transfer set ``evaluate_window`` prices (per-segment weight streams on
+    DRAM routes, first-segment activations, inter-segment XY forwards,
+    last-segment writeback) — as scatter-adds on per-row/per-column
+    difference arrays: a route's horizontal leg adds ``+z`` at its low
+    column and ``-z`` past its high column on the source row (vertical leg
+    likewise on the destination column), so a prefix ``cumsum`` recovers
+    every link's byte count without materialising routes.  Zero-hop legs
+    cancel out by construction.
+    """
+    (_, _, w_bytes, out_bytes, _, chips, _, last, n_segs,
+     act_in, prev_idx, _, _) = args
+    S = chips.shape[1]
+    lw = w_bytes.shape[0]
+    cpos = jnp.maximum(chips[best], 0)                           # [S]
+    ns = n_segs[best]
+    exists = jnp.arange(S) < ns
+    lastc = jnp.clip(last[best], 0, lw - 1)
+    prevc = jnp.concatenate(
+        [jnp.zeros((1,), lastc.dtype), lastc[:-1] + 1])
+    cw = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(w_bytes)])
+    seg_w = jnp.where(exists, cw[lastc + 1] - cw[prevc], 0.0)
+    seg_out = jnp.where(exists, out_bytes[lastc], 0.0)
+    is_last = jnp.arange(S) == ns - 1
+
+    r, c = cpos // cols, cpos % cols
+    edge = jnp.where(c <= cols - 1 - c, 0, cols - 1)
+    nxtp = jnp.roll(cpos, -1)
+    r2, c2 = nxtp // cols, nxtp % cols
+
+    # bytes on each segment's DRAM route: weights, + cold input activations
+    # on the first segment, + the window-output writeback on the last
+    dram_b = seg_w + jnp.where(is_last, seg_out, 0.0)
+    if not has_prev:
+        dram_b = dram_b + jnp.where(jnp.arange(S) == 0, act_in, 0.0)
+    fwd_b = jnp.where(exists & ~is_last, seg_out, 0.0)
+
+    src_r = jnp.concatenate([r, r])
+    src_c = jnp.concatenate([c, c])
+    dst_r = jnp.concatenate([r, r2])
+    dst_c = jnp.concatenate([edge, c2])
+    z = jnp.concatenate([dram_b, fwd_b])
+    if has_prev:
+        # anchor -> first chiplet activation route (nothing when resident)
+        pr, pc = prev_idx // cols, prev_idx % cols
+        a0 = jnp.where(prev_idx == cpos[0], 0.0, act_in)
+        src_r = jnp.concatenate([src_r, pr[None]])
+        src_c = jnp.concatenate([src_c, pc[None]])
+        dst_r = jnp.concatenate([dst_r, r[:1]])
+        dst_c = jnp.concatenate([dst_c, c[:1]])
+        z = jnp.concatenate([z, a0[None]])
+
+    lo_c = jnp.minimum(src_c, dst_c)
+    hi_c = jnp.maximum(src_c, dst_c)
+    lo_r = jnp.minimum(src_r, dst_r)
+    hi_r = jnp.maximum(src_r, dst_r)
+    h = jnp.zeros((rows, cols), jnp.float32)
+    h = h.at[src_r, lo_c].add(z).at[src_r, hi_c].add(-z)
+    v = jnp.zeros((rows, cols), jnp.float32)
+    v = v.at[lo_r, dst_c].add(z).at[hi_r, dst_c].add(-z)
+    return jnp.concatenate([jnp.cumsum(h, axis=1)[:, :cols - 1].ravel(),
+                            jnp.cumsum(v, axis=0)[:rows - 1].ravel()])
 
 
 def _order_key(qs, tiers, valid):
@@ -263,11 +334,13 @@ def _order_key(qs, tiers, valid):
 @partial(jax.jit, static_argnames=("modes", "pkg", "mcm_cols", "n_active",
                                    "n_pad", "beam", "keep", "metric",
                                    "max_exp", "t0", "t1", "use_kernel",
-                                   "interpret"))
+                                   "interpret", "mcm_rows", "congestion",
+                                   "noc"))
 def fused_program(inputs, *, modes, pkg, mcm_cols: int, n_active: int,
                   n_pad: int, beam: int, keep: int, metric: str,
                   max_exp: int, t0: int, t1: int, use_kernel: bool,
-                  interpret: bool):
+                  interpret: bool, mcm_rows: int = 0,
+                  congestion: bool = False, noc=None):
     """The whole window search as one device program (see module docstring).
 
     ``inputs``: per model ``(eval_args, words [B, 2W] uint32,
@@ -277,12 +350,33 @@ def fused_program(inputs, *, modes, pkg, mcm_cols: int, n_active: int,
     ``(model_order,) + beam_scan ys`` — the ys candidate indices address
     the *assembled* candidate batches directly, so the host rebuilds the
     window plan from one fetch.
+
+    ``congestion=True`` replays ``scheduler.build_window_sets``'s placement
+    co-search inside the jit: models are scored in input (sorted model-idx)
+    order against a running background byte occupancy ``bg [n_links]``,
+    each model's bottleneck-wait tables are rebuilt from ``bg`` with
+    ``cost.route_wait_tables`` and substituted into its eval args' two
+    trailing slots, and after scoring the greedy-best candidate's routed
+    bytes (``_cand_link_bytes``, the in-jit ``cost.plan_link_bytes``) are
+    accumulated into ``bg`` for the models that follow.  ``mcm_rows`` and
+    the static ``noc`` link config are only consulted in this mode.
     """
+    if congestion:
+        n_h = mcm_rows * (mcm_cols - 1)
+        inv_bw = np.zeros(n_h + (mcm_rows - 1) * mcm_cols, np.float32)
+        inv_bw[:n_h] = 1.0 / noc.h_bw
+        inv_bw[n_h:] = 1.0 / noc.v_bw
+        bg = jnp.zeros(inv_bw.shape[0], jnp.float32)
     pools, fulls, mlats = [], [], []
     for (args, words, tiers, n_real), (pipelined, has_prev) in zip(inputs,
                                                                    modes):
         statics = dict(pkg=pkg, mcm_cols=mcm_cols, n_active=n_active,
-                       pipelined=pipelined, has_prev=has_prev)
+                       pipelined=pipelined, has_prev=has_prev,
+                       congestion=congestion,
+                       noc=noc if congestion else None)
+        if congestion:
+            wp, wd = route_wait_tables(jnp, bg * inv_bw, mcm_rows, mcm_cols)
+            args = args[:11] + (wp, wd)
         lat, energy = traceable_scores(args, statics, use_kernel=use_kernel,
                                        interpret=interpret)
         b_pad = lat.shape[0]
@@ -292,6 +386,11 @@ def fused_program(inputs, *, modes, pkg, mcm_cols: int, n_active: int,
         qs = quantize_scores_jax(metric_score(lat, energy, metric),
                                  sig=SCORE_SIG)
         key = _order_key(qs, tiers, valid)
+        if congestion:
+            # greedy best = host lexsort rank 0 (argmin of the packed key
+            # breaks exact ties by enumeration order, like the stable sort)
+            bg = bg + _cand_link_bytes(args, jnp.argmin(key), rows=mcm_rows,
+                                       cols=mcm_cols, has_prev=has_prev)
 
         def tier_top(tier_id, width):
             neg = jnp.where(valid & (tiers == tier_id), -qs, -jnp.inf)

@@ -234,9 +234,11 @@ def _raise_no_disjoint(model_idx: int, n_cands: int):
 
 
 def _backtrack(parents: np.ndarray, cands: np.ndarray) -> np.ndarray:
-    """Per-stage picks of beam row 0 from the device scan's (parent, cand)
-    link tables ([M, beam] each): walk the links backwards from the best
-    final beam item."""
+    """Per-stage picks of beam row 0 from the device scan's link tables.
+
+    Walks the ([M, beam] each) (parent, cand) links backwards from the
+    best final beam item.
+    """
     m = parents.shape[0]
     picks = np.zeros(m, dtype=np.int64)
     row = 0
@@ -248,8 +250,10 @@ def _backtrack(parents: np.ndarray, cands: np.ndarray) -> np.ndarray:
 
 def _explored(tlats: np.ndarray, tes: np.ndarray,
               counts: np.ndarray) -> list[tuple[float, float]]:
-    """Per-stage (lat, energy) cloud, first ``counts[m]`` beam rows each —
-    the rows past a stage's live count are top-k filler."""
+    """Per-stage (lat, energy) cloud, first ``counts[m]`` beam rows each.
+
+    The rows past a stage's live count are top-k filler.
+    """
     explored: list[tuple[float, float]] = []
     for m in range(tlats.shape[0]):
         n = int(counts[m])
@@ -293,6 +297,7 @@ class BeamEngine:
 
     beam: int = 64
     max_expansions: int = 20000
+    comm_model: str = "analytic"
 
     def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
                 prev_end: dict[int, int],
@@ -352,14 +357,16 @@ class BeamEngine:
             explored.extend(zip(b_lat.tolist(), b_energy.tolist()))
 
         plan = _plans_from_picks(sets, b_picks[0])
-        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True,
+                                 comm_model=self.comm_model)
         return WindowSearchResult(plan=plan, result=result, explored=explored)
 
 
 def reference_combine(db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
                       prev_end: dict[int, int], metric: str = "edp",
                       beam: int = 64,
-                      max_expansions: int = 20000) -> WindowSearchResult:
+                      max_expansions: int = 20000,
+                      comm_model: str = "analytic") -> WindowSearchResult:
     """Reference Python beam search (the seed implementation).
 
     Kept as the oracle for ``BeamEngine`` parity tests and as the baseline
@@ -395,7 +402,8 @@ def reference_combine(db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
         items = nxt[:beam]
 
     plan = _plans_from_picks(sets, items[0][3])
-    result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+    result = evaluate_window(db, mcm, plan, prev_end, validate=True,
+                             comm_model=comm_model)
     return WindowSearchResult(plan=plan, result=result, explored=explored)
 
 
@@ -440,6 +448,7 @@ class DeviceBeamEngine:
     max_expansions: int = 20000
     use_kernel: Optional[bool] = None
     interpret: bool = False
+    comm_model: str = "analytic"
 
     def _kernels(self) -> bool:
         if self.use_kernel is not None:
@@ -487,7 +496,8 @@ class DeviceBeamEngine:
             cs = sets[int(failed[0])]
             _raise_no_disjoint(cs.model_idx, cs.n_cands)
         plan = _plans_from_picks(sets, _backtrack(parents, cands))
-        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True,
+                                 comm_model=self.comm_model)
         return WindowSearchResult(plan=plan, result=result,
                                   explored=_explored(tlats, tes, counts))
 
@@ -520,9 +530,12 @@ class DeviceBeamEngine:
                 mcm, mi, (s, e), segs, prev_end.get(mi),
                 path_cap=cfg.path_cap, frontier_cap=cfg.frontier_cap,
                 need_seg_id=use_kernel)
+            # congestion: ship full-shape zero wait tables; fused_program
+            # substitutes the traced, bg-derived tables in their place
             args, statics, n_real = pack_candidates(
                 db, mcm, cand, n_active, prev_end=prev_end.get(mi),
-                pad_b=EVAL_BLOCK_B, dense=use_kernel)
+                pad_b=EVAL_BLOCK_B, dense=use_kernel,
+                comm_model=self.comm_model)
             w32 = ds.split_words_u32(words)
             t32 = tiers.astype(np.int32)
             pad = args[5].shape[0] - n_real          # chips are [B_pad, S]
@@ -537,12 +550,15 @@ class DeviceBeamEngine:
         n_pad = ds.bucket_size(max(i[1].shape[0] for i in inputs))
         keep = int(cfg.keep_per_model)
         t0, t1 = ds.pool_widths(keep)
+        congestion = self.comm_model == "congestion"
         out = ds.fused_program(
             tuple(inputs), modes=tuple(modes), pkg=mcm.pkg,
             mcm_cols=mcm.cols, n_active=n_active, n_pad=n_pad,
             beam=self.beam, keep=keep, metric=metric,
             max_exp=self.max_expansions, t0=t0, t1=t1,
-            use_kernel=self._kernels(), interpret=self.interpret)
+            use_kernel=self._kernels(), interpret=self.interpret,
+            mcm_rows=mcm.rows, congestion=congestion,
+            noc=mcm.noc if congestion else None)
         # the single counted host transfer of the whole window search
         (morder, parents, cands, tlats, tes,
          counts, fails) = launch_platform.device_fetch(out)
@@ -564,7 +580,8 @@ class DeviceBeamEngine:
                 pipelined=True))
         plan = WindowPlan(plans=tuple(sorted(plans,
                                              key=lambda p: p.model_idx)))
-        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True,
+                                 comm_model=self.comm_model)
         return WindowSearchResult(plan=plan, result=result,
                                   explored=_explored(tlats, tes, counts))
 
@@ -586,6 +603,7 @@ class EvolutionaryEngine:
     generations: int = 4
     mutation_rate: float = 0.3
     seed: int = 0
+    comm_model: str = "analytic"
 
     def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
                 prev_end: dict[int, int],
@@ -626,12 +644,14 @@ class EvolutionaryEngine:
         _, _, _, overlap = batched_fitness(ct, best[None, :], metric)
         if int(overlap[0]) > 0:
             # repair residual overlap greedily via the beam combiner
-            res = BeamEngine().combine(db, mcm, sets, prev_end, metric=metric)
+            res = BeamEngine(comm_model=self.comm_model).combine(
+                db, mcm, sets, prev_end, metric=metric)
             res.explored.extend(explored)
             return res
 
         plan = _plans_from_picks(sets, best)
-        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True,
+                                 comm_model=self.comm_model)
         return WindowSearchResult(plan=plan, result=result, explored=explored)
 
 
@@ -654,6 +674,7 @@ class AnnealEngine:
     chains: int = 24
     temperature: float = 0.05
     seed: int = 0
+    comm_model: str = "analytic"
 
     def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
                 prev_end: dict[int, int],
@@ -691,11 +712,13 @@ class AnnealEngine:
         best = best_picks[int(np.argmin(best_fit))]
         _, _, _, overlap = batched_fitness(ct, best[None, :], metric)
         if int(overlap[0]) > 0:
-            res = BeamEngine().combine(db, mcm, sets, prev_end, metric=metric)
+            res = BeamEngine(comm_model=self.comm_model).combine(
+                db, mcm, sets, prev_end, metric=metric)
             res.explored.extend(explored)
             return res
         plan = _plans_from_picks(sets, best)
-        result = evaluate_window(db, mcm, plan, prev_end, validate=True)
+        result = evaluate_window(db, mcm, plan, prev_end, validate=True,
+                                 comm_model=self.comm_model)
         return WindowSearchResult(plan=plan, result=result, explored=explored)
 
 
@@ -711,21 +734,22 @@ def get_engine(cfg, seed: int = 0) -> SearchEngine:
     the stochastic engines, whose trajectories are algorithm-specific.
     """
     algo = cfg.algo
+    comm_model = getattr(cfg, "comm_model", "analytic")
     env = os.environ.get("SCAR_SEARCH_BACKEND", "").strip()
     if env and algo in ("brute", "beam", "beam_jax"):
         algo = env
     if algo in ("brute", "beam"):
-        return BeamEngine(beam=cfg.beam)
+        return BeamEngine(beam=cfg.beam, comm_model=comm_model)
     if algo == "beam_jax":
-        return DeviceBeamEngine(beam=cfg.beam)
+        return DeviceBeamEngine(beam=cfg.beam, comm_model=comm_model)
     if algo == "evolutionary":
         return EvolutionaryEngine(population=cfg.ea_population,
                                   generations=cfg.ea_generations,
-                                  seed=seed)
+                                  seed=seed, comm_model=comm_model)
     if algo == "anneal":
         return AnnealEngine(iters=cfg.anneal_iters,
                             chains=cfg.anneal_chains,
                             temperature=cfg.anneal_temperature,
-                            seed=seed)
+                            seed=seed, comm_model=comm_model)
     raise KeyError(f"unknown search algo {algo!r}; "
                    "have brute|beam|beam_jax|evolutionary|anneal")

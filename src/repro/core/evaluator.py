@@ -57,8 +57,11 @@ _JAX_PLATFORM: Optional[str] = None
 
 
 def _jax_platform() -> str:
-    """jax.default_backend(), or "unavailable" when jax cannot initialise
-    (auto then stays on numpy instead of failing at dispatch time)."""
+    """Resolve ``jax.default_backend()``, or "unavailable" without jax.
+
+    The "auto" backend then stays on numpy instead of failing at
+    dispatch time.
+    """
     global _JAX_PLATFORM
     if _JAX_PLATFORM is None:
         try:
@@ -95,20 +98,30 @@ def eval_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
                     n_active: int, prev_end: Optional[int] = None,
                     pipelined: bool = True,
                     backend: Optional[str] = None,
-                    interpret: bool = False
+                    interpret: bool = False,
+                    comm_model: str = "analytic",
+                    link_occ: Optional[np.ndarray] = None
                     ) -> tuple[np.ndarray, np.ndarray]:
-    """(lat[B], energy[B]) float64 via the selected backend.
+    """``(lat[B], energy[B])`` float64 via the selected backend.
 
-    The jax backends compute in float32 and are parity-tested against the
-    numpy oracle within float32 tolerance (see ``tests/test_evaluator.py``);
-    callers that need deterministic cross-backend ordering quantise scores
-    before sorting (``sched.build_candidates``).
+    Latencies are seconds, energies joules, for the ``B`` candidate plans
+    in ``cand``.  The jax backends compute in float32 and are
+    parity-tested against the numpy oracle within float32 tolerance (see
+    ``tests/test_evaluator.py``); callers that need deterministic
+    cross-backend ordering quantise scores before sorting
+    (``sched.build_candidates``).
+
+    ``comm_model="congestion"`` routes transfers over interposer links and
+    prices contention with the background byte occupancy ``link_occ``
+    (``[n_links]``, None = uncontended); every backend applies the same
+    ``cost.congestion_correction`` terms.
     """
     B, Lw = cand.seg_id.shape
     resolved = resolve_backend(backend, work=B * Lw)
     if resolved == "numpy":
         return eval_model_candidates(db, mcm, cand, n_active,
-                                     prev_end=prev_end, pipelined=pipelined)
+                                     prev_end=prev_end, pipelined=pipelined,
+                                     comm_model=comm_model, link_occ=link_occ)
     if resolved == "pallas" and not interpret and _jax_platform() != "tpu":
         # fail fast with an actionable message instead of a lowering error
         # deep inside schedule(); tests run the kernel anywhere by passing
@@ -123,7 +136,9 @@ def eval_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
                                             prev_end=prev_end,
                                             pad_b=EVAL_BLOCK_B,
                                             pipelined=pipelined,
-                                            dense=(resolved == "pallas"))
+                                            dense=(resolved == "pallas"),
+                                            comm_model=comm_model,
+                                            link_occ=link_occ)
     # the counted host-transfer point: one device->host sync per batch
     out = platform.device_fetch(
         evaluate(*args, **statics, block_b=EVAL_BLOCK_B, interpret=interpret,

@@ -74,7 +74,8 @@ class TraceJob:
     re-scheduler or the cold from-scratch oracle; ``policy`` the
     epoch-boundary / preemption / MCM-reconfiguration behaviour
     (``repro.online.OnlinePolicy``, itself a frozen picklable dataclass;
-    ``None`` is the class-blind fluid default)."""
+    ``None`` is the class-blind fluid default).
+    """
 
     trace: str                           # scenarios.TRACE_PRESETS name
     pattern: str
@@ -125,8 +126,11 @@ def _run_job(job):
 
 
 def _db_affinity(job) -> tuple:
-    """Grouping key: jobs sharing it want the same per-worker CostDB/path
-    caches (same scenario-or-trace, package geometry and PE budget)."""
+    """Grouping key of jobs that want the same per-worker warm caches.
+
+    Jobs sharing the key (same scenario-or-trace, package geometry and PE
+    budget) reuse one worker's CostDB and path caches.
+    """
     src = job.trace if isinstance(job, TraceJob) else job.scenario
     return (src, job.pattern, job.rows, job.cols, job.n_pe)
 
@@ -155,9 +159,9 @@ def default_processes() -> int:
 
 def run_portfolio(jobs: list,
                   processes: Optional[int] = None) -> list:
-    """Run every job (``SweepJob`` or ``TraceJob``); results align with the
-    input order.
+    """Run every job; results align with the input order.
 
+    Jobs are ``SweepJob`` or ``TraceJob`` instances, freely mixed.
     ``processes``: None -> ``default_processes()``; <=1 -> inline in this
     process (no pool, easiest to debug); otherwise a spawn-based pool, which
     sidesteps fork-safety issues with an already-initialised JAX runtime in

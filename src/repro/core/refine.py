@@ -30,7 +30,8 @@ import numpy as np
 
 from .chiplet import MCM
 from .cost import (BatchedModelCandidates, ModelWindowPlan, WindowPlan,
-                   WindowResult, evaluate_schedule, evaluate_window)
+                   WindowResult, evaluate_schedule, evaluate_window,
+                   link_bandwidths, n_interposer_links, plan_link_bytes)
 from .engine import metric_score
 from .evaluator import eval_candidates
 from .quantize import SCORE_SIG, quantize_scores
@@ -71,13 +72,15 @@ class _IncrementalEvaluator:
     """
 
     def __init__(self, db: CostDB, mcm: MCM,
-                 windows: list[list[ModelWindowPlan]]):
+                 windows: list[list[ModelWindowPlan]],
+                 comm_model: str = "analytic"):
         self.db, self.mcm = db, mcm
+        self.comm_model = comm_model
         self.results: list[WindowResult] = []
         prev_end: dict[int, int] = {}
         for ps in windows:
             res = evaluate_window(db, mcm, _to_plans([ps])[0], prev_end,
-                                  validate=True)
+                                  validate=True, comm_model=comm_model)
             self.results.append(res)
             prev_end = dict(prev_end)
             prev_end.update(res.end_chiplet)
@@ -106,7 +109,7 @@ class _IncrementalEvaluator:
             plan = _to_plans([mv.windows[w]])[0]
             results[w] = evaluate_window(
                 self.db, self.mcm, plan, self.prev_end_at(w, results),
-                validate=True)
+                validate=True, comm_model=self.comm_model)
         lat = float(sum(r.latency for r in results))
         energy = float(sum(r.energy for r in results))
         return results, lat, energy
@@ -136,6 +139,58 @@ def _try_boundary(rng, windows, ctx) -> _Move | None:
     return _Move(_clone_windows_replace(windows, w, i, new), (int(w),))
 
 
+def _screen_relocate(rng, windows, ctx, w, i, si, free) -> _Move:
+    """Batched relocate screening: score every free target in one pass.
+
+    Under ``comm_model="congestion"`` the screen scores each target against
+    the *other* window plans' routed byte occupancy, so free chiplets whose
+    routes dodge the contended links rank first — the refinement half of
+    the placement co-search.
+    """
+    db, mcm, ev, metric, backend, comm_model = ctx
+    ps = windows[w]
+    p = ps[i]
+    n_free = len(free)
+    lw = p.end - p.start
+    seg_id_row = np.zeros(lw, dtype=np.int64)
+    prev = p.start
+    for s_idx, e_abs in enumerate(p.seg_ends):
+        seg_id_row[prev - p.start:e_abs - p.start] = s_idx
+        prev = e_abs
+    chips = np.tile(np.asarray(p.chiplets, dtype=np.int64), (n_free, 1))
+    chips[:, si] = free
+    cand = BatchedModelCandidates(
+        model_idx=p.model_idx, start=p.start, end=p.end,
+        seg_id=np.tile(seg_id_row, (n_free, 1)), chiplets=chips,
+        n_segs=np.full(n_free, p.n_segments, dtype=np.int64),
+        seg_ends=np.tile(np.asarray(p.seg_ends, dtype=np.int64),
+                         (n_free, 1)))
+    pe = ev.prev_end_at(w)
+    link_occ = None
+    if comm_model == "congestion":
+        link_occ = np.zeros(n_interposer_links(mcm.rows, mcm.cols))
+        for j, q in enumerate(ps):
+            if j != i:
+                link_occ += plan_link_bytes(db, mcm, q, pe)
+    lat, energy = eval_candidates(
+        db, mcm, cand, n_active=len(ps),
+        prev_end=pe.get(p.model_idx),
+        pipelined=p.pipelined, backend=backend,
+        comm_model=comm_model, link_occ=link_occ)
+    # sample among the screened top-k: pure argmin starves the annealer of
+    # proposal diversity and gets stuck re-proposing one target.  Scores are
+    # quantised to the shared candidate-ordering grain so the screen picks
+    # the same top-k set on every evaluator backend (f32 noise absorbed).
+    score = quantize_scores(metric_score(lat, energy, metric), sig=SCORE_SIG)
+    k = min(4, n_free)
+    top = np.argpartition(score, k - 1)[:k]
+    pick = int(top[int(rng.integers(k))])
+    new_chips = list(p.chiplets)
+    new_chips[si] = free[pick]
+    new = dataclasses.replace(p, chiplets=tuple(new_chips))
+    return _Move(_clone_windows_replace(windows, w, i, new), (w,))
+
+
 def _try_relocate(rng, windows, ctx) -> _Move | None:
     """Move one segment to the best free chiplet (batched screening).
 
@@ -144,7 +199,7 @@ def _try_relocate(rng, windows, ctx) -> _Move | None:
     becomes the proposal, which the annealer still accepts or rejects on the
     exact schedule-level metric.
     """
-    db, mcm, ev, metric, backend = ctx
+    db, mcm, ev, metric, backend, comm_model = ctx
     w = int(rng.integers(len(windows)))
     ps = windows[w]
     if not ps:
@@ -163,38 +218,45 @@ def _try_relocate(rng, windows, ctx) -> _Move | None:
         new_chips[si] = int(rng.choice(free))
         new = dataclasses.replace(p, chiplets=tuple(new_chips))
         return _Move(_clone_windows_replace(windows, w, i, new), (w,))
+    return _screen_relocate(rng, windows, ctx, w, i, si, free)
 
-    n_free = len(free)
-    lw = p.end - p.start
-    seg_id_row = np.zeros(lw, dtype=np.int64)
-    prev = p.start
-    for s_idx, e_abs in enumerate(p.seg_ends):
-        seg_id_row[prev - p.start:e_abs - p.start] = s_idx
-        prev = e_abs
-    chips = np.tile(np.asarray(p.chiplets, dtype=np.int64), (n_free, 1))
-    chips[:, si] = free
-    cand = BatchedModelCandidates(
-        model_idx=p.model_idx, start=p.start, end=p.end,
-        seg_id=np.tile(seg_id_row, (n_free, 1)), chiplets=chips,
-        n_segs=np.full(n_free, p.n_segments, dtype=np.int64),
-        seg_ends=np.tile(np.asarray(p.seg_ends, dtype=np.int64),
-                         (n_free, 1)))
-    lat, energy = eval_candidates(
-        db, mcm, cand, n_active=len(ps),
-        prev_end=ev.prev_end_at(w).get(p.model_idx),
-        pipelined=p.pipelined, backend=backend)
-    # sample among the screened top-k: pure argmin starves the annealer of
-    # proposal diversity and gets stuck re-proposing one target.  Scores are
-    # quantised to the shared candidate-ordering grain so the screen picks
-    # the same top-k set on every evaluator backend (f32 noise absorbed).
-    score = quantize_scores(metric_score(lat, energy, metric), sig=SCORE_SIG)
-    k = min(4, n_free)
-    top = np.argpartition(score, k - 1)[:k]
-    pick = int(top[int(rng.integers(k))])
-    new_chips = list(p.chiplets)
-    new_chips[si] = free[pick]
-    new = dataclasses.replace(p, chiplets=tuple(new_chips))
-    return _Move(_clone_windows_replace(windows, w, i, new), (w,))
+
+def _try_decongest(rng, windows, ctx) -> _Move | None:
+    """Congestion-only move: pull traffic off the busiest interposer link.
+
+    Finds the window's bottleneck link (highest background serialization
+    time), takes the plan pushing the most bytes over it, and relocates one
+    of its segments through the congestion-aware batched screen — a
+    directed counterpart to ``_try_relocate``'s random walk.  Only in the
+    move mix when ``refine(comm_model="congestion")``.
+    """
+    db, mcm, ev, metric, backend, comm_model = ctx
+    w = int(rng.integers(len(windows)))
+    ps = windows[w]
+    if len(ps) < 2:
+        return None
+    pe = ev.prev_end_at(w)
+    occs = [plan_link_bytes(db, mcm, q, pe) for q in ps]
+    total = np.sum(occs, axis=0)
+    if total.size == 0:
+        return None
+    hot = int(np.argmax(total / link_bandwidths(mcm)))
+    contrib = np.array([o[hot] for o in occs])
+    if contrib.max() <= 0.0:
+        return None  # no interposer traffic anywhere: nothing to move
+    i = int(np.argmax(contrib))
+    p = ps[i]
+    used = {c for q in ps for c in q.chiplets}
+    free = [c for c in range(mcm.n_chiplets) if c not in used]
+    if not free:
+        return None
+    si = int(rng.integers(p.n_segments))
+    if len(free) <= 4:
+        new_chips = list(p.chiplets)
+        new_chips[si] = int(rng.choice(free))
+        new = dataclasses.replace(p, chiplets=tuple(new_chips))
+        return _Move(_clone_windows_replace(windows, w, i, new), (w,))
+    return _screen_relocate(rng, windows, ctx, w, i, si, free)
 
 
 def _try_rewindow(rng, windows, ctx) -> _Move | None:
@@ -274,24 +336,31 @@ def _clone_windows_replace(windows, w, i, new_plan):
 def refine(sc, mcm: MCM, outcome: ScheduleOutcome, metric: str = "edp",
            iters: int = 600, seed: int = 0,
            temperature: float = 0.02,
-           backend: str = "auto") -> ScheduleOutcome:
+           backend: str = "auto",
+           comm_model: str = "analytic") -> ScheduleOutcome:
     """Anneal-refine a schedule; returns an outcome that is never worse.
 
     ``backend`` selects the relocate-screening evaluator
     (``repro.core.evaluator``); acceptance always uses the exact scalar
-    accounting regardless of backend.
+    accounting regardless of backend.  ``comm_model`` must match the model
+    the schedule was built under: it selects the window evaluation
+    (``cost.evaluate_window``) everywhere in the annealer, makes the
+    relocate screen congestion-aware, and (under ``"congestion"``) adds the
+    directed ``_try_decongest`` move to the mix.
     """
     db = get_cost_db(sc, mcm)
     rng = np.random.default_rng(seed)
     windows = _from_window_plans([w.plan for w in outcome.windows])
     if not windows:
         return outcome
-    ev = _IncrementalEvaluator(db, mcm, windows)
-    ctx = (db, mcm, ev, metric, backend)
+    ev = _IncrementalEvaluator(db, mcm, windows, comm_model=comm_model)
+    ctx = (db, mcm, ev, metric, backend, comm_model)
     cur_m = metric_score(float(sum(r.latency for r in ev.results)),
                          float(sum(r.energy for r in ev.results)), metric)
     best_windows, best_m = windows, cur_m
     moves = [_try_boundary, _try_relocate, _try_rewindow]
+    if comm_model == "congestion":
+        moves = moves + [_try_decongest]
     for it in range(iters):
         mv_fn = moves[int(rng.integers(len(moves)))]
         try:
@@ -312,12 +381,13 @@ def refine(sc, mcm: MCM, outcome: ScheduleOutcome, metric: str = "edp",
             if new_m < best_m:
                 best_windows, best_m = mv.windows, new_m
     final_plans = _to_plans(best_windows)
-    final = evaluate_schedule(db, mcm, final_plans, validate=True)
+    final = evaluate_schedule(db, mcm, final_plans, validate=True,
+                              comm_model=comm_model)
     wrs = []
     from .engine import WindowSearchResult
     prev_end: dict[int, int] = {}
     for wp in final_plans:
-        res = evaluate_window(db, mcm, wp, prev_end)
+        res = evaluate_window(db, mcm, wp, prev_end, comm_model=comm_model)
         wrs.append(WindowSearchResult(plan=wp, result=res, explored=[]))
         prev_end = dict(prev_end)
         prev_end.update(res.end_chiplet)

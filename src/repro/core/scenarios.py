@@ -1,6 +1,7 @@
 """The paper's ten multi-model workload scenarios (Table II)."""
 from __future__ import annotations
 
+from .chiplet import NoCConfig
 from .modelzoo import get_model
 from .workload import Scenario
 
@@ -42,6 +43,28 @@ MESH_PRESETS: dict[str, tuple[int, int]] = {
     "16x16": (16, 16),
 }
 LARGE_MESHES = ("8x8", "16x16")
+
+# Interposer NoC presets for the congestion comm model
+# (``SearchConfig.comm_model="congestion"``).  ``uniform`` matches the
+# analytic model's flat 100 GB/s NoP (so zero co-tenant overlap reproduces
+# the analytic latencies exactly); ``het_rows`` models a silicon interposer
+# with wide row buses and narrower column links (the asymmetric-link regime
+# of MCMComm-style interposer studies); ``narrow`` is a contention-heavy
+# organic-substrate point where routed corrections dominate.
+NOC_PRESETS: dict[str, NoCConfig] = {
+    "uniform": NoCConfig(),
+    "het_rows": NoCConfig(h_bw=100e9, v_bw=50e9, congestion_alpha=0.5),
+    "narrow": NoCConfig(h_bw=40e9, v_bw=25e9, congestion_alpha=0.7),
+}
+
+
+def noc_config(preset: str) -> NoCConfig:
+    """The named interposer NoC preset (``"het_rows"`` -> ``NoCConfig``)."""
+    try:
+        return NOC_PRESETS[preset]
+    except KeyError:
+        raise KeyError(f"unknown NoC preset {preset!r}; "
+                       f"have {sorted(NOC_PRESETS)}") from None
 
 
 def mesh_shape(preset: str) -> tuple[int, int]:
@@ -123,9 +146,11 @@ def get_scenario(name: str) -> Scenario:
 
 
 def scenario_spec(name: str) -> list[tuple[str, int]]:
-    """Table II row as (model-zoo key, batch) pairs — the zoo keys the
-    online layer needs to rebuild models, vs the display names on
-    ``Model.name``."""
+    """Table II row as (model-zoo key, batch) pairs.
+
+    These are the zoo keys the online layer needs to rebuild models, vs
+    the display names on ``Model.name``.
+    """
     for sname, _, spec in _TABLE_II:
         if sname == name:
             return list(spec)

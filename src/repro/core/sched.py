@@ -181,7 +181,10 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
                      keep: int = 64,
                      metric: str = "edp",
                      frontier_cap: Optional[int] = None,
-                     backend: Optional[str] = None) -> ModelCandidateSet:
+                     backend: Optional[str] = None,
+                     comm_model: str = "analytic",
+                     link_occ: Optional[np.ndarray] = None
+                     ) -> ModelCandidateSet:
     """Enumerate (segmentation x path) candidates for one model, keep top-k.
 
     Fully tensorised: path pools come out of ``paths.frontier_paths`` as
@@ -202,6 +205,12 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
     may still swap between backends; such swaps are score-equivalent within
     the documented f32 tolerance (asserted on all ten paper scenarios in
     ``tests/test_evaluator.py``).
+
+    ``comm_model="congestion"`` makes the scoring congestion-aware:
+    ``link_occ`` carries the interposer byte occupancy of the models already
+    placed in this window (``scheduler.build_window_sets`` threads it), so
+    candidates whose routes overlap the established traffic rank lower —
+    this is the placement co-search half of the congestion model.
     """
     start, end = rng_range
     cand, tiers, (words, chips, seg_arr) = assemble_candidates(
@@ -209,7 +218,8 @@ def build_candidates(db: CostDB, mcm: MCM, model_idx: int,
         path_cap=path_cap, frontier_cap=frontier_cap)
     n_segs = cand.n_segs
     lat, energy = eval_candidates(db, mcm, cand, n_active=n_active,
-                                  prev_end=prev_end, backend=backend)
+                                  prev_end=prev_end, backend=backend,
+                                  comm_model=comm_model, link_occ=link_occ)
     if metric == "latency":
         score = lat
     elif metric == "energy":

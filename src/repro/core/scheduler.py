@@ -14,9 +14,11 @@ import collections
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 from .chiplet import MCM, make_mcm
 from .cost import (ModelWindowPlan, ScheduleResult, WindowPlan,
-                   evaluate_schedule)
+                   evaluate_schedule, n_interposer_links, plan_link_bytes)
 from .maestro import CostDB, build_cost_db
 from .engine import WindowSearchResult, get_engine
 from .reconfig import WindowAssignment, greedy_pack, uniform_pack
@@ -64,6 +66,11 @@ class SearchConfig:
     #                                     (16x16 path_cap=1024 territory)
     #                                     through the jax path.  Env override:
     #                                     SCAR_EVAL_BACKEND.
+    comm_model: str = "analytic"        # analytic (paper hop geometry) |
+    #                                     congestion (routed interposer-link
+    #                                     occupancy, MCM.noc bandwidths,
+    #                                     congestion-aware candidate scoring;
+    #                                     see cost.congestion_correction)
 
 
 @dataclasses.dataclass
@@ -88,8 +95,11 @@ _DB_CACHE_MAX = 128
 
 
 def cost_db_key(sc: Scenario, mcm: MCM) -> tuple:
-    """Cache identity of a (scenario, MCM) cost database (content-based, so
-    identical model mixes share an entry regardless of object identity)."""
+    """Cache identity of a (scenario, MCM) cost database.
+
+    Content-based, so identical model mixes share an entry regardless of
+    object identity.
+    """
     return (sc.name,
             tuple((m.name, len(m.layers), m.batch) for m in sc.models),
             tuple((c.dataflow.value, c.n_pe) for c in mcm.classes),
@@ -111,7 +121,8 @@ def clear_caches() -> None:
     """Drop every per-process scheduling cache (CostDB memo + path LRU).
 
     This is what the online re-scheduler's ``cold`` oracle calls before each
-    epoch so its re-plan really is a from-scratch re-schedule."""
+    epoch so its re-plan really is a from-scratch re-schedule.
+    """
     from .paths import path_cache_clear
     _DB_CACHE.clear()
     path_cache_clear()
@@ -122,9 +133,11 @@ def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
                       prev_end: dict[int, int],
                       memo: Optional[dict] = None,
                       memo_base: Optional[tuple] = None) -> list:
-    """PROV + SEG + candidate construction for one window (the stage feeding
-    the search engine).  Shared by ``schedule``, benchmarks, and tests so
-    they all measure the exact production pipeline.
+    """PROV + SEG + candidate construction for one window.
+
+    The stage feeding the search engine — shared by ``schedule``,
+    benchmarks, and tests so they all measure the exact production
+    pipeline.
 
     ``memo`` (with ``memo_base`` identifying the (scenario, MCM, config))
     memoises each model's candidate set on its exact subproblem — window
@@ -132,19 +145,37 @@ def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
     fully determines it, so a hit returns bit-identical candidates.  The
     online re-scheduler threads its epoch-persistent memo through here; a
     recurring model mix then only pays the combination search, not
-    SEG + candidate construction (~90% of a 6x6 re-plan)."""
+    SEG + candidate construction (~90% of a 6x6 re-plan).
+
+    Under ``cfg.comm_model="congestion"`` candidate scoring is placement
+    co-searched: models are processed in index order, each scored against
+    the link-byte occupancy of the earlier models' greedy-best plans
+    (``cost.plan_link_bytes``), so later tenants are priced for routing
+    over the interposer links earlier tenants already load.  The memo key
+    then includes that background, which is itself a pure function of the
+    window subproblem.
+    """
     alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
                       metric=cfg.metric,
                       max_nodes_per_model=cfg.max_nodes_per_model)
     sets = []
     n_active = len(ranges)
+    congestion = cfg.comm_model == "congestion"
+    link_occ = (np.zeros(n_interposer_links(mcm.rows, mcm.cols))
+                if congestion else None)
     for mi, (s, e) in sorted(ranges.items()):
         key = None
         if memo is not None:
             key = ("cands", memo_base, mi, (s, e), int(alloc[mi]), n_active,
                    prev_end.get(mi))
+            if congestion:
+                key = key + (link_occ.tobytes(),)
             if key in memo:
-                sets.append(memo[key])
+                cs = memo[key]
+                sets.append(cs)
+                if congestion:
+                    link_occ = link_occ + plan_link_bytes(
+                        db, mcm, _greedy_best_plan(cs), prev_end)
                 continue
         segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
                                    k=cfg.seg_top_k, cap=cfg.seg_cap,
@@ -153,11 +184,29 @@ def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
             db, mcm, mi, (s, e), segs, n_active=n_active,
             prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
             keep=cfg.keep_per_model, metric=cfg.metric,
-            frontier_cap=cfg.frontier_cap, backend=cfg.eval_backend)
+            frontier_cap=cfg.frontier_cap, backend=cfg.eval_backend,
+            comm_model=cfg.comm_model, link_occ=link_occ)
         if key is not None:
             memo[key] = cs
         sets.append(cs)
+        if congestion:
+            link_occ = link_occ + plan_link_bytes(
+                db, mcm, _greedy_best_plan(cs), prev_end)
     return sets
+
+
+def _greedy_best_plan(cs) -> ModelWindowPlan:
+    """Rank-0 candidate of a sorted ``ModelCandidateSet`` as a window plan.
+
+    The placement co-search uses it as the provisional placement whose
+    interposer traffic later models are scored against (the fused device
+    search picks the same candidate in-jit via the packed order key).
+    """
+    k = int(cs.n_segs[0])
+    return ModelWindowPlan(
+        model_idx=cs.model_idx, start=cs.start, end=cs.end,
+        seg_ends=tuple(int(x) for x in cs.seg_arr[0][:k]),
+        chiplets=tuple(int(c) for c in cs.chips[0][:k]))
 
 
 def schedule(sc: Scenario, mcm: MCM,
@@ -234,7 +283,8 @@ def schedule(sc: Scenario, mcm: MCM,
         anchors.update(wr.result.end_chiplet)
 
     result = evaluate_schedule(db, mcm, [wr.plan for wr in window_results],
-                               validate=True, prev_end=prev_end)
+                               validate=True, prev_end=prev_end,
+                               comm_model=cfg.comm_model)
     outcome = ScheduleOutcome(scenario=sc.name, mcm=mcm.name, config=cfg,
                               result=result, windows=window_results,
                               assignment=wa, explored=explored)
@@ -242,7 +292,8 @@ def schedule(sc: Scenario, mcm: MCM,
         from .refine import refine  # local import: refine uses this module
         outcome = refine(sc, mcm, outcome, metric=cfg.metric,
                          iters=cfg.refine_iters, seed=cfg.seed,
-                         backend=cfg.eval_backend)
+                         backend=cfg.eval_backend,
+                         comm_model=cfg.comm_model)
     return outcome
 
 
@@ -252,8 +303,10 @@ def _cfg_key(cfg: SearchConfig) -> tuple:
 
 
 def final_anchors(outcome: ScheduleOutcome) -> dict[int, int]:
-    """Model index -> chiplet its last window segment ended on (the data-
-    locality state at the schedule's final window boundary)."""
+    """Model index -> chiplet its last window segment ended on.
+
+    The data-locality state at the schedule's final window boundary.
+    """
     anchors: dict[int, int] = {}
     for wr in outcome.result.windows:
         anchors.update(wr.end_chiplet)

@@ -40,15 +40,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost import comm_from_parts, segment_last_layers
+from repro.core.cost import (comm_from_parts, congestion_correction,
+                             link_bandwidths, n_interposer_links,
+                             segment_last_layers)
 
 from .kernel import scar_eval
 
 
 def evaluate_traceable(lat_tab, e_tab, w_bytes, out_bytes, class_map, chips,
-                       seg_id, last, n_segs, act_in, prev_idx, *, pkg,
+                       seg_id, last, n_segs, act_in, prev_idx, wait_pair,
+                       wait_dram, *, pkg,
                        mcm_cols: int, n_active: int, pipelined: bool = True,
-                       has_prev: bool = False, block_b: int = 128,
+                       has_prev: bool = False, congestion: bool = False,
+                       noc=None, block_b: int = 128,
                        interpret: bool = False, use_kernel: bool = True):
     """[B, 2] (latency, energy) from compact packed inputs — traceable form.
 
@@ -56,6 +60,11 @@ def evaluate_traceable(lat_tab, e_tab, w_bytes, out_bytes, class_map, chips,
     the window-relative index of each segment's final layer); reductions and
     ``comm_from_parts`` run on device, fused into the jit.  ``prev_idx`` is
     the (traced) locality anchor, consulted only when ``has_prev``.
+    ``wait_pair``/``wait_dram`` are the (traced) bottleneck-wait tables of
+    ``cost.route_wait_tables``, consulted — together with the static
+    ``noc`` link config — only when ``congestion`` (the
+    ``comm_model="congestion"`` routed corrections fold into the comm
+    latency before the kernel, so the Pallas form is congestion-agnostic).
 
     This un-jitted form exists for *composition*: the fused device search
     program (``core.engine.DeviceBeamEngine``) inlines candidate scoring
@@ -84,6 +93,12 @@ def evaluate_traceable(lat_tab, e_tab, w_bytes, out_bytes, class_map, chips,
     ip_lat, ip_e, op_lat, op_e = comm_from_parts(
         jnp, pkg, mcm_cols, cpos, seg_w, seg_last_out, n_segs, n_active,
         act_in, prev_idx if has_prev else None)
+    if congestion:
+        ip_corr, op_corr = congestion_correction(
+            jnp, pkg, noc, mcm_cols, cpos, seg_w, seg_last_out, n_segs,
+            act_in, prev_idx if has_prev else None, wait_pair, wait_dram)
+        ip_lat = ip_lat + ip_corr
+        op_lat = op_lat + op_corr
     comm_lat = ip_lat + op_lat
     comm_e = ip_e + op_e
     valid = exists.astype(jnp.float32)
@@ -126,20 +141,28 @@ def evaluate_traceable(lat_tab, e_tab, w_bytes, out_bytes, class_map, chips,
 # keyed on the static mode flags (the traced ``prev_idx`` anchor does not
 # recompile).
 evaluate = partial(jax.jit, static_argnames=(
-    "pkg", "mcm_cols", "n_active", "pipelined", "has_prev", "block_b",
-    "interpret", "use_kernel"))(evaluate_traceable)
+    "pkg", "mcm_cols", "n_active", "pipelined", "has_prev", "congestion",
+    "noc", "block_b", "interpret", "use_kernel"))(evaluate_traceable)
 
 
 def pack_candidates(db, mcm, cand, n_active: int, prev_end=None,
                     pad_b: int = 128, *, pipelined: bool = True,
-                    dense: bool = True):
+                    dense: bool = True, comm_model: str = "analytic",
+                    link_occ=None):
     """Compact, shape-bucketed inputs for one model's candidate batch.
 
     Returns ``(args, statics, B)``: positional arrays for ``evaluate``, the
     static keyword arguments (``pkg``/``mcm_cols``/``n_active``/
-    ``pipelined``/``has_prev``) and the real (pre-padding) candidate count.
+    ``pipelined``/``has_prev``/``congestion``/``noc``) and the real
+    (pre-padding) candidate count.
     ``pipelined=False`` selects the sequential (sum over segments) latency
     mode, matching ``eval_model_candidates(..., pipelined=False)``.
+
+    ``comm_model="congestion"`` ships the bottleneck-wait tables built from
+    ``link_occ`` (the co-tenants' ``[n_links]`` byte occupancy; None means
+    uncontended) as the two trailing traced args, so a changing background
+    never recompiles; under ``"analytic"`` those slots carry ``[1, 1]`` /
+    ``[1]`` placeholders the trace never reads.
 
     ``dense=False`` ships a ``[B, 1]`` placeholder in the ``seg_id`` slot —
     the per-layer segment ids are consumed only by the ``use_kernel=True``
@@ -170,11 +193,27 @@ def pack_candidates(db, mcm, cand, n_active: int, prev_end=None,
                                                a.dtype)])
         chips, seg_id = z(chips), z(seg_id)
         last, n_segs = z(last), z(n_segs)
+    congestion = comm_model == "congestion"
+    if congestion:
+        from repro.core.cost import route_wait_tables
+        if link_occ is None:
+            link_occ = np.zeros(n_interposer_links(mcm.rows, mcm.cols))
+        wait_pair, wait_dram = route_wait_tables(
+            np, np.asarray(link_occ, np.float64) / link_bandwidths(mcm),
+            mcm.rows, mcm.cols)
+        wait_pair = wait_pair.astype(np.float32)
+        wait_dram = wait_dram.astype(np.float32)
+    else:
+        wait_pair = np.zeros((1, 1), np.float32)
+        wait_dram = np.zeros(1, np.float32)
     args = tuple(jnp.asarray(a) for a in
                  (lat_tab, e_tab, w_bytes, out_bytes, class_map, chips,
                   seg_id, last, n_segs,
                   np.float32(db.in_bytes[cand.start]),
-                  np.int32(prev_end if prev_end is not None else 0)))
+                  np.int32(prev_end if prev_end is not None else 0),
+                  wait_pair, wait_dram))
     statics = dict(pkg=mcm.pkg, mcm_cols=mcm.cols, n_active=n_active,
-                   pipelined=pipelined, has_prev=prev_end is not None)
+                   pipelined=pipelined, has_prev=prev_end is not None,
+                   congestion=congestion,
+                   noc=mcm.noc if congestion else None)
     return args, statics, B

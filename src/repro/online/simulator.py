@@ -70,7 +70,7 @@ from .traces import Trace
 
 
 def per_model_latency(outcome: ScheduleOutcome) -> dict[int, float]:
-    """Model index -> end-to-end latency (sum of its per-window latencies)."""
+    """Model index -> end-to-end latency in seconds (summed over windows)."""
     lat: dict[int, float] = {}
     for wr in outcome.result.windows:
         for mi, v in wr.per_model_latency.items():
@@ -590,6 +590,10 @@ def simulate(trace: Trace, mcm: Optional[MCM] = None,
     from-scratch oracle (see ``rescheduler``); ``policy`` the epoch-boundary
     semantics and MCM reconfiguration (``OnlinePolicy``; the default is the
     PR 3 class-blind fluid model on a fixed pattern).
+
+    Returns a ``SimResult``: latency samples and deadlines in simulated
+    seconds, energies in joules, ready for ``metrics.qos_report`` /
+    ``metrics.slo_report``.
     """
     if mcm is None:
         mcm = make_mcm(pattern, rows=rows, cols=cols, n_pe=n_pe)

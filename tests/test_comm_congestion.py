@@ -1,0 +1,351 @@
+"""Congestion-aware interposer NoC comm model (comm_model="congestion").
+
+Parity ladder, bottom to top: route oracles vs the analytic hop metric,
+bottleneck-wait tables vs explicit route lists, the scalar float64 window
+oracle vs the batched numpy form, float32 jax backends vs the numpy oracle
+on production batches of every paper scenario, and finally whole-schedule
+plan identity across numpy / jax_ref / the fused device search.  Plus the
+model's defining property: with the uniform NoC preset and zero co-tenant
+route overlap, congestion latencies equal the analytic ones exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SearchConfig, get_scenario, make_mcm, scenarios
+from repro.core.chiplet import NoCConfig
+from repro.core.cost import (BatchedModelCandidates, ModelWindowPlan,
+                             WindowPlan, _route_wait, dram_route_links,
+                             eval_model_candidates, evaluate_window,
+                             link_bandwidths, n_interposer_links,
+                             plan_link_bytes, route_wait_tables,
+                             window_link_occupancy, xy_route_links)
+from repro.core.evaluator import eval_candidates
+from repro.core.provision import provision
+from repro.core.reconfig import greedy_pack
+from repro.core.sched import assemble_candidates
+from repro.core.scheduler import get_cost_db, schedule
+from repro.core.segmentation import top_k_segmentations
+
+F32_SCORE_RTOL = 2e-4           # documented jax-vs-numpy score tolerance
+
+MESHES = [(3, 3), (4, 5), (1, 4), (4, 1)]
+HET_NOC = NoCConfig(h_bw=40e9, v_bw=25e9, congestion_alpha=0.7)
+
+
+def _plan_batch(p: ModelWindowPlan) -> BatchedModelCandidates:
+    """One ``ModelWindowPlan`` as a singleton candidate batch."""
+    lw = p.end - p.start
+    seg_id = np.zeros((1, lw), np.int64)
+    prev = p.start
+    for s_idx, e in enumerate(p.seg_ends):
+        seg_id[0, prev - p.start:e - p.start] = s_idx
+        prev = e
+    return BatchedModelCandidates(
+        model_idx=p.model_idx, start=p.start, end=p.end, seg_id=seg_id,
+        chiplets=np.asarray([p.chiplets], np.int64),
+        n_segs=np.array([p.n_segments], np.int64),
+        seg_ends=np.asarray([p.seg_ends], np.int64))
+
+
+def _window0_batches(scn, noc=None, prev_end_seed=None):
+    """Production candidate batches (window 0) for one scenario."""
+    sc = get_scenario(scn)
+    npe = 4096 if scn.startswith("dc") else 256
+    mcm = make_mcm("het_sides", rows=3, cols=3, n_pe=npe, noc=noc)
+    db = get_cost_db(sc, mcm)
+    wa = greedy_pack(db, mcm.class_counts(), 4)
+    ranges = wa.ranges[0]
+    alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
+                      metric="edp", max_nodes_per_model=6)
+    out = []
+    for mi, (s, e) in sorted(ranges.items()):
+        segs = top_k_segmentations(db, mcm, s, e, alloc[mi], k=4, cap=128,
+                                   metric="edp")
+        prev = None if prev_end_seed is None else (mi + prev_end_seed) % 9
+        cand, tiers, _ = assemble_candidates(mcm, mi, (s, e), segs, prev,
+                                             path_cap=64)
+        out.append((db, mcm, cand, prev, len(ranges)))
+    return out
+
+
+# ------------------------------ route oracles -------------------------------
+
+@pytest.mark.parametrize("rows,cols", MESHES)
+def test_route_lengths_match_hop_metric(rows, cols):
+    """Routed link counts == the analytic hop counts (``MCM.hops`` /
+    ``hops_to_dram``), on square, wide, and degenerate meshes — the routed
+    model prices the same geometry, link by link."""
+    mcm = make_mcm("het_sides", rows=rows, cols=cols, n_pe=256)
+    n_links = n_interposer_links(rows, cols)
+    for s in range(mcm.n_chiplets):
+        dlinks = dram_route_links(rows, cols, s)
+        assert len(dlinks) == mcm.hops_to_dram(s)
+        assert len(set(dlinks)) == len(dlinks)
+        for d in range(mcm.n_chiplets):
+            links = xy_route_links(rows, cols, s, d)
+            assert len(links) == mcm.hops(s, d)
+            assert len(set(links)) == len(links)       # self-avoiding
+            assert all(0 <= li < n_links for li in links)
+
+
+@pytest.mark.parametrize("rows,cols", MESHES)
+def test_route_wait_tables_match_route_lists(rows, cols):
+    """The batched range-mask tables reproduce ``_route_wait`` over the
+    explicit per-route link lists, for every (src, dst) pair and every
+    DRAM route."""
+    rng = np.random.default_rng(rows * 10 + cols)
+    cost = rng.uniform(0.0, 1e-3, n_interposer_links(rows, cols))
+    wait_pair, wait_dram = route_wait_tables(np, cost, rows, cols)
+    n = rows * cols
+    for s in range(n):
+        np.testing.assert_array_equal(
+            wait_dram[s], _route_wait(cost, dram_route_links(rows, cols, s)))
+        for d in range(n):
+            np.testing.assert_array_equal(
+                wait_pair[s, d],
+                _route_wait(cost, xy_route_links(rows, cols, s, d)))
+
+
+def test_plan_link_bytes_total_matches_hop_metric():
+    """``plan_link_bytes`` routes exactly the analytic transfer set: summed
+    over links, each plan's occupancy equals sum(bytes * hops) over the
+    transfers ``evaluate_window`` prices (weights, first input, forwards,
+    writeback) — an independent cross-check against ``MCM``'s hop metric."""
+    sc = get_scenario("dc1_lms")
+    mcm = make_mcm("het_sides", rows=3, cols=3)
+    db = get_cost_db(sc, mcm)
+    out = schedule(sc, mcm, SearchConfig(algo="beam", eval_backend="numpy"))
+    prev_end = {}
+    for w in out.windows:
+        for p in w.plan.plans:
+            occ = plan_link_bytes(db, mcm, p, prev_end)
+            expect = 0.0
+            seg_start = p.start
+            for si, seg_end in enumerate(p.seg_ends):
+                cid = p.chiplets[si]
+                hd = mcm.hops_to_dram(cid)
+                expect += float(db.w_bytes[seg_start:seg_end].sum()) * hd
+                if si == 0:
+                    act = float(db.in_bytes[seg_start])
+                    anchor = prev_end.get(p.model_idx)
+                    if anchor is None:
+                        expect += act * hd
+                    elif anchor != cid:
+                        expect += act * mcm.hops(anchor, cid)
+                act_out = float(db.out_bytes[seg_end - 1])
+                if si + 1 < p.n_segments:
+                    expect += act_out * mcm.hops(cid, p.chiplets[si + 1])
+                else:
+                    expect += act_out * hd
+                seg_start = seg_end
+            np.testing.assert_allclose(occ.sum(), expect, rtol=1e-12)
+        res = evaluate_window(db, mcm, w.plan, prev_end)
+        prev_end = dict(prev_end)
+        prev_end.update(res.end_chiplet)
+
+
+# ------------------- scalar oracle == batched numpy form --------------------
+
+@pytest.mark.parametrize("anchored", [False, True])
+def test_scalar_window_oracle_matches_batched(anchored):
+    """Per-model congestion latencies of ``evaluate_window`` equal singleton
+    ``eval_model_candidates`` calls fed the co-tenants' link occupancy —
+    the scalar-vs-batched float64 discipline (1-ulp einsum grain)."""
+    sc = get_scenario("dc3_lms_image_heavy")
+    mcm = make_mcm("het_sides", rows=3, cols=3, noc=HET_NOC)
+    db = get_cost_db(sc, mcm)
+    out = schedule(sc, mcm, SearchConfig(algo="beam", eval_backend="numpy",
+                                         comm_model="congestion"))
+    prev_end = {}
+    for wi, w in enumerate(out.windows):
+        wp = w.plan
+        pe = prev_end if (anchored and prev_end) else {}
+        rc = evaluate_window(db, mcm, wp, pe, comm_model="congestion")
+        ra = evaluate_window(db, mcm, wp, pe)
+        assert rc.energy == ra.energy       # corrections are latency-only
+        occs = [plan_link_bytes(db, mcm, p, pe) for p in wp.plans]
+        np.testing.assert_allclose(window_link_occupancy(db, mcm, wp, pe),
+                                   np.sum(occs, axis=0), rtol=1e-15)
+        for pi, p in enumerate(wp.plans):
+            bg = np.sum([o for j, o in enumerate(occs) if j != pi], axis=0) \
+                if len(occs) > 1 else np.zeros_like(occs[0])
+            lat, _ = eval_model_candidates(
+                db, mcm, _plan_batch(p), n_active=len(wp.plans),
+                prev_end=pe.get(p.model_idx), comm_model="congestion",
+                link_occ=bg)
+            np.testing.assert_allclose(lat[0],
+                                       rc.per_model_latency[p.model_idx],
+                                       rtol=1e-12)
+        res = evaluate_window(db, mcm, wp, pe, comm_model="congestion")
+        prev_end = dict(pe)
+        prev_end.update(res.end_chiplet)
+
+
+# ------------- f32 backend parity (all ten scenarios, congestion) -----------
+
+@pytest.mark.parametrize("scn", scenarios.SCENARIO_NAMES)
+def test_backend_parity_under_congestion(scn):
+    """numpy (f64) vs jax_ref vs Pallas-interpret (f32) under a contended
+    heterogeneous NoC, on production candidate batches of every paper
+    scenario, cold and anchored."""
+    rng = np.random.default_rng(7)
+    for prev_seed in (None, 3):
+        for db, mcm, cand, prev, n_active in _window0_batches(
+                scn, noc=HET_NOC, prev_end_seed=prev_seed):
+            link_occ = rng.uniform(0.0, 5e7,
+                                   n_interposer_links(mcm.rows, mcm.cols))
+            kw = dict(n_active=n_active, prev_end=prev,
+                      comm_model="congestion", link_occ=link_occ)
+            l_np, e_np = eval_candidates(db, mcm, cand, backend="numpy", **kw)
+            l_jx, e_jx = eval_candidates(db, mcm, cand, backend="jax_ref",
+                                         **kw)
+            l_pl, e_pl = eval_candidates(db, mcm, cand, backend="pallas",
+                                         interpret=True, **kw)
+            np.testing.assert_allclose(l_jx, l_np, rtol=F32_SCORE_RTOL)
+            np.testing.assert_allclose(l_pl, l_np, rtol=F32_SCORE_RTOL)
+            np.testing.assert_allclose(e_jx, e_np, rtol=F32_SCORE_RTOL)
+            np.testing.assert_allclose(e_pl, e_np, rtol=F32_SCORE_RTOL)
+            # contention strictly never speeds a candidate up
+            l_an, _ = eval_candidates(db, mcm, cand, n_active=n_active,
+                                      prev_end=prev, backend="numpy")
+            assert (l_np >= l_an - 1e-15).all()
+
+
+# ------------- whole-schedule plan identity (all ten scenarios) -------------
+
+@pytest.mark.parametrize("scn", scenarios.SCENARIO_NAMES)
+def test_congestion_plans_identical_across_backends(scn):
+    """``comm_model="congestion"`` produces the same plans — and therefore
+    bit-identical float64 metrics — through the numpy beam, the jax_ref
+    evaluator, and the fused device search, on every paper scenario."""
+    sc = get_scenario(scn)
+    npe = 4096 if scn.startswith("dc") else 256
+    mcm = make_mcm("het_sides", rows=3, cols=3, n_pe=npe,
+                   noc=scenarios.noc_config("het_rows"))
+    outs = []
+    for algo, backend in [("beam", "numpy"), ("beam", "jax_ref"),
+                          ("beam_jax", "jax_ref")]:
+        cfg = SearchConfig(algo=algo, eval_backend=backend,
+                           comm_model="congestion")
+        outs.append(schedule(sc, mcm, cfg))
+    base = outs[0]
+    plans0 = tuple(w.plan for w in base.windows)
+    for out in outs[1:]:
+        assert tuple(w.plan for w in out.windows) == plans0
+        assert out.result.latency == base.result.latency
+        assert out.result.energy == base.result.energy
+
+
+# --------------------- zero overlap => analytic exactly ---------------------
+
+def _disjoint_row_plans(db, seed):
+    """Two single-row plans on rows 0 and 2 of a 3x3 mesh: XY forwards stay
+    on the own row and DRAM routes are horizontal, so the two route sets
+    share no interposer link."""
+    rng = np.random.default_rng(seed)
+    plans = []
+    for mi, row in [(0, 0), (1, 2)]:
+        sl = db.model_slice(mi)
+        lw = sl.stop - sl.start
+        n_seg = int(rng.integers(1, min(3, lw) + 1))
+        cuts = sorted(rng.choice(np.arange(1, lw), n_seg - 1, replace=False)
+                      .tolist()) if n_seg > 1 else []
+        ends = tuple(sl.start + c for c in cuts) + (sl.stop,)
+        chips = tuple(int(c) for c in
+                      3 * row + rng.permutation(3)[:n_seg])
+        plans.append(ModelWindowPlan(model_idx=mi, start=sl.start,
+                                     end=sl.stop, seg_ends=ends,
+                                     chiplets=chips))
+    return WindowPlan(plans=tuple(plans))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_zero_overlap_equals_analytic(seed):
+    """The model's defining property: with the uniform NoC preset (link
+    bandwidths match the analytic flat NoP/DRAM rates) and no co-tenant
+    route overlap, the congestion model reproduces the analytic latencies
+    *exactly* — float64 equality, not a tolerance."""
+    sc = get_scenario("dc1_lms")
+    mcm = make_mcm("het_sides", rows=3, cols=3,
+                   noc=scenarios.noc_config("uniform"))
+    db = get_cost_db(sc, mcm)
+    wp = _disjoint_row_plans(db, seed)
+    occ_a, occ_b = [plan_link_bytes(db, mcm, p) for p in wp.plans]
+    assert float((occ_a * occ_b).sum()) == 0.0      # truly disjoint routes
+    ra = evaluate_window(db, mcm, wp, validate=True)
+    rc = evaluate_window(db, mcm, wp, validate=True,
+                         comm_model="congestion")
+    assert rc.latency == ra.latency
+    assert rc.energy == ra.energy
+    assert rc.per_model_latency == ra.per_model_latency
+
+
+def test_overlap_strictly_slower_on_narrow_noc():
+    """Shared links on a narrow NoC must cost something: model 0's DRAM
+    stream on chiplet 4 and model 1's row-1 forward (3 -> 5) both cross the
+    (1,0)-(1,1) link.  Both per-model latencies rise, and the co-tenant
+    wait term alone (same NoC, background occupancy on vs off) is a strict
+    slowdown."""
+    sc = get_scenario("dc1_lms")
+    mcm = make_mcm("het_sides", rows=3, cols=3,
+                   noc=scenarios.noc_config("narrow"))
+    db = get_cost_db(sc, mcm)
+    sl0, sl1 = db.model_slice(0), db.model_slice(1)
+    mid = (sl1.start + sl1.stop) // 2
+    # non-pipelined (sum over segments): corrections on any segment show up
+    # in the model latency, not only on the bottleneck segment
+    wp = WindowPlan(plans=(
+        ModelWindowPlan(model_idx=0, start=sl0.start, end=sl0.stop,
+                        seg_ends=(sl0.stop,), chiplets=(4,),
+                        pipelined=False),
+        ModelWindowPlan(model_idx=1, start=sl1.start, end=sl1.stop,
+                        seg_ends=(mid, sl1.stop), chiplets=(3, 5),
+                        pipelined=False)))
+    occ0, occ1 = [plan_link_bytes(db, mcm, p) for p in wp.plans]
+    assert float((occ0 * occ1).sum()) > 0.0        # routes genuinely overlap
+    ra = evaluate_window(db, mcm, wp, validate=True)
+    rc = evaluate_window(db, mcm, wp, validate=True,
+                         comm_model="congestion")
+    assert rc.latency > ra.latency
+    assert rc.energy == ra.energy
+    for mi in (0, 1):
+        assert rc.per_model_latency[mi] > ra.per_model_latency[mi]
+    # isolate the alpha * wait contention term: same NoC, co-tenant
+    # occupancy on vs off
+    lat_bg, _ = eval_model_candidates(db, mcm, _plan_batch(wp.plans[1]),
+                                      n_active=2, pipelined=False,
+                                      comm_model="congestion", link_occ=occ0)
+    lat_solo, _ = eval_model_candidates(db, mcm, _plan_batch(wp.plans[1]),
+                                        n_active=2, pipelined=False,
+                                        comm_model="congestion",
+                                        link_occ=None)
+    assert lat_bg[0] > lat_solo[0]
+
+
+def test_unknown_comm_model_rejected():
+    sc = get_scenario("xr8_outdoors")
+    mcm = make_mcm("het_sides", n_pe=256)
+    db = get_cost_db(sc, mcm)
+    sl = db.model_slice(0)
+    wp = WindowPlan(plans=(ModelWindowPlan(
+        model_idx=0, start=sl.start, end=sl.stop, seg_ends=(sl.stop,),
+        chiplets=(0,)),))
+    with pytest.raises(ValueError, match="comm_model"):
+        evaluate_window(db, mcm, wp, comm_model="wormhole")
+    with pytest.raises(ValueError, match="comm_model"):
+        eval_model_candidates(db, mcm, _plan_batch(wp.plans[0]), 1,
+                              comm_model="wormhole")
+
+
+def test_refine_congestion_never_worse():
+    """The annealer (with the decongest move in the mix) respects the
+    congestion metric and never returns a worse schedule."""
+    from repro.core.refine import refine
+    sc = get_scenario("dc3_lms_image_heavy")
+    mcm = make_mcm("het_sides", rows=3, cols=3, noc=HET_NOC)
+    cfg = SearchConfig(algo="beam", eval_backend="numpy",
+                       comm_model="congestion")
+    base = schedule(sc, mcm, cfg)
+    ref = refine(sc, mcm, base, metric="edp", iters=60, seed=2,
+                 comm_model="congestion")
+    assert ref.result.edp <= base.result.edp * (1 + 1e-12)

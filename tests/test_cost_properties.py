@@ -217,6 +217,51 @@ def _device_windows():
     return build
 
 
+# ------------------------- congestion comm model ----------------------------
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_zero_overlap_congestion_equals_analytic(seed):
+    """Property: with the uniform NoC (link bandwidths match the analytic
+    flat NoP/DRAM rates) and zero co-tenant route overlap, the congestion
+    model reproduces the analytic result exactly — float64 equality.
+
+    Plans are sampled on disjoint row bands of a 3x3 mesh (rows 0 and 2):
+    XY forwards stay on the own row and DRAM routes are horizontal, so the
+    route sets provably share no interposer link (asserted on the per-plan
+    occupancies before comparing)."""
+    from repro.core.cost import plan_link_bytes
+    from repro.core.scheduler import get_cost_db
+
+    sc = get_scenario("dc1_lms")
+    mcm = make_mcm("het_sides", rows=3, cols=3)
+    db = get_cost_db(sc, mcm)
+    rng = np.random.default_rng(seed)
+    plans = []
+    for mi, row in [(0, 0), (1, 2)]:
+        sl = db.model_slice(mi)
+        Lw = sl.stop - sl.start
+        n_seg = int(rng.integers(1, min(3, Lw) + 1))
+        cuts = (sorted(rng.choice(np.arange(1, Lw), n_seg - 1,
+                                  replace=False).tolist())
+                if n_seg > 1 else [])
+        plans.append(ModelWindowPlan(
+            model_idx=mi, start=sl.start, end=sl.stop,
+            seg_ends=tuple(sl.start + c for c in cuts) + (sl.stop,),
+            chiplets=tuple(int(c) for c in
+                           3 * row + rng.permutation(3)[:n_seg]),
+            pipelined=bool(rng.integers(0, 2))))
+    wp = WindowPlan(plans=tuple(plans))
+    occ_a, occ_b = [plan_link_bytes(db, mcm, p) for p in wp.plans]
+    assert float((occ_a * occ_b).sum()) == 0.0
+    ra = evaluate_window(db, mcm, wp, validate=True)
+    rc = evaluate_window(db, mcm, wp, validate=True,
+                         comm_model="congestion")
+    assert rc.latency == ra.latency
+    assert rc.energy == ra.energy
+    assert rc.per_model_latency == ra.per_model_latency
+
+
 @given(scenario=st.sampled_from(["xr7_ar_gaming", "xr9_social"]),
        pattern=st.sampled_from(["het_sides", "het_cb"]),
        beam=st.sampled_from([3, 16, 48]),
