@@ -7,6 +7,7 @@ import time
 
 sys.path.insert(0, "src")
 
+from repro import obs
 from repro.core import SearchConfig
 from repro.core.portfolio import SweepJob, run_portfolio
 
@@ -65,10 +66,22 @@ def _parse_derived(derived: str) -> dict:
 
 
 def emit(name: str, us: float, derived: str) -> None:
-    """CSV row per harness contract: name,us_per_call,derived."""
+    """CSV row per harness contract: name,us_per_call,derived.
+
+    With tracing enabled (``SCAR_TRACE=1`` or ``obs.enable()``) each row
+    also embeds the telemetry accumulated since the previous ``emit`` —
+    counters, gauges and a per-phase span summary — so ``BENCH_*.json``
+    files carry cache hit rates and jit-recompile counts next to the
+    timing they explain.  Spans are flushed per row to keep attribution
+    per-bench; counters are process-cumulative by design.
+    """
     print(f"{name},{us:.1f},{derived}")
-    RESULTS.append({"name": name, "us_per_call": round(us, 1),
-                    "derived": _parse_derived(derived)})
+    row = {"name": name, "us_per_call": round(us, 1),
+           "derived": _parse_derived(derived)}
+    if obs.enabled():
+        row["obs"] = obs.bench_dump()
+        obs.reset(counters_too=False)
+    RESULTS.append(row)
 
 
 class timer:

@@ -396,6 +396,72 @@ def bench_comm_congestion() -> None:
         f"schedule time on 6x6 (limit 3x)")
 
 
+def bench_obs_overhead() -> None:
+    """Telemetry cost contract on the fused 16x16 device search: the
+    disabled-tracer span path must stay a <=5% tax, and enabling tracing
+    must not change a single plan bit.
+
+    The disabled path (one global load + cached no-op singleton) is
+    microbenchmarked directly at the exact call shape the hot loops use;
+    a traced run of the same workload counts how many span/instant records
+    one schedule actually emits, and the projected overhead
+    ``records x per_call_cost`` is held against the untraced schedule wall
+    time.  Projection rather than on/off wall-clock deltas: the true
+    overhead is far below run-to-run jitter on a multi-hundred-ms
+    schedule, so a direct subtraction would guard nothing but noise.
+    """
+    import time as _time
+    from repro import obs
+    from repro.core import SearchConfig, get_scenario, make_mcm, schedule
+    from repro.core.scheduler import get_cost_db
+
+    sc = get_scenario("dc4_lms_seg_image")
+    mcm = make_mcm("het_cb", rows=16, cols=16, n_pe=4096)
+    get_cost_db(sc, mcm)                   # cost DB outside the timing
+    cfg = SearchConfig(algo="beam_jax", n_splits=4, path_cap=8192,
+                       keep_per_model=128, beam=128)
+
+    was_enabled = obs.enabled()
+    obs.disable()
+    base = schedule(sc, mcm, cfg)          # compile warmup, untraced plan
+
+    n_calls = 200_000
+    t0 = _time.perf_counter()
+    for i in range(n_calls):
+        with obs.span("probe", cat="bench", window=i, models=4):
+            pass
+    per_call_s = (_time.perf_counter() - t0) / n_calls
+
+    def best_of(n=3) -> float:
+        times = []
+        for _ in range(n):
+            t = _time.perf_counter()
+            schedule(sc, mcm, cfg)
+            times.append(_time.perf_counter() - t)
+        return min(times)
+
+    t_off = best_of()
+
+    obs.enable()                           # fresh tracer (disable dropped it)
+    traced = schedule(sc, mcm, cfg)
+    n_events = len(obs.tracer().events)
+    if not was_enabled:
+        obs.disable()
+
+    assert all(a.plan == b.plan
+               for a, b in zip(base.windows, traced.windows)), \
+        "tracing changed the schedule (telemetry must be plan-invariant)"
+
+    projected = n_events * per_call_s / t_off
+    emit("obs_overhead_16x16", per_call_s * 1e6,
+         f"span_off_ns={per_call_s * 1e9:.0f};"
+         f"events_per_schedule={n_events};sched_ms={t_off * 1e3:.1f};"
+         f"projected_overhead={projected:.6f};limit=0.05")
+    assert projected <= 0.05, (
+        f"disabled-tracer telemetry projects to {projected:.2%} of the "
+        f"fused 16x16 schedule time (limit 5%)")
+
+
 def bench_kernel_agreement() -> None:
     """Kernel-vs-oracle max error at a production-ish tile (interpret mode)."""
     from repro.kernels.flash_attention import mha
@@ -480,4 +546,4 @@ def bench_roofline_table(path: str = "dryrun_results.jsonl") -> None:
 ALL = [bench_scar_eval_throughput, bench_eval_backend,
        bench_sched_throughput, bench_fused_search,
        bench_candidate_construction, bench_comm_congestion,
-       bench_kernel_agreement, bench_roofline_table]
+       bench_obs_overhead, bench_kernel_agreement, bench_roofline_table]

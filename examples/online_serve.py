@@ -24,6 +24,7 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro import obs
 from repro.core import TRACE_PRESETS, SearchConfig, get_trace
 from repro.online import OnlinePolicy, qos_report, simulate, slo_report
 
@@ -45,8 +46,13 @@ def main() -> None:
                     help="relative gain a pattern switch must clear")
     ap.add_argument("--path-cap", type=int, default=64)
     ap.add_argument("--seg-cap", type=int, default=128)
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record telemetry and write a Chrome/Perfetto "
+                         "trace JSON to PATH (load via ui.perfetto.dev)")
     args = ap.parse_args()
 
+    if args.trace_out:
+        obs.enable()
     trace = get_trace(args.trace)
     print(f"trace {trace.name}: kind={trace.kind} horizon={trace.horizon}s "
           f"events={trace.n_events}")
@@ -96,6 +102,12 @@ def main() -> None:
                   f"p50={c.p50_latency * 1e3:7.2f}ms "
                   f"p99={c.p99_latency * 1e3:7.2f}ms "
                   f"miss_rate={c.miss_rate:.2%}")
+
+    if args.trace_out:
+        obs.chrome_trace(args.trace_out)
+        print(f"\ntelemetry: wrote {args.trace_out} "
+              f"(open with https://ui.perfetto.dev)")
+        print(obs.format_summary())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,106 @@
+"""Validate a Chrome-trace JSON file emitted by ``repro.obs``.
+
+Structural checks (always): the file parses, ``traceEvents`` is a list of
+well-formed Trace Event Format records (``ph`` in M/X/i/C, numeric
+timestamps, non-negative durations, JSON-safe args), complete events are
+sorted by timestamp, and every process id carries a ``process_name``
+metadata record — the invariants Perfetto / ``chrome://tracing`` rely on.
+
+Coverage checks (opt-in): ``--require cat1,cat2,...`` asserts at least one
+span or instant event per listed category, so CI can pin that a trace from
+a full pipeline run actually exercised every instrumented subsystem (the
+span taxonomy lives in ``docs/observability.md``).
+
+Usage: python scripts/check_trace.py trace.json [--require scheduler,online]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PHASES = {"M", "X", "i", "C"}
+
+
+def check(trace: dict, require: list[str]) -> list[str]:
+    problems: list[str] = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents missing, not a list, or empty"]
+    named_pids = set()
+    span_pids = set()
+    last_ts = None
+    per_cat: dict[str, int] = {}
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in PHASES:
+            problems.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        well_keyed = isinstance(ev.get("name"), str)
+        if not well_keyed or "pid" not in ev or "tid" not in ev:
+            problems.append(f"event {i}: missing name/pid/tid")
+            continue
+        if ph == "M":
+            if ev["name"] == "process_name":
+                named_pids.add(ev["pid"])
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i} ({ev['name']}): bad ts {ts!r}")
+            continue
+        if ph in ("X", "i"):
+            cat = ev.get("cat", "")
+            per_cat[cat] = per_cat.get(cat, 0) + 1
+            span_pids.add(ev["pid"])
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"event {i} ({ev['name']}): bad dur {dur!r}")
+            if last_ts is not None and ts < last_ts:
+                problems.append(f"event {i} ({ev['name']}): ts out of order")
+            last_ts = ts
+        try:
+            json.dumps(ev.get("args", {}))
+        except (TypeError, ValueError):
+            problems.append(f"event {i} ({ev['name']}): args not JSON-safe")
+    for pid in sorted(span_pids - named_pids):
+        problems.append(f"pid {pid} has spans but no process_name metadata")
+    for cat in require:
+        if not per_cat.get(cat):
+            have = sorted(c for c in per_cat if c)
+            problems.append(
+                f"required category {cat!r} has no events (have: {have})"
+            )
+    counts = ", ".join(
+        f"{cat or '<none>'}={n}" for cat, n in sorted(per_cat.items())
+    )
+    print(f"{len(events)} events; spans/instants per category: {counts}")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON file to validate")
+    ap.add_argument(
+        "--require",
+        default="",
+        help="comma-separated categories that must each have >=1 event",
+    )
+    args = ap.parse_args()
+    try:
+        with open(args.trace) as fh:
+            trace = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot load {args.trace}: {e}", file=sys.stderr)
+        return 1
+    require = [c.strip() for c in args.require.split(",") if c.strip()]
+    problems = check(trace, require)
+    for p in problems:
+        print(f"FAIL: {p}", file=sys.stderr)
+    print(f"# {args.trace}: {len(problems)} problems", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels.scar_search import conflict_counts_traceable
 
 from .cost import route_wait_tables
@@ -60,6 +61,26 @@ from .evaluator import traceable_scores
 from .quantize import SCORE_SIG, quantize_scores_jax
 
 _KEY_INVALID = np.uint32(0xFFFFFFFF)
+
+# Shape-bucket compile accounting, mirroring evaluator._SEEN_SIGNATURES:
+# the engine reports each (program, static signature) it is about to
+# request, and a first-seen signature counts as one XLA compile.
+_RECOMPILES = obs.counter("device_search.jit_recompiles")
+_SEEN_PROGRAMS: set[tuple] = set()
+
+
+def note_program(kind: str, key: tuple) -> None:
+    """Record a device-program request; first-seen keys count as compiles.
+
+    ``kind`` names the program ("protocol" | "fused"), ``key`` its full
+    static signature (shapes + static argument values).  Deterministic and
+    jax-version-independent, unlike polling jit cache internals.
+    """
+    sig = (kind,) + key
+    if sig not in _SEEN_PROGRAMS:
+        _SEEN_PROGRAMS.add(sig)
+        _RECOMPILES.inc()
+        obs.event("jit_compile", cat="device_search", program=kind)
 
 
 def bucket_size(n: int, base: int = 256) -> int:

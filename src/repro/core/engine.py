@@ -41,11 +41,19 @@ from typing import Optional, Protocol
 
 import numpy as np
 
+from repro import obs
+
 from .chiplet import MCM
 from .cost import ModelWindowPlan, WindowPlan, WindowResult, evaluate_window
 from .maestro import CostDB
 
 _MASK64 = (1 << 64) - 1
+
+# Anneal move accounting (always-on registry counters; see
+# docs/observability.md).  EA/beam don't propose/accept moves, so only the
+# stochastic chains engine feeds these.
+_ANNEAL_PROPOSED = obs.counter("engine.anneal.moves_proposed")
+_ANNEAL_ACCEPTED = obs.counter("engine.anneal.moves_accepted")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,6 +310,13 @@ class BeamEngine:
     def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
                 prev_end: dict[int, int],
                 metric: str = "edp") -> WindowSearchResult:
+        with obs.span("combine", cat="engine", engine="beam",
+                      models=len(sets), beam=self.beam):
+            return self._combine(db, mcm, sets, prev_end, metric)
+
+    def _combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
+                 prev_end: dict[int, int],
+                 metric: str = "edp") -> WindowSearchResult:
         # order models by compute weight (largest first: hardest to place)
         sets = sorted(sets, key=lambda s: -float(np.min(s.lat)))
         n_words = max(1, (mcm.n_chiplets + 63) // 64)
@@ -313,48 +328,51 @@ class BeamEngine:
         explored: list[tuple[float, float]] = []
         expansions = 0
         for cs in sets:
-            n_cand = cs.n_cands
-            cand_masks = cs.words(n_words)                        # [N, W]
-            if n_words == 1:
-                disjoint = (b_mask[:, 0, None]
-                            & cand_masks[None, :, 0]) == 0        # [B, N]
-            else:
-                disjoint = ((b_mask[:, None, :]
-                             & cand_masks[None, :, :]) == 0).all(axis=-1)
-            # per-beam-item expansion width (candidates are (tier, score)
-            # sorted, so "first keep disjoint" == "best keep disjoint")
-            if cs.keep < n_cand:
-                rank = np.add.accumulate(disjoint, axis=1, dtype=np.int32)
-                sel = disjoint & (rank <= cs.keep)
-            else:
-                sel = disjoint
-            total = int(np.count_nonzero(sel))
-            if total == 0:
-                raise RuntimeError(
-                    f"no disjoint placement for model {cs.model_idx} even "
-                    f"after scanning all {n_cand} candidates; "
-                    f"increase path_cap or reduce provisioned nodes")
-            if expansions + total > self.max_expansions:
-                # global expansion budget, row-major acceptance order; the
-                # first acceptance of a stage always goes through
-                flat_sel = sel.ravel()
-                before = np.cumsum(flat_sel) - flat_sel
-                okf = flat_sel & ((expansions + before < self.max_expansions)
-                                  | (before == 0))
-                sel = okf.reshape(sel.shape)
+            with obs.span("beam_stage", cat="engine", model=cs.model_idx,
+                          cands=cs.n_cands):
+                n_cand = cs.n_cands
+                cand_masks = cs.words(n_words)                    # [N, W]
+                if n_words == 1:
+                    disjoint = (b_mask[:, 0, None]
+                                & cand_masks[None, :, 0]) == 0    # [B, N]
+                else:
+                    disjoint = ((b_mask[:, None, :]
+                                 & cand_masks[None, :, :]) == 0).all(axis=-1)
+                # per-beam-item expansion width (candidates are (tier, score)
+                # sorted, so "first keep disjoint" == "best keep disjoint")
+                if cs.keep < n_cand:
+                    rank = np.add.accumulate(disjoint, axis=1, dtype=np.int32)
+                    sel = disjoint & (rank <= cs.keep)
+                else:
+                    sel = disjoint
                 total = int(np.count_nonzero(sel))
-            expansions += total
-            rows, cand_idx = np.nonzero(sel)
-            new_lat = np.maximum(b_lat[rows], cs.lat[cand_idx])
-            new_energy = b_energy[rows] + cs.energy[cand_idx]
-            order = np.argsort(metric_score(new_lat, new_energy, metric),
-                               kind="stable")[:self.beam]
-            rows, cand_idx = rows[order], cand_idx[order]
-            b_mask = b_mask[rows] | cand_masks[cand_idx]
-            b_lat, b_energy = new_lat[order], new_energy[order]
-            b_picks = np.concatenate(
-                [b_picks[rows], cand_idx[:, None]], axis=1)
-            explored.extend(zip(b_lat.tolist(), b_energy.tolist()))
+                if total == 0:
+                    raise RuntimeError(
+                        f"no disjoint placement for model {cs.model_idx} "
+                        f"even after scanning all {n_cand} candidates; "
+                        f"increase path_cap or reduce provisioned nodes")
+                if expansions + total > self.max_expansions:
+                    # global expansion budget, row-major acceptance order;
+                    # the first acceptance of a stage always goes through
+                    flat_sel = sel.ravel()
+                    before = np.cumsum(flat_sel) - flat_sel
+                    okf = flat_sel & (
+                        (expansions + before < self.max_expansions)
+                        | (before == 0))
+                    sel = okf.reshape(sel.shape)
+                    total = int(np.count_nonzero(sel))
+                expansions += total
+                rows, cand_idx = np.nonzero(sel)
+                new_lat = np.maximum(b_lat[rows], cs.lat[cand_idx])
+                new_energy = b_energy[rows] + cs.energy[cand_idx]
+                order = np.argsort(metric_score(new_lat, new_energy, metric),
+                                   kind="stable")[:self.beam]
+                rows, cand_idx = rows[order], cand_idx[order]
+                b_mask = b_mask[rows] | cand_masks[cand_idx]
+                b_lat, b_energy = new_lat[order], new_energy[order]
+                b_picks = np.concatenate(
+                    [b_picks[rows], cand_idx[:, None]], axis=1)
+                explored.extend(zip(b_lat.tolist(), b_energy.tolist()))
 
         plan = _plans_from_picks(sets, b_picks[0])
         result = evaluate_window(db, mcm, plan, prev_end, validate=True,
@@ -482,11 +500,15 @@ class DeviceBeamEngine:
             sizes[m], keeps[m] = n, cs.keep
         # scoped x64: the combination ops then run in float64 and match the
         # host reference bit-for-bit
-        with enable_x64():
+        t0 = ds.probe_width(n_pad, int(keeps.max()))
+        ds.note_program("protocol", (m_models, n_pad, n_words, self.beam,
+                                     metric, self.max_expansions, t0,
+                                     self._kernels(), self.interpret))
+        with obs.span("device_combine", cat="engine", engine="beam_jax",
+                      models=m_models, n_pad=n_pad), enable_x64():
             out = ds.protocol_program(
                 masks, lat, energy, sizes, keeps, beam=self.beam,
-                metric=metric, max_exp=self.max_expansions,
-                t0=ds.probe_width(n_pad, int(keeps.max())),
+                metric=metric, max_exp=self.max_expansions, t0=t0,
                 use_kernel=self._kernels(), interpret=self.interpret)
             # the single host transfer of the whole combination
             parents, cands, tlats, tes, counts, fails = \
@@ -505,6 +527,16 @@ class DeviceBeamEngine:
                        ranges: dict[int, tuple[int, int]],
                        prev_end: dict[int, int],
                        metric: Optional[str] = None) -> WindowSearchResult:
+        metric = metric or cfg.metric
+        with obs.span("combine_window", cat="engine", engine="beam_jax",
+                      models=len(ranges), beam=self.beam):
+            return self._combine_window(db, mcm, cfg, ranges, prev_end,
+                                        metric)
+
+    def _combine_window(self, db: CostDB, mcm: MCM, cfg,
+                        ranges: dict[int, tuple[int, int]],
+                        prev_end: dict[int, int],
+                        metric: str) -> WindowSearchResult:
         # local imports: sched/scheduler import this module at module level
         from repro.kernels.scar_eval import pack_candidates
         from repro.launch import platform as launch_platform
@@ -515,7 +547,6 @@ class DeviceBeamEngine:
         from .sched import assemble_candidates
         from .segmentation import top_k_segmentations
 
-        metric = metric or cfg.metric
         alloc = provision(db, mcm.class_counts(), ranges, mcm.n_chiplets,
                           metric=cfg.metric,
                           max_nodes_per_model=cfg.max_nodes_per_model)
@@ -551,6 +582,12 @@ class DeviceBeamEngine:
         keep = int(cfg.keep_per_model)
         t0, t1 = ds.pool_widths(keep)
         congestion = self.comm_model == "congestion"
+        ds.note_program(
+            "fused",
+            (tuple(tuple(a.shape for a in i[0]) + (i[1].shape,) for i in
+                   inputs), tuple(modes), n_active, n_pad, self.beam, keep,
+             metric, self.max_expansions, t0, t1, self._kernels(),
+             self.interpret, congestion))
         out = ds.fused_program(
             tuple(inputs), modes=tuple(modes), pkg=mcm.pkg,
             mcm_cols=mcm.cols, n_active=n_active, n_pad=n_pad,
@@ -617,28 +654,32 @@ class EvolutionaryEngine:
         pop[0] = 0  # seed with per-model greedy best
         explored: list[tuple[float, float]] = []
 
-        fit, lmax, esum, _ = batched_fitness(ct, pop, metric)
-        for _ in range(self.generations):
-            children = []
-            for _ in range(self.population):
-                i, j = rng.integers(0, self.population, size=2)
-                a = pop[i] if fit[i] < fit[j] else pop[j]
-                p, q = rng.integers(0, self.population, size=2)
-                b = pop[p] if fit[p] < fit[q] else pop[q]
-                xover = rng.random(n_models) < 0.5
-                child = np.where(xover, a, b)
-                mut = rng.random(n_models) < self.mutation_rate
-                child = np.where(mut, rng.integers(0, sizes), child)
-                children.append(child)
-            cpop = np.stack(children)
-            cfit, clmax, cesum, _ = batched_fitness(ct, cpop, metric)
-            allp = np.concatenate([pop, cpop])
-            allf = np.concatenate([fit, cfit])
-            order = np.argsort(allf, kind="stable")[:self.population]
-            pop, fit = allp[order], allf[order]
-            lmax = np.concatenate([lmax, clmax])[order]
-            esum = np.concatenate([esum, cesum])[order]
-            explored.extend(zip(lmax.tolist(), esum.tolist()))
+        outer = obs.span("combine", cat="engine", engine="evolutionary",
+                         models=n_models, population=self.population)
+        with outer:
+            fit, lmax, esum, _ = batched_fitness(ct, pop, metric)
+            for gen in range(self.generations):
+                with obs.span("ea_generation", cat="engine", generation=gen):
+                    children = []
+                    for _ in range(self.population):
+                        i, j = rng.integers(0, self.population, size=2)
+                        a = pop[i] if fit[i] < fit[j] else pop[j]
+                        p, q = rng.integers(0, self.population, size=2)
+                        b = pop[p] if fit[p] < fit[q] else pop[q]
+                        xover = rng.random(n_models) < 0.5
+                        child = np.where(xover, a, b)
+                        mut = rng.random(n_models) < self.mutation_rate
+                        child = np.where(mut, rng.integers(0, sizes), child)
+                        children.append(child)
+                    cpop = np.stack(children)
+                    cfit, clmax, cesum, _ = batched_fitness(ct, cpop, metric)
+                    allp = np.concatenate([pop, cpop])
+                    allf = np.concatenate([fit, cfit])
+                    order = np.argsort(allf, kind="stable")[:self.population]
+                    pop, fit = allp[order], allf[order]
+                    lmax = np.concatenate([lmax, clmax])[order]
+                    esum = np.concatenate([esum, cesum])[order]
+                    explored.extend(zip(lmax.tolist(), esum.tolist()))
 
         best = pop[0]
         _, _, _, overlap = batched_fitness(ct, best[None, :], metric)
@@ -679,6 +720,14 @@ class AnnealEngine:
     def combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
                 prev_end: dict[int, int],
                 metric: str = "edp") -> WindowSearchResult:
+        with obs.span("combine", cat="engine", engine="anneal",
+                      models=len(sets), chains=self.chains,
+                      iters=self.iters):
+            return self._combine(db, mcm, sets, prev_end, metric)
+
+    def _combine(self, db: CostDB, mcm: MCM, sets: list[ModelCandidateSet],
+                 prev_end: dict[int, int],
+                 metric: str = "edp") -> WindowSearchResult:
         rng = np.random.default_rng(self.seed)
         ct = CandidateTensors.from_sets(sets, mcm.n_chiplets)
         n_models = len(sets)
@@ -692,22 +741,26 @@ class AnnealEngine:
             zip(lmax.tolist(), esum.tolist()))
         rows = np.arange(n_chains)
         for it in range(self.iters):
-            t = self.temperature * (1.0 - it / max(1, self.iters))
-            col = rng.integers(0, n_models, size=n_chains)
-            new_val = rng.integers(0, ct.sizes[col])
-            prop = picks.copy()
-            prop[rows, col] = new_val
-            pfit, plm, pes, _ = batched_fitness(ct, prop, metric)
-            with np.errstate(over="ignore"):
-                accept = (pfit < fit) | (
-                    rng.random(n_chains)
-                    < np.exp(-(pfit / fit - 1.0) / max(t, 1e-9)))
-            picks = np.where(accept[:, None], prop, picks)
-            fit = np.where(accept, pfit, fit)
-            improved = fit < best_fit
-            best_picks = np.where(improved[:, None], picks, best_picks)
-            best_fit = np.where(improved, fit, best_fit)
-            explored.extend(zip(plm[accept].tolist(), pes[accept].tolist()))
+            with obs.span("anneal_iter", cat="engine", iter=it):
+                t = self.temperature * (1.0 - it / max(1, self.iters))
+                col = rng.integers(0, n_models, size=n_chains)
+                new_val = rng.integers(0, ct.sizes[col])
+                prop = picks.copy()
+                prop[rows, col] = new_val
+                pfit, plm, pes, _ = batched_fitness(ct, prop, metric)
+                with np.errstate(over="ignore"):
+                    accept = (pfit < fit) | (
+                        rng.random(n_chains)
+                        < np.exp(-(pfit / fit - 1.0) / max(t, 1e-9)))
+                picks = np.where(accept[:, None], prop, picks)
+                fit = np.where(accept, pfit, fit)
+                improved = fit < best_fit
+                best_picks = np.where(improved[:, None], picks, best_picks)
+                best_fit = np.where(improved, fit, best_fit)
+                _ANNEAL_PROPOSED.inc(n_chains)
+                _ANNEAL_ACCEPTED.inc(int(np.count_nonzero(accept)))
+                explored.extend(zip(plm[accept].tolist(),
+                                    pes[accept].tolist()))
 
         best = best_picks[int(np.argmin(best_fit))]
         _, _, _, overlap = batched_fitness(ct, best[None, :], metric)

@@ -34,11 +34,23 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 from .chiplet import MCM
 from .cost import BatchedModelCandidates, eval_model_candidates
 from .maestro import CostDB
 
 BACKENDS = ("auto", "numpy", "jax_ref", "pallas")
+
+# Shape-bucket compile accounting: the jax eval path recompiles once per
+# distinct (backend, shapes, statics) signature; counting *new* signatures
+# at the call site is deterministic and jax-version-independent, unlike
+# polling jit cache internals.  `evaluator.eval_calls.<backend>` counts
+# every dispatch per resolved backend.
+_RECOMPILES = obs.counter("evaluator.jit_recompiles")
+_SEEN_SIGNATURES: set[tuple] = set()
+_EVAL_CALLS = {b: obs.counter(f"evaluator.eval_calls.{b}")
+               for b in ("numpy", "jax_ref", "pallas")}
 
 # Kernel batch block; pack_candidates pads B to a multiple of this.
 EVAL_BLOCK_B = 128
@@ -118,10 +130,15 @@ def eval_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
     """
     B, Lw = cand.seg_id.shape
     resolved = resolve_backend(backend, work=B * Lw)
+    _EVAL_CALLS[resolved].inc()
     if resolved == "numpy":
-        return eval_model_candidates(db, mcm, cand, n_active,
-                                     prev_end=prev_end, pipelined=pipelined,
-                                     comm_model=comm_model, link_occ=link_occ)
+        with obs.span("eval_candidates", cat="evaluator", backend="numpy",
+                      batch=B, layers=Lw):
+            return eval_model_candidates(db, mcm, cand, n_active,
+                                         prev_end=prev_end,
+                                         pipelined=pipelined,
+                                         comm_model=comm_model,
+                                         link_occ=link_occ)
     if resolved == "pallas" and not interpret and _jax_platform() != "tpu":
         # fail fast with an actionable message instead of a lowering error
         # deep inside schedule(); tests run the kernel anywhere by passing
@@ -132,17 +149,28 @@ def eval_candidates(db: CostDB, mcm: MCM, cand: BatchedModelCandidates,
             "for kernel tests")
     from repro.kernels.scar_eval import evaluate, pack_candidates
     from repro.launch import platform
-    args, statics, b_real = pack_candidates(db, mcm, cand, n_active,
-                                            prev_end=prev_end,
-                                            pad_b=EVAL_BLOCK_B,
-                                            pipelined=pipelined,
-                                            dense=(resolved == "pallas"),
-                                            comm_model=comm_model,
-                                            link_occ=link_occ)
-    # the counted host-transfer point: one device->host sync per batch
-    out = platform.device_fetch(
-        evaluate(*args, **statics, block_b=EVAL_BLOCK_B, interpret=interpret,
-                 use_kernel=(resolved == "pallas")))
+    with obs.span("eval_candidates", cat="evaluator", backend=resolved,
+                  batch=B, layers=Lw):
+        args, statics, b_real = pack_candidates(db, mcm, cand, n_active,
+                                                prev_end=prev_end,
+                                                pad_b=EVAL_BLOCK_B,
+                                                pipelined=pipelined,
+                                                dense=(resolved == "pallas"),
+                                                comm_model=comm_model,
+                                                link_occ=link_occ)
+        sig = (resolved, interpret,
+               tuple((a.shape, str(a.dtype)) for a in args),
+               tuple(sorted(statics.items())))
+        if sig not in _SEEN_SIGNATURES:
+            _SEEN_SIGNATURES.add(sig)
+            _RECOMPILES.inc()
+            obs.event("jit_compile", cat="evaluator", backend=resolved,
+                      batch=int(args[0].shape[0]), layers=Lw)
+        # the counted host-transfer point: one device->host sync per batch
+        out = platform.device_fetch(
+            evaluate(*args, **statics, block_b=EVAL_BLOCK_B,
+                     interpret=interpret,
+                     use_kernel=(resolved == "pallas")))
     return (out[:b_real, 0].astype(np.float64),
             out[:b_real, 1].astype(np.float64))
 

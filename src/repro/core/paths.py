@@ -46,6 +46,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.obs import registry as _obs_registry
+
 __all__ = ["frontier_paths", "path_cache_clear", "path_cache_info"]
 
 # Frontier rows kept per intermediate level before stratified sampling kicks
@@ -215,8 +217,11 @@ def _build(rows: int, cols: int, length: int, starts: tuple[int, ...],
 _CACHE: OrderedDict[tuple, tuple[np.ndarray, np.ndarray]] = OrderedDict()
 _CACHE_LOCK = threading.Lock()
 _CACHE_MAX = 256
-_HITS = 0
-_MISSES = 0
+# Hit/miss accounting lives in the process-global telemetry registry
+# (repro.obs) so path_cache_info(), obs.cache_stats() and exported traces
+# all read the same integers.
+_HIT = _obs_registry.counter("paths.cache_hit")
+_MISS = _obs_registry.counter("paths.cache_miss")
 
 
 def frontier_paths(rows: int, cols: int, length: int, starts,
@@ -231,7 +236,6 @@ def frontier_paths(rows: int, cols: int, length: int, starts,
     exactly while intermediate frontiers stay under ``frontier_cap``
     (default ``max(4 * cap, DEFAULT_FRONTIER_CAP)``).
     """
-    global _HITS, _MISSES
     if frontier_cap is None:
         frontier_cap = max(4 * cap, DEFAULT_FRONTIER_CAP)
     key = (rows, cols, length, tuple(starts), cap, frontier_cap)
@@ -239,13 +243,13 @@ def frontier_paths(rows: int, cols: int, length: int, starts,
         hit = _CACHE.get(key)
         if hit is not None:
             _CACHE.move_to_end(key)
-            _HITS += 1
+            _HIT.inc()
             return hit
     paths, words = _build(rows, cols, length, key[3], cap, frontier_cap)
     paths.flags.writeable = False
     words.flags.writeable = False
     with _CACHE_LOCK:
-        _MISSES += 1
+        _MISS.inc()
         _CACHE[key] = (paths, words)
         _CACHE.move_to_end(key)
         while len(_CACHE) > _CACHE_MAX:
@@ -255,14 +259,14 @@ def frontier_paths(rows: int, cols: int, length: int, starts,
 
 def path_cache_clear() -> None:
     """Drop every cached path tensor (benchmarks re-time cold builds)."""
-    global _HITS, _MISSES
     with _CACHE_LOCK:
         _CACHE.clear()
-        _HITS = 0
-        _MISSES = 0
+        _HIT.reset()
+        _MISS.reset()
 
 
 def path_cache_info() -> dict:
+    """Cache size/limit plus the registry-backed hit/miss counts."""
     with _CACHE_LOCK:
         return {"size": len(_CACHE), "maxsize": _CACHE_MAX,
-                "hits": _HITS, "misses": _MISSES}
+                "hits": _HIT.value, "misses": _MISS.value}

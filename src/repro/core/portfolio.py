@@ -31,6 +31,8 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Optional
 
+from repro import obs
+
 from .scenarios import get_scenario, mesh_shape
 from .scheduler import ScheduleOutcome, SearchConfig, run_config
 
@@ -107,22 +109,24 @@ class TraceResult:
 
 def _run_job(job):
     t0 = time.time()
-    if isinstance(job, TraceJob):
-        # lazy: repro.online depends on repro.core, so importing it at
-        # module load would be circular
-        from repro.online.metrics import qos_report
-        from repro.online.simulator import simulate
-        from .scenarios import get_trace
-        sim = simulate(get_trace(job.trace), pattern=job.pattern,
-                       rows=job.rows, cols=job.cols, n_pe=job.n_pe,
-                       cfg=job.cfg, mode=job.mode, policy=job.policy)
-        return TraceResult(job=job, report=qos_report(sim),
+    with obs.span("job", cat="portfolio", job=job.name):
+        if isinstance(job, TraceJob):
+            # lazy: repro.online depends on repro.core, so importing it at
+            # module load would be circular
+            from repro.online.metrics import qos_report
+            from repro.online.simulator import simulate
+            from .scenarios import get_trace
+            sim = simulate(get_trace(job.trace), pattern=job.pattern,
+                           rows=job.rows, cols=job.cols, n_pe=job.n_pe,
+                           cfg=job.cfg, mode=job.mode, policy=job.policy)
+            return TraceResult(job=job, report=qos_report(sim),
+                               wall_s=time.time() - t0)
+        sc = get_scenario(job.scenario)
+        outcome = run_config(sc, job.pattern, rows=job.rows, cols=job.cols,
+                             n_pe=job.n_pe, cfg=job.cfg,
+                             standalone=job.standalone)
+        return SweepResult(job=job, outcome=outcome,
                            wall_s=time.time() - t0)
-    sc = get_scenario(job.scenario)
-    outcome = run_config(sc, job.pattern, rows=job.rows, cols=job.cols,
-                         n_pe=job.n_pe, cfg=job.cfg,
-                         standalone=job.standalone)
-    return SweepResult(job=job, outcome=outcome, wall_s=time.time() - t0)
 
 
 def _db_affinity(job) -> tuple:
@@ -135,9 +139,19 @@ def _db_affinity(job) -> tuple:
     return (src, job.pattern, job.rows, job.cols, job.n_pe)
 
 
-def _run_batch(batch: list) -> list:
-    """Worker-side: run one affinity group in order (shared warm caches)."""
-    return [_run_job(j) for j in batch]
+def _run_batch(batch: list, trace: bool = False) -> tuple:
+    """Worker-side: run one affinity group in order (shared warm caches).
+
+    Returns ``(results, telemetry)``.  ``trace=True`` (the parent had
+    tracing enabled) turns tracing on in the worker and ships back an
+    ``obs.snapshot()`` the parent folds into its own tracer, so one Chrome
+    trace shows every process's span stream; the snapshot also carries the
+    worker's counters, which the parent adds into its registry.
+    """
+    if trace and not obs.enabled():
+        obs.enable()
+    results = [_run_job(j) for j in batch]
+    return results, (obs.snapshot() if trace else None)
 
 
 def _init_worker(path: list[str]) -> None:
@@ -193,13 +207,18 @@ def run_portfolio(jobs: list,
         for s in range(0, len(idxs), cap):
             batches.append(idxs[s:s + cap])
     ctx = mp.get_context("spawn")
+    tracing = obs.enabled()
     with ProcessPoolExecutor(max_workers=processes, mp_context=ctx,
                              initializer=_init_worker,
                              initargs=(list(sys.path),)) as pool:
         outs = list(pool.map(_run_batch,
-                             [[jobs[i] for i in idxs] for idxs in batches]))
+                             [[jobs[i] for i in idxs] for idxs in batches],
+                             [tracing] * len(batches)))
     results: list = [None] * len(jobs)
-    for idxs, out in zip(batches, outs):
+    for k, (idxs, (out, snap)) in enumerate(zip(batches, outs)):
+        # batches are numbered by submission order, so merged span streams
+        # get stable, deterministic process ids across runs
+        obs.merge_snapshot(snap, pid=k + 1)
         for i, r in zip(idxs, out):
             results[i] = r
     return results

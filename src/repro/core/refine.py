@@ -28,6 +28,8 @@ import math
 
 import numpy as np
 
+from repro import obs
+
 from .chiplet import MCM
 from .cost import (BatchedModelCandidates, ModelWindowPlan, WindowPlan,
                    WindowResult, evaluate_schedule, evaluate_window,
@@ -353,33 +355,46 @@ def refine(sc, mcm: MCM, outcome: ScheduleOutcome, metric: str = "edp",
     windows = _from_window_plans([w.plan for w in outcome.windows])
     if not windows:
         return outcome
-    ev = _IncrementalEvaluator(db, mcm, windows, comm_model=comm_model)
-    ctx = (db, mcm, ev, metric, backend, comm_model)
-    cur_m = metric_score(float(sum(r.latency for r in ev.results)),
-                         float(sum(r.energy for r in ev.results)), metric)
-    best_windows, best_m = windows, cur_m
-    moves = [_try_boundary, _try_relocate, _try_rewindow]
-    if comm_model == "congestion":
-        moves = moves + [_try_decongest]
-    for it in range(iters):
-        mv_fn = moves[int(rng.integers(len(moves)))]
-        try:
-            mv = mv_fn(rng, windows, ctx)
-            if mv is None:
+    # Move accounting: always-on registry counters, one per move kind plus
+    # the accepted/rejected totals (naming: docs/observability.md).
+    accepted_c = obs.counter("refine.moves.accepted")
+    rejected_c = obs.counter("refine.moves.rejected")
+    with obs.span("refine", cat="refine", scenario=outcome.scenario,
+                  iters=iters, metric=metric):
+        ev = _IncrementalEvaluator(db, mcm, windows, comm_model=comm_model)
+        ctx = (db, mcm, ev, metric, backend, comm_model)
+        cur_m = metric_score(float(sum(r.latency for r in ev.results)),
+                             float(sum(r.energy for r in ev.results)), metric)
+        best_windows, best_m = windows, cur_m
+        moves = [_try_boundary, _try_relocate, _try_rewindow]
+        if comm_model == "congestion":
+            moves = moves + [_try_decongest]
+        move_counters = {fn: obs.counter(
+            "refine.moves." + fn.__name__.removeprefix("_try_"))
+            for fn in moves}
+        for it in range(iters):
+            mv_fn = moves[int(rng.integers(len(moves)))]
+            try:
+                mv = mv_fn(rng, windows, ctx)
+                if mv is None:
+                    continue
+                results, lat, energy = ev.propose(mv)
+            except (ValueError, IndexError):
                 continue
-            results, lat, energy = ev.propose(mv)
-        except (ValueError, IndexError):
-            continue
-        t = temperature * (1.0 - it / iters)
-        new_m = metric_score(lat, energy, metric)
-        accept = new_m < cur_m or (
-            t > 0 and rng.random() < math.exp(-(new_m / cur_m - 1.0)
-                                              / max(t, 1e-9)))
-        if accept:
-            windows, cur_m = mv.windows, new_m
-            ev.accept(results)
-            if new_m < best_m:
-                best_windows, best_m = mv.windows, new_m
+            t = temperature * (1.0 - it / iters)
+            new_m = metric_score(lat, energy, metric)
+            accept = new_m < cur_m or (
+                t > 0 and rng.random() < math.exp(-(new_m / cur_m - 1.0)
+                                                  / max(t, 1e-9)))
+            if accept:
+                accepted_c.inc()
+                move_counters[mv_fn].inc()
+                windows, cur_m = mv.windows, new_m
+                ev.accept(results)
+                if new_m < best_m:
+                    best_windows, best_m = mv.windows, new_m
+            else:
+                rejected_c.inc()
     final_plans = _to_plans(best_windows)
     final = evaluate_schedule(db, mcm, final_plans, validate=True,
                               comm_model=comm_model)

@@ -16,6 +16,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 from .chiplet import MCM, make_mcm
 from .cost import (ModelWindowPlan, ScheduleResult, WindowPlan,
                    evaluate_schedule, n_interposer_links, plan_link_bytes)
@@ -89,9 +91,17 @@ class ScheduleOutcome:
 
 
 # Per-process CostDB memo.  LRU-bounded so long online traces (one distinct
-# active set per churn epoch) can't grow it without bound.
+# active set per churn epoch) can't grow it without bound.  Hit/miss
+# accounting lives in the telemetry registry (repro.obs) alongside the
+# window-memo, candidate-memo and frontier-path counters.
 _DB_CACHE: "collections.OrderedDict[tuple, CostDB]" = collections.OrderedDict()
 _DB_CACHE_MAX = 128
+_DB_HIT = obs.counter("costdb.cache_hit")
+_DB_MISS = obs.counter("costdb.cache_miss")
+_CAND_HIT = obs.counter("candidates.cache_hit")
+_CAND_MISS = obs.counter("candidates.cache_miss")
+_WIN_HIT = obs.counter("window_memo.cache_hit")
+_WIN_MISS = obs.counter("window_memo.cache_miss")
 
 
 def cost_db_key(sc: Scenario, mcm: MCM) -> tuple:
@@ -107,12 +117,17 @@ def cost_db_key(sc: Scenario, mcm: MCM) -> tuple:
 
 
 def get_cost_db(sc: Scenario, mcm: MCM) -> CostDB:
+    """Memoised ``build_cost_db`` keyed on ``cost_db_key`` (LRU-bounded)."""
     key = cost_db_key(sc, mcm)
     if key not in _DB_CACHE:
-        _DB_CACHE[key] = build_cost_db(sc, mcm.classes, mcm.pkg)
+        _DB_MISS.inc()
+        with obs.span("costdb_build", cat="scheduler", scenario=sc.name,
+                      mcm=mcm.name):
+            _DB_CACHE[key] = build_cost_db(sc, mcm.classes, mcm.pkg)
         while len(_DB_CACHE) > _DB_CACHE_MAX:
             _DB_CACHE.popitem(last=False)
     else:
+        _DB_HIT.inc()
         _DB_CACHE.move_to_end(key)
     return _DB_CACHE[key]
 
@@ -121,11 +136,15 @@ def clear_caches() -> None:
     """Drop every per-process scheduling cache (CostDB memo + path LRU).
 
     This is what the online re-scheduler's ``cold`` oracle calls before each
-    epoch so its re-plan really is a from-scratch re-schedule.
+    epoch so its re-plan really is a from-scratch re-schedule.  The
+    registry-backed cache counters (``obs.cache_stats()``) reset with the
+    caches, so hit rates always describe the caches' current lifetime.
     """
     from .paths import path_cache_clear
     _DB_CACHE.clear()
     path_cache_clear()
+    for c in (_DB_HIT, _DB_MISS, _CAND_HIT, _CAND_MISS, _WIN_HIT, _WIN_MISS):
+        c.reset()
 
 
 def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
@@ -171,21 +190,25 @@ def build_window_sets(db: CostDB, mcm: MCM, cfg: SearchConfig,
             if congestion:
                 key = key + (link_occ.tobytes(),)
             if key in memo:
+                _CAND_HIT.inc()
                 cs = memo[key]
                 sets.append(cs)
                 if congestion:
                     link_occ = link_occ + plan_link_bytes(
                         db, mcm, _greedy_best_plan(cs), prev_end)
                 continue
-        segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
-                                   k=cfg.seg_top_k, cap=cfg.seg_cap,
-                                   metric=cfg.metric)
-        cs = build_candidates(
-            db, mcm, mi, (s, e), segs, n_active=n_active,
-            prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
-            keep=cfg.keep_per_model, metric=cfg.metric,
-            frontier_cap=cfg.frontier_cap, backend=cfg.eval_backend,
-            comm_model=cfg.comm_model, link_occ=link_occ)
+            _CAND_MISS.inc()
+        with obs.span("window_build", cat="scheduler", model=mi,
+                      layers=e - s):
+            segs = top_k_segmentations(db, mcm, s, e, alloc[mi],
+                                       k=cfg.seg_top_k, cap=cfg.seg_cap,
+                                       metric=cfg.metric)
+            cs = build_candidates(
+                db, mcm, mi, (s, e), segs, n_active=n_active,
+                prev_end=prev_end.get(mi), path_cap=cfg.path_cap,
+                keep=cfg.keep_per_model, metric=cfg.metric,
+                frontier_cap=cfg.frontier_cap, backend=cfg.eval_backend,
+                comm_model=cfg.comm_model, link_occ=link_occ)
         if key is not None:
             memo[key] = cs
         sets.append(cs)
@@ -231,6 +254,17 @@ def schedule(sc: Scenario, mcm: MCM,
     if cfg.refine_iters > 0 and prev_end:
         raise NotImplementedError(
             "refine_iters does not support warm-start anchors yet")
+    with obs.span("schedule", cat="scheduler", scenario=sc.name,
+                  mcm=mcm.name, algo=cfg.algo, metric=cfg.metric):
+        return _schedule_inner(sc, mcm, cfg, db=db, prev_end=prev_end,
+                               window_memo=window_memo)
+
+
+def _schedule_inner(sc: Scenario, mcm: MCM, cfg: SearchConfig, *,
+                    db: Optional[CostDB],
+                    prev_end: Optional[dict[int, int]],
+                    window_memo: Optional[dict]) -> ScheduleOutcome:
+    """Body of ``schedule`` (split out so the whole run sits in one span)."""
     if db is None:
         db = get_cost_db(sc, mcm)
     counts = mcm.class_counts()
@@ -259,22 +293,28 @@ def schedule(sc: Scenario, mcm: MCM,
             key = (memo_base, w, tuple(sorted(
                 (mi, s, e) for mi, (s, e) in ranges.items())), vis)
         if key is not None and key in window_memo:
+            _WIN_HIT.inc()
             wr = window_memo[key]
         else:
-            engine = get_engine(cfg, seed=cfg.seed + w)
-            if hasattr(engine, "combine_window"):
-                # fused device path: PROV + SEG + candidate construction stay
-                # on host, but scoring, ordering, beam combination and top-k
-                # run as one jitted device program with a single fetch per
-                # window (engine.DeviceBeamEngine.combine_window)
-                wr = engine.combine_window(db, mcm, cfg, ranges, anchors,
-                                           metric=cfg.metric)
-            else:
-                sets = build_window_sets(db, mcm, cfg, ranges, anchors,
-                                         memo=window_memo,
-                                         memo_base=memo_base)
-                wr = engine.combine(db, mcm, sets, anchors,
-                                    metric=cfg.metric)
+            if key is not None:
+                _WIN_MISS.inc()
+            with obs.span("window_combine", cat="scheduler", window=w,
+                          models=len(ranges)):
+                engine = get_engine(cfg, seed=cfg.seed + w)
+                if hasattr(engine, "combine_window"):
+                    # fused device path: PROV + SEG + candidate construction
+                    # stay on host, but scoring, ordering, beam combination
+                    # and top-k run as one jitted device program with a
+                    # single fetch per window
+                    # (engine.DeviceBeamEngine.combine_window)
+                    wr = engine.combine_window(db, mcm, cfg, ranges, anchors,
+                                               metric=cfg.metric)
+                else:
+                    sets = build_window_sets(db, mcm, cfg, ranges, anchors,
+                                             memo=window_memo,
+                                             memo_base=memo_base)
+                    wr = engine.combine(db, mcm, sets, anchors,
+                                        metric=cfg.metric)
             if key is not None:
                 window_memo[key] = wr
         window_results.append(wr)
@@ -282,9 +322,12 @@ def schedule(sc: Scenario, mcm: MCM,
         anchors = dict(anchors)
         anchors.update(wr.result.end_chiplet)
 
-    result = evaluate_schedule(db, mcm, [wr.plan for wr in window_results],
-                               validate=True, prev_end=prev_end,
-                               comm_model=cfg.comm_model)
+    with obs.span("evaluate_schedule", cat="scheduler",
+                  windows=len(window_results)):
+        result = evaluate_schedule(db, mcm,
+                                   [wr.plan for wr in window_results],
+                                   validate=True, prev_end=prev_end,
+                                   comm_model=cfg.comm_model)
     outcome = ScheduleOutcome(scenario=sc.name, mcm=mcm.name, config=cfg,
                               result=result, windows=window_results,
                               assignment=wa, explored=explored)

@@ -21,16 +21,25 @@ it), and it counts every call.  ``sync_count`` / ``reset_sync_count`` let
 tests and benchmarks assert the sync model — e.g. that a fused
 ``algo="beam_jax"`` schedule performs exactly one fetch per window instead
 of one per (model, window) like the split pipeline.
+
+Since the telemetry layer landed, both are thin shims over the
+``launch.platform.sync_count`` counter in the process-global registry
+(``repro.obs.registry``): the PR 6 counted-sync assertions and the
+telemetry exporters read the *same* integer, so they can never disagree.
 """
 from __future__ import annotations
 
 import os
 import re
 
+from repro.obs import registry as _obs_registry
+
 __all__ = ["set_platform", "jax_enable_x64", "set_host_device_count",
            "device_fetch", "sync_count", "reset_sync_count"]
 
-_SYNC_COUNT = 0
+# The one sync counter; module-level handle so device_fetch pays a single
+# attribute increment per call.
+_SYNC = _obs_registry.counter("launch.platform.sync_count")
 
 
 def set_platform(platform: str = "cpu") -> None:
@@ -79,18 +88,21 @@ def device_fetch(tree):
     value is ready, so no separate ``block_until_ready`` is needed).  Tests
     assert sync-count invariants through ``sync_count``.
     """
-    global _SYNC_COUNT
-    _SYNC_COUNT += 1
+    _SYNC.inc()
     import jax
 
     return jax.device_get(tree)
 
 
 def sync_count() -> int:
-    """Number of ``device_fetch`` calls since the last reset."""
-    return _SYNC_COUNT
+    """Number of ``device_fetch`` calls since the last reset.
+
+    Reads the ``launch.platform.sync_count`` registry counter — the same
+    value ``repro.obs`` exports, by construction.
+    """
+    return _SYNC.value
 
 
 def reset_sync_count() -> None:
-    global _SYNC_COUNT
-    _SYNC_COUNT = 0
+    """Zero the sync counter (tests/benchmarks bracket a measured region)."""
+    _SYNC.reset()

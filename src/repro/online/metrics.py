@@ -32,6 +32,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro import obs
+
 from .simulator import SimResult
 from .slo import get_slo
 
@@ -151,6 +153,11 @@ class SLOReport:
     #                                    at equal work
     n_preemptions: int
     n_switches: int
+    # Live telemetry snapshot at report time: the ``online.*`` gauges and
+    # counters from the process-global registry (``repro.obs``), so a
+    # report carries the serving-loop state it was computed under.  Default
+    # keeps positional construction of older call sites working.
+    gauges: dict = dataclasses.field(default_factory=dict)
 
     def cls(self, name: str) -> ClassQoS:
         for c in self.per_class:
@@ -196,4 +203,6 @@ def slo_report(sim: SimResult) -> SLOReport:
         served_weight=served,
         edp_per_iteration=(base.aggregate_edp / served) if served > 0
         else float("inf"),
-        n_preemptions=sim.n_preemptions, n_switches=sim.n_switches)
+        n_preemptions=sim.n_preemptions, n_switches=sim.n_switches,
+        gauges={**obs.gauges(prefix="online."),
+                **obs.counters(prefix="online.")})

@@ -39,6 +39,7 @@ import math
 import time
 from typing import Optional
 
+from repro import obs
 from repro.core.chiplet import MCM
 from repro.core.modelzoo import get_model
 from repro.core.scheduler import (ScheduleOutcome, SearchConfig, clear_caches,
@@ -47,6 +48,12 @@ from repro.core.workload import Scenario
 
 # One running tenant: (tenant id, model name, batch).
 Tenant = tuple[int, str, int]
+
+# Whole-replan memo accounting (always-on; the window/candidate memos inside
+# ``scheduler.schedule`` have their own ``window_memo.*`` counters).
+_PLAN_HIT = obs.counter("online.replan.memo_hit")
+_PLAN_MISS = obs.counter("online.replan.memo_miss")
+_SWITCHES = obs.counter("online.reconfig.switches")
 
 
 def active_scenario(tenants: list[Tenant]) -> tuple[Scenario, list[int]]:
@@ -140,23 +147,27 @@ class Rescheduler:
         key = (sc.name, tuple(sorted(carried.items())))
         t0 = time.perf_counter()
         hit = self.mode == "warm" and key in self._plan_memo
-        if hit:
-            outcome = self._plan_memo[key]
-            self._plan_memo.move_to_end(key)
-        else:
-            if self.mode == "cold":
-                clear_caches()
-                self._window_memo.clear()
-            elif len(self._window_memo) > 20000:
-                self._window_memo.clear()   # bound memory on endless traces
-            outcome = schedule(
-                sc, self.mcm, self.cfg, prev_end=carried,
-                window_memo=(self._window_memo
-                             if self.mode == "warm" else None))
-            if self.mode == "warm":
-                self._plan_memo[key] = outcome
-                while len(self._plan_memo) > self._plan_memo_max:
-                    self._plan_memo.popitem(last=False)
+        (_PLAN_HIT if hit else _PLAN_MISS).inc()
+        with obs.span("replan", cat="online", tenants=len(tenants),
+                      mode=self.mode, memo_hit=hit):
+            if hit:
+                outcome = self._plan_memo[key]
+                self._plan_memo.move_to_end(key)
+            else:
+                if self.mode == "cold":
+                    clear_caches()
+                    self._window_memo.clear()
+                elif len(self._window_memo) > 20000:
+                    # bound memory on endless traces
+                    self._window_memo.clear()
+                outcome = schedule(
+                    sc, self.mcm, self.cfg, prev_end=carried,
+                    window_memo=(self._window_memo
+                                 if self.mode == "warm" else None))
+                if self.mode == "warm":
+                    self._plan_memo[key] = outcome
+                    while len(self._plan_memo) > self._plan_memo_max:
+                        self._plan_memo.popitem(last=False)
         rec = ReplanRecord(outcome=outcome, tenant_order=tenant_order,
                            anchors=anchors,
                            wall_s=time.perf_counter() - t0, memo_hit=hit)
@@ -263,15 +274,18 @@ class SLORescheduler:
         slo_of = slo_of or {}
         cur_score = self._score(rec, slo_of, self.cfg.metric)
         best_pat, best_rec, best_score, extra_wall = None, None, None, 0.0
-        for pat in self.patterns:
-            if pat == self.pattern:
-                continue
-            alt = self._planners[pat].replan(tenants, anchors={},
-                                             commit=False)
-            extra_wall += alt.wall_s
-            score = self._score(alt, slo_of, self.cfg.metric)
-            if best_score is None or score < best_score:
-                best_pat, best_rec, best_score = pat, alt, score
+        with obs.span("reconfig_score", cat="online",
+                      current=self.pattern,
+                      candidates=len(self.patterns) - 1):
+            for pat in self.patterns:
+                if pat == self.pattern:
+                    continue
+                alt = self._planners[pat].replan(tenants, anchors={},
+                                                 commit=False)
+                extra_wall += alt.wall_s
+                score = self._score(alt, slo_of, self.cfg.metric)
+                if best_score is None or score < best_score:
+                    best_pat, best_rec, best_score = pat, alt, score
         # epoch planning wall = current-pattern plan + every candidate
         # scored (the winner's scoring wall is already inside extra_wall;
         # a switch's commit re-plan is a memo hit costing ~0)
@@ -280,6 +294,9 @@ class SLORescheduler:
                 and best_score < cur_score * (1.0 - self.hysteresis)):
             self.switch_log.append((self.pattern, best_pat))
             self.n_switches += 1
+            _SWITCHES.inc()
+            obs.event("reconfig", cat="online", from_pattern=self.pattern,
+                      to_pattern=best_pat)
             self.pattern = best_pat
             # commit the winning plan as the new pattern's serving state
             # (memo hit: the scoring pass just planned this exact query)

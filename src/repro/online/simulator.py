@@ -61,6 +61,7 @@ import itertools
 import math
 from typing import Optional
 
+from repro import obs
 from repro.core.chiplet import MCM, make_mcm
 from repro.core.scheduler import ScheduleOutcome, SearchConfig
 
@@ -458,6 +459,8 @@ def _churn(trace: Trace, resched, policy: OnlinePolicy) -> SimResult:
     loop = _ChurnLoop(trace, resched, policy)
     active: dict[int, Tenant] = {}
     free_at = 0.0
+    active_g = obs.gauge("online.active_tenants")
+    preempt_c = obs.counter("online.preemptions")
 
     groups = [(t, list(evs)) for t, evs in
               itertools.groupby(trace.events, key=lambda e: e.t)]
@@ -480,31 +483,42 @@ def _churn(trace: Trace, resched, policy: OnlinePolicy) -> SimResult:
             else:
                 raise ValueError(f"churn trace carries {e.kind!r} event")
         tenants = sorted(active.values())
-        if tenants:
-            rec = resched.replan(tenants, slo_of=dict(loop.slo_of))
-            loop.replan_wall += rec.wall_s
-            loop.n_replans += 1
-            loop.n_hits += rec.memo_hit
-            plan = _build_plan(rec)
-            serve_start = max(free_at, t)
-            loop._last_iters = 0.0
-            loop._last_energy = 0.0
-            cut, n_pre = loop.serve(plan, serve_start, t_next,
-                                    next_departing, at_horizon)
-            free_at = cut
-            loop.epochs.append(EpochRecord(
-                t_start=t, t_end=t_next, tenants=tuple(tenants),
-                outcome=rec.outcome, tenant_order=tuple(rec.tenant_order),
-                replan_wall_s=rec.wall_s, memo_hit=rec.memo_hit,
-                iterations=loop._last_iters, energy=loop._last_energy,
-                pattern=rec.pattern, switched=rec.switched,
-                n_preempted=n_pre, serve_start=serve_start, serve_end=cut))
-        else:
-            free_at = max(free_at, t)
-            loop.epochs.append(EpochRecord(
-                t_start=t, t_end=t_next, tenants=(), outcome=None,
-                tenant_order=(), replan_wall_s=0.0, memo_hit=False,
-                iterations=0.0, energy=0.0))
+        active_g.set(len(tenants))
+        with obs.span("epoch", cat="online", epoch=k,
+                      tenants=len(tenants)):
+            if tenants:
+                rec = resched.replan(tenants, slo_of=dict(loop.slo_of))
+                loop.replan_wall += rec.wall_s
+                loop.n_replans += 1
+                loop.n_hits += rec.memo_hit
+                plan = _build_plan(rec)
+                serve_start = max(free_at, t)
+                loop._last_iters = 0.0
+                loop._last_energy = 0.0
+                with obs.span("serve", cat="online",
+                              boundary=policy.boundary):
+                    cut, n_pre = loop.serve(plan, serve_start, t_next,
+                                            next_departing, at_horizon)
+                free_at = cut
+                if n_pre:
+                    preempt_c.inc(n_pre)
+                    obs.event("preempt", cat="online", epoch=k,
+                              tenants_deferred=n_pre)
+                loop.epochs.append(EpochRecord(
+                    t_start=t, t_end=t_next, tenants=tuple(tenants),
+                    outcome=rec.outcome,
+                    tenant_order=tuple(rec.tenant_order),
+                    replan_wall_s=rec.wall_s, memo_hit=rec.memo_hit,
+                    iterations=loop._last_iters, energy=loop._last_energy,
+                    pattern=rec.pattern, switched=rec.switched,
+                    n_preempted=n_pre, serve_start=serve_start,
+                    serve_end=cut))
+            else:
+                free_at = max(free_at, t)
+                loop.epochs.append(EpochRecord(
+                    t_start=t, t_end=t_next, tenants=(), outcome=None,
+                    tenant_order=(), replan_wall_s=0.0, memo_hit=False,
+                    iterations=0.0, energy=0.0))
     return SimResult(trace=trace, mode=resched.mode, epochs=loop.epochs,
                      frames=[], latency_samples=loop.samples,
                      total_energy=loop.total_energy, busy_s=loop.busy,
