@@ -1,0 +1,19 @@
+"""Standalone scarlint entry point (repo checkout, no install needed).
+
+Equivalent to ``python -m repro.analysis.lint``; see that module's help.
+Usage: python scripts/scarlint.py [paths...] [options]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+from repro.analysis.lint.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,2 +1,3 @@
 from . import hlo_cost
+from . import lint
 from . import roofline

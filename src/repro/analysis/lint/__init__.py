@@ -1,0 +1,37 @@
+"""scarlint — AST-based invariant linter for the SCAR pipeline.
+
+The repo's cross-backend guarantees (one cost model priced identically by
+the numpy oracle, jax_ref, Pallas and the fused device program; counted
+host syncs; seeded RNG; quantised tie-breaks; jit static hygiene) are
+conventions differential tests only catch *after* a violation ships.
+scarlint machine-checks them at the source level:
+
+* **SL001** xp-genericity — functions taking an ``xp`` namespace parameter
+  may not call bare ``np.``/``jnp.`` math;
+* **SL002** sync discipline — ``core/``/``kernels/`` fetch device values
+  only through the counted ``launch.platform.device_fetch``;
+* **SL003** seeded RNG — no global-stream randomness inside ``src/repro/``;
+* **SL004** quantised tie-breaks — score orderings round through
+  ``core.quantize`` before ``argsort``/``lexsort``/``lax.top_k``;
+* **SL005** jit recompile hazards — ``static_argnames`` call sites must
+  not receive f-strings or unhashable containers.
+
+CLI: ``python -m repro.analysis.lint src/repro`` (or
+``scripts/scarlint.py``).  Inline suppression:
+``# scarlint: ignore[SL001] -- reason``.  Grandfathered violations live in
+the committed ``scarlint-baseline.json``; see ``docs/invariants.md`` for
+the contract catalogue with worked examples.
+"""
+from __future__ import annotations
+
+from .baseline import BASELINE_FILENAME, Baseline, find_baseline_file
+from .context import ModuleContext
+from .findings import Finding
+from .runner import LintReport, lint_paths, lint_source
+from .rules import (JitSig, ProjectIndex, Rule, default_rules, register,
+                    rule_catalog)
+
+__all__ = ["BASELINE_FILENAME", "Baseline", "Finding", "JitSig",
+           "LintReport", "ModuleContext", "ProjectIndex", "Rule",
+           "default_rules", "find_baseline_file", "lint_paths",
+           "lint_source", "register", "rule_catalog"]

@@ -1,0 +1,113 @@
+"""Grandfathered-violation baseline: load, match, write, drift detection.
+
+The baseline is a committed JSON file (``scarlint-baseline.json`` at the
+repo root) listing known violations the linter tolerates so a new rule can
+land strict-by-default without blocking on a full cleanup.  Entries are
+fingerprints — ``(rule, path, snippet)`` with a count — not line numbers,
+so they survive unrelated edits that shift code around.
+
+Matching is a multiset decrement: each finding consumes at most one
+baseline slot.  Whatever remains afterwards is *stale* (debt that was paid
+down or code that was deleted); CI runs with ``--strict-baseline`` so
+drift in either direction fails the build and the committed file always
+mirrors reality.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+from typing import Iterable
+
+from .findings import Finding
+
+__all__ = ["Baseline", "BASELINE_FILENAME", "find_baseline_file"]
+
+BASELINE_FILENAME = "scarlint-baseline.json"
+
+_Key = tuple[str, str, str]                    # (rule, path, snippet)
+
+
+def find_baseline_file(start: Path) -> Path | None:
+    """Nearest ``scarlint-baseline.json`` at or above ``start``."""
+    cur = start if start.is_dir() else start.parent
+    for candidate in [cur, *cur.parents]:
+        p = candidate / BASELINE_FILENAME
+        if p.is_file():
+            return p
+    return None
+
+
+class Baseline:
+    """Multiset of grandfathered finding fingerprints."""
+
+    def __init__(self, entries: Counter[_Key] | None = None) -> None:
+        self.entries: Counter[_Key] = Counter() if entries is None else entries
+
+    # ------------------------------------------------------------------
+    # construction / io
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_findings(cls, findings: Iterable[Finding]) -> "Baseline":
+        """Baseline covering every non-suppressed finding given."""
+        c: Counter[_Key] = Counter()
+        for f in findings:
+            if not f.suppressed:
+                c[f.fingerprint] += 1
+        return cls(c)
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        """Parse a baseline file (raises ``ValueError`` on a bad schema)."""
+        with open(path) as fh:
+            data = json.load(fh)
+        if not isinstance(data, dict) or "entries" not in data:
+            raise ValueError(f"{path}: not a scarlint baseline "
+                             "(missing 'entries')")
+        c: Counter[_Key] = Counter()
+        for e in data["entries"]:
+            key = (str(e["rule"]), str(e["path"]), str(e["snippet"]))
+            c[key] += int(e.get("count", 1))
+        return cls(c)
+
+    def save(self, path: Path) -> None:
+        """Write the baseline deterministically (sorted, one entry/key)."""
+        entries = [
+            {"rule": rule, "path": p, "snippet": snippet, "count": n}
+            for (rule, p, snippet), n in sorted(self.entries.items())
+        ]
+        payload = {"version": 1, "tool": "scarlint", "entries": entries}
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=False)
+            fh.write("\n")
+
+    # ------------------------------------------------------------------
+    # matching
+    # ------------------------------------------------------------------
+
+    def apply(self, findings: list[Finding]
+              ) -> tuple[list[Finding], list[dict[str, object]]]:
+        """Mark baseline-covered findings; report stale leftover entries.
+
+        Returns ``(findings, stale)`` where ``findings`` has
+        ``baselined=True`` on every matched record and ``stale`` lists the
+        baseline entries (with remaining counts) no current finding
+        consumed — baseline drift the strict mode turns into a failure.
+        """
+        remaining = Counter(self.entries)
+        out: list[Finding] = []
+        for f in findings:
+            if not f.suppressed and remaining.get(f.fingerprint, 0) > 0:
+                remaining[f.fingerprint] -= 1
+                out.append(f.with_flags(baselined=True))
+            else:
+                out.append(f)
+        stale = [
+            {"rule": rule, "path": p, "snippet": snippet, "count": n}
+            for (rule, p, snippet), n in sorted(remaining.items()) if n > 0
+        ]
+        return out, stale
+
+    def __len__(self) -> int:
+        return sum(self.entries.values())

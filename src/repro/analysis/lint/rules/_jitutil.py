@@ -1,0 +1,135 @@
+"""Shared detection of jitted callables with ``static_argnames``.
+
+Recognises the three jit-wrapping idioms the repo uses:
+
+* ``@partial(jax.jit, static_argnames=(...))`` decorating a ``def``
+  (``core.device_search.protocol_program`` / ``fused_program``);
+* ``name = partial(jax.jit, static_argnames=(...))(inner)``
+  (``kernels.scar_eval.ops.evaluate``,
+  ``kernels.scar_search.ops.conflict_counts``);
+* ``name = jax.jit(inner, static_argnames=(...))``.
+
+Used by SL005 (recompile hazards at call sites) and SL002 (host fetches of
+jitted-call results must route through ``launch.platform.device_fetch``).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..context import ModuleContext
+from .base import JitSig
+
+__all__ = ["collect_jitted", "is_jax_jit", "is_partial_jax_jit"]
+
+
+def _const_str_tuple(node: ast.AST) -> tuple[str, ...] | None:
+    """Extract a tuple of strings from a static_argnames value node."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: list[str] = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None
+            out.append(elt.value)
+        return tuple(out)
+    return None
+
+
+def is_jax_jit(ctx: ModuleContext, node: ast.AST) -> bool:
+    """Does ``node`` resolve to ``jax.jit``?"""
+    return ctx.resolve(node) == "jax.jit"
+
+
+def is_partial_jax_jit(ctx: ModuleContext,
+                       call: ast.Call) -> tuple[str, ...] | None:
+    """``partial(jax.jit, static_argnames=...)`` -> the static names.
+
+    Returns None when ``call`` is not that shape or carries no
+    ``static_argnames``; an empty tuple means partial-of-jit with no
+    statics (recorded so SL002 still sees the callable as jitted).
+    """
+    name = ctx.call_name(call)
+    if name not in ("functools.partial", "partial"):
+        return None
+    if not call.args or not is_jax_jit(ctx, call.args[0]):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            return _const_str_tuple(kw.value) or ()
+    return ()
+
+
+def _jit_call_statics(ctx: ModuleContext,
+                      call: ast.Call) -> tuple[str, ...] | None:
+    """``jax.jit(..., static_argnames=...)`` -> static names (or None)."""
+    if not is_jax_jit(ctx, call.func):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            return _const_str_tuple(kw.value) or ()
+    return ()
+
+
+def _positional_params(fn: ast.FunctionDef | ast.AsyncFunctionDef
+                       ) -> tuple[str, ...]:
+    return tuple(a.arg for a in fn.args.posonlyargs + fn.args.args)
+
+
+def collect_jitted(ctx: ModuleContext) -> dict[str, JitSig]:
+    """Local name -> jit signature for every jit idiom visible in ``ctx``."""
+    # function defs by name, for resolving `jitted = wrap(inner_def)` params
+    defs: dict[str, ast.FunctionDef | ast.AsyncFunctionDef] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+
+    out: dict[str, JitSig] = {}
+
+    def record(name: str, statics: tuple[str, ...],
+               params: tuple[str, ...] | None) -> None:
+        out[name] = JitSig(qualname=f"{ctx.module_name}.{name}",
+                           static_names=statics, params=params)
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    if is_jax_jit(ctx, dec):           # bare @jax.jit
+                        record(node.name, (), _positional_params(node))
+                    continue
+                statics = (is_partial_jax_jit(ctx, dec)
+                           if not is_jax_jit(ctx, dec.func)
+                           else _jit_call_statics(ctx, dec))
+                if statics is not None:
+                    record(node.name, statics, _positional_params(node))
+        elif isinstance(node, ast.Assign):
+            if len(node.targets) != 1 or not isinstance(node.targets[0],
+                                                        ast.Name):
+                continue
+            target = node.targets[0].id
+            value = node.value
+            if not isinstance(value, ast.Call):
+                continue
+            # name = jax.jit(inner, static_argnames=...)
+            statics = _jit_call_statics(ctx, value)
+            if statics is not None:
+                params: tuple[str, ...] | None = None
+                if value.args and isinstance(value.args[0], ast.Name):
+                    inner = defs.get(value.args[0].id)
+                    if inner is not None:
+                        params = _positional_params(inner)
+                record(target, statics, params)
+                continue
+            # name = partial(jax.jit, static_argnames=...)(inner)
+            if isinstance(value.func, ast.Call):
+                statics = is_partial_jax_jit(ctx, value.func)
+                if statics is not None:
+                    params = None
+                    if value.args and isinstance(value.args[0], ast.Name):
+                        inner = defs.get(value.args[0].id)
+                        if inner is not None:
+                            params = _positional_params(inner)
+                    record(target, statics, params)
+    return out

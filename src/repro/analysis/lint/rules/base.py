@@ -1,0 +1,107 @@
+"""Rule plugin API: base class, registry, cross-module project index.
+
+A rule subclasses ``Rule``, sets ``rule_id``/``title`` and implements
+``check(ctx, project)``.  The runner drives two passes over every module:
+
+1. ``collect(ctx, project)`` — optional; record cross-module facts into
+   the shared ``ProjectIndex`` (e.g. which callables are jitted with
+   ``static_argnames``, so call sites in *other* files can be checked);
+2. ``check(ctx, project)`` — yield ``Finding`` records.
+
+Registration is declarative: decorate the class with ``@register`` and it
+participates in every default run; ``default_rules()`` instantiates the
+registry sorted by rule id so output ordering is stable.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import ClassVar, Iterator, Type, TypeVar
+
+from ..context import ModuleContext
+from ..findings import Finding, fingerprint_snippet
+
+__all__ = ["JitSig", "ProjectIndex", "Rule", "register", "default_rules",
+           "rule_catalog"]
+
+
+@dataclass(frozen=True)
+class JitSig:
+    """One jitted callable with static arguments, as seen in source."""
+
+    qualname: str                       # module.name it is defined under
+    static_names: tuple[str, ...]       # static_argnames entries
+    params: tuple[str, ...] | None      # positional params when resolvable
+
+
+@dataclass
+class ProjectIndex:
+    """Facts shared across modules between the collect and check passes."""
+
+    # canonical qualname -> jit signature (filled by SL005's collect pass,
+    # also consumed by SL002 to recognise jitted-call results)
+    jitted: dict[str, JitSig] = field(default_factory=dict)
+
+    def jitted_leaves(self) -> dict[str, JitSig]:
+        """Last-component view (``evaluate`` -> sig) for import matching."""
+        return {q.rsplit(".", 1)[-1]: sig for q, sig in self.jitted.items()}
+
+
+class Rule:
+    """Base class for scarlint rules."""
+
+    rule_id: ClassVar[str] = "SL000"
+    title: ClassVar[str] = "abstract rule"
+
+    def applies_to(self, ctx: ModuleContext) -> bool:
+        """Whether this rule scans ``ctx`` at all (path-scoped rules)."""
+        return True
+
+    def collect(self, ctx: ModuleContext, project: ProjectIndex) -> None:
+        """First pass: record cross-module facts (default: nothing)."""
+
+    def check(self, ctx: ModuleContext,
+              project: ProjectIndex) -> Iterator[Finding]:
+        """Second pass: yield findings for ``ctx``."""
+        raise NotImplementedError
+        yield  # pragma: no cover - makes this a generator for type-checkers
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+
+    def finding(self, ctx: ModuleContext, node: ast.AST,
+                message: str) -> Finding:
+        """Build a ``Finding`` anchored at ``node`` in ``ctx``."""
+        lineno = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(
+            rule=self.rule_id,
+            path=ctx.rel_path,
+            line=lineno,
+            col=col,
+            message=message,
+            snippet=fingerprint_snippet(ctx.line_text(lineno)),
+        )
+
+
+_R = TypeVar("_R", bound=Type[Rule])
+_REGISTRY: dict[str, Type[Rule]] = {}
+
+
+def register(cls: _R) -> _R:
+    """Class decorator adding a rule to the default registry."""
+    if cls.rule_id in _REGISTRY:  # pragma: no cover - import-time guard
+        raise ValueError(f"duplicate rule id {cls.rule_id}")
+    _REGISTRY[cls.rule_id] = cls
+    return cls
+
+
+def default_rules() -> list[Rule]:
+    """Fresh instances of every registered rule, sorted by rule id."""
+    return [_REGISTRY[rid]() for rid in sorted(_REGISTRY)]
+
+
+def rule_catalog() -> dict[str, str]:
+    """``rule_id -> title`` for ``--list-rules`` and docs."""
+    return {rid: cls.title for rid, cls in sorted(_REGISTRY.items())}

@@ -1,0 +1,120 @@
+"""SL005 — jit recompile hazards at visible call sites.
+
+``static_argnames`` turns an argument into part of the jit cache key:
+every *distinct* value compiles a new program.  The repo's warm paths live
+on small static keys (mode flags, package configs, bucketed shapes —
+``kernels.scar_eval.ops.evaluate``, ``core.device_search``); passing an
+f-string, or a dict/list/set (unhashable — a ``TypeError`` at call time,
+or an effectively-unbounded cache key once hashed via tupling), through a
+static parameter silently turns the "compile once per bucket" contract
+into compile-per-call.
+
+The rule checks call sites it can *see*: calls to callables collected in
+the project-wide pass (decorated defs, ``partial(jax.jit, ...)`` wrappers,
+``jax.jit(...)`` assignments — including ones imported from other scanned
+modules) where a static-named argument receives an f-string, a
+dict/list/set literal or comprehension, or a ``dict()``/``list()``/
+``set()`` constructor call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..context import ModuleContext
+from ..findings import Finding
+from .base import JitSig, ProjectIndex, Rule, register
+from ._jitutil import collect_jitted
+
+_BAD_LITERALS: dict[type, str] = {
+    ast.JoinedStr: "an f-string (unbounded cache-key cardinality)",
+    ast.Dict: "a dict literal (unhashable)",
+    ast.List: "a list literal (unhashable)",
+    ast.Set: "a set literal (unhashable)",
+    ast.DictComp: "a dict comprehension (unhashable)",
+    ast.ListComp: "a list comprehension (unhashable)",
+    ast.SetComp: "a set comprehension (unhashable)",
+    ast.GeneratorExp: "a generator (unhashable)",
+}
+_BAD_CONSTRUCTORS = ("dict", "list", "set")
+
+
+def _bad_value(node: ast.AST) -> str | None:
+    for typ, why in _BAD_LITERALS.items():
+        if isinstance(node, typ):
+            return why
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in _BAD_CONSTRUCTORS):
+        return f"a {node.func.id}() value (unhashable)"
+    return None
+
+
+@register
+class JitStaticsRule(Rule):
+    """Static jit arguments must stay hashable and low-cardinality."""
+
+    rule_id = "SL005"
+    title = ("static_argnames call sites must not receive f-strings or "
+             "unhashable containers (recompile-per-call)")
+
+    def collect(self, ctx: ModuleContext, project: ProjectIndex) -> None:
+        for sig in collect_jitted(ctx).values():
+            project.jitted[sig.qualname] = sig
+
+    # ------------------------------------------------------------------
+
+    def _resolve_sig(self, ctx: ModuleContext, call: ast.Call,
+                     local: dict[str, JitSig],
+                     project: ProjectIndex) -> JitSig | None:
+        if isinstance(call.func, ast.Name) and call.func.id in local:
+            return local[call.func.id]
+        name = ctx.call_name(call)
+        if name is None:
+            return None
+        if name in project.jitted:
+            return project.jitted[name]
+        if name.startswith("repro."):
+            # re-export tolerance: `from repro.kernels.scar_eval import
+            # evaluate` vs the definition site `...scar_eval.ops.evaluate`
+            leaf = name.rsplit(".", 1)[-1]
+            cand = project.jitted_leaves().get(leaf)
+            if cand is not None and cand.qualname.startswith("repro."):
+                return cand
+        return None
+
+    def check(self, ctx: ModuleContext,
+              project: ProjectIndex) -> Iterator[Finding]:
+        local = collect_jitted(ctx)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            sig = self._resolve_sig(ctx, node, local, project)
+            if sig is None or not sig.static_names:
+                continue
+            statics = set(sig.static_names)
+            for kw in node.keywords:
+                if kw.arg is None or kw.arg not in statics:
+                    continue
+                why = _bad_value(kw.value)
+                if why is not None:
+                    yield self.finding(
+                        ctx, node,
+                        f"static argument '{kw.arg}' of jitted "
+                        f"'{sig.qualname}' receives {why} — every distinct "
+                        "value recompiles; pass a hashable low-cardinality "
+                        "key (tuple/str/int) instead")
+            if sig.params:
+                for i, arg in enumerate(node.args):
+                    if isinstance(arg, ast.Starred) or i >= len(sig.params):
+                        break
+                    pname = sig.params[i]
+                    if pname not in statics:
+                        continue
+                    why = _bad_value(arg)
+                    if why is not None:
+                        yield self.finding(
+                            ctx, node,
+                            f"static argument '{pname}' of jitted "
+                            f"'{sig.qualname}' receives {why} — every "
+                            "distinct value recompiles; pass a hashable "
+                            "low-cardinality key instead")

@@ -1,0 +1,129 @@
+"""SL004 — score orderings must flow through the shared quantiser.
+
+Cross-backend plan identity hinges on one rule (PR 4/PR 6): before any
+*ordering* decision, scores are rounded to ``core.quantize.SCORE_SIG``
+significant digits (``quantize_scores`` on host, ``quantize_scores_jax``
+in-jit) so float32 device scores and float64 host scores land in the same
+bucket and ties fall back to stable enumeration order.  An ``argsort`` /
+``lexsort`` / ``lax.top_k`` over *raw* scores reintroduces
+backend-dependent tie-breaks — plans stay "correct" but stop being
+bit-identical across numpy / jax_ref / pallas / fused.
+
+Heuristic: the sort operand (or, one assignment step back, what it was
+computed from) mentions an identifier whose name contains a ``score`` /
+``fitness`` word-segment, and no ``quantize_scores`` /
+``quantize_scores_jax`` call appears in that derivation.  Orderings that
+are *intentionally* unquantised (pure-f64 host paths mirrored exactly by
+the device protocol program) carry ``# scarlint: ignore[SL004]`` with the
+reason.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from ..context import ModuleContext
+from ..findings import Finding
+from .base import ProjectIndex, Rule, register
+
+SORTERS = frozenset({
+    "numpy.argsort", "numpy.lexsort",
+    "jax.numpy.argsort", "jax.numpy.lexsort",
+    "jax.lax.top_k",
+})
+QUANTIZERS = frozenset({"quantize_scores", "quantize_scores_jax"})
+
+_SCOREISH = re.compile(r"(?:^|_)(?:score|scores|fitness)(?:_|$)")
+
+
+def _tokens(node: ast.AST) -> set[str]:
+    out: set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def _has_quantize(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            f = n.func
+            leaf = (f.id if isinstance(f, ast.Name)
+                    else f.attr if isinstance(f, ast.Attribute) else None)
+            if leaf in QUANTIZERS:
+                return True
+    return False
+
+
+def _scoreish(tokens: set[str]) -> bool:
+    return any(_SCOREISH.search(t.lower()) for t in tokens)
+
+
+def _scopes(tree: ast.Module) -> list[ast.AST]:
+    out: list[ast.AST] = [tree]
+    out.extend(n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)))
+    return out
+
+
+@register
+class QuantizedTiesRule(Rule):
+    """argsort/lexsort/top_k over score-derived operands must quantise."""
+
+    rule_id = "SL004"
+    title = ("score/fitness orderings must round through core.quantize "
+             "before argsort/lexsort/top_k")
+
+    def check(self, ctx: ModuleContext,
+              project: ProjectIndex) -> Iterator[Finding]:
+        seen: set[tuple[int, int]] = set()
+        for scope in _scopes(ctx.tree):
+            # name -> assigned value expressions within this scope
+            assigns: dict[str, list[ast.AST]] = {}
+            for node in ast.walk(scope):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)):
+                    assigns.setdefault(node.targets[0].id,
+                                       []).append(node.value)
+            for node in ast.walk(scope):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = ctx.call_name(node)
+                if name not in SORTERS:
+                    continue
+                key = (node.lineno, node.col_offset)
+                if key in seen:
+                    continue
+                operands: list[ast.AST] = list(node.args)
+                operands.extend(kw.value for kw in node.keywords
+                                if kw.arg not in ("axis", "kind", "order"))
+                if any(_has_quantize(op) for op in operands):
+                    continue
+                tokens: set[str] = set()
+                quantized = False
+                for op in operands:
+                    tokens |= _tokens(op)
+                    # one dataflow step: expand plain-name operands through
+                    # their in-scope assignments
+                    for n in ast.walk(op):
+                        if not isinstance(n, ast.Name):
+                            continue
+                        for value in assigns.get(n.id, ()):
+                            if _has_quantize(value):
+                                quantized = True
+                            else:
+                                tokens |= _tokens(value)
+                if quantized or not _scoreish(tokens):
+                    continue
+                seen.add(key)
+                leaf = name.rsplit(".", 1)[-1] if name else "sort"
+                yield self.finding(
+                    ctx, node,
+                    f"'{name}' orders a score-derived operand without the "
+                    "shared quantiser — round with core.quantize."
+                    "quantize_scores{_jax}(..., sig=SCORE_SIG) before the "
+                    f"{leaf} so backend choice cannot reorder ties")

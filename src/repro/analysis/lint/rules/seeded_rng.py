@@ -1,0 +1,72 @@
+"""SL003 — seeded, explicit RNG only inside ``src/repro/``.
+
+Every stochastic component in the pipeline — the EA/anneal engines, the
+online trace generators — is reproducible because randomness flows from an
+explicit ``np.random.default_rng(seed)`` ``Generator`` (``engine.py``,
+``online/traces.py``).  Module-level ``np.random.<fn>`` calls mutate the
+hidden *global* bit stream (any import-order change reshuffles every
+downstream draw), and the stdlib ``random`` module is a second, unseeded
+stream the repo's determinism contracts never account for.
+
+Allowed: ``default_rng`` / explicit ``Generator`` and bit-generator
+construction (``SeedSequence``, ``PCG64``, ``Philox`` ...), and
+``jax.random`` (key-based, explicit by construction — not numpy.random).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..context import ModuleContext
+from ..findings import Finding
+from .base import ProjectIndex, Rule, register
+
+# explicit-seeding constructors on numpy.random that are fine to call
+ALLOWED_NP_RANDOM = frozenset({
+    "BitGenerator", "Generator", "MT19937", "PCG64", "PCG64DXSM", "Philox",
+    "SFC64", "SeedSequence", "default_rng",
+})
+
+
+@register
+class SeededRngRule(Rule):
+    """Forbid global-stream RNG: np.random module fns + stdlib random."""
+
+    rule_id = "SL003"
+    title = ("randomness must come from np.random.default_rng(seed) / "
+             "explicit Generators, never global streams")
+
+    def check(self, ctx: ModuleContext,
+              project: ProjectIndex) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "random" or alias.name.startswith(
+                            "random."):
+                        yield self.finding(
+                            ctx, node,
+                            "stdlib 'random' is an unseeded global stream — "
+                            "use np.random.default_rng(seed)")
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0 and node.module == "random":
+                    yield self.finding(
+                        ctx, node,
+                        "stdlib 'random' is an unseeded global stream — "
+                        "use np.random.default_rng(seed)")
+            elif isinstance(node, ast.Call):
+                name = ctx.call_name(node)
+                if name is None:
+                    continue
+                if name.startswith("numpy.random."):
+                    leaf = name.rsplit(".", 1)[-1]
+                    if leaf not in ALLOWED_NP_RANDOM:
+                        yield self.finding(
+                            ctx, node,
+                            f"'{name}' draws from the hidden global numpy "
+                            "stream — construct a Generator via "
+                            "np.random.default_rng(seed) and draw from it")
+                elif name.startswith("random.") and name.count(".") == 1:
+                    yield self.finding(
+                        ctx, node,
+                        f"stdlib '{name}' is unseeded global-stream RNG — "
+                        "use an explicit seeded Generator")

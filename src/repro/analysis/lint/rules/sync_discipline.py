@@ -1,0 +1,162 @@
+"""SL002 — counted-sync discipline in ``core/`` and ``kernels/``.
+
+PR 6's fused device search asserts *exactly one* host sync per window, and
+every sync-count invariant in the tests reads the same
+``launch.platform.sync_count`` registry counter that
+``launch.platform.device_fetch`` increments.  A raw ``jax.device_get``, a
+``.block_until_ready()``, an ``.item()``, or an ``np.asarray``/``float``
+applied straight to a jitted callable's return value is an *uncounted*
+device->host transfer: the plan stays correct but the sync accounting — and
+with it the O(1)-syncs-per-window contract — silently forks.
+
+Scope: files under ``src/repro/core/`` and ``src/repro/kernels/`` (the
+layers that touch traced values).  ``launch/platform.py`` itself is outside
+the scope by construction — it is the sanctioned implementation site.
+
+Jitted callables are recognised both module-locally (decorated defs,
+``partial(jax.jit, ...)`` wrappers) and across modules through the project
+index SL005's collect pass fills, so ``from repro.kernels.scar_eval import
+evaluate`` followed by ``np.asarray(evaluate(...))`` is caught in
+``core/evaluator.py`` even though the jit wrapper lives elsewhere.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import Iterator
+
+from ..context import ModuleContext
+from ..findings import Finding
+from .base import JitSig, ProjectIndex, Rule, register
+from ._jitutil import collect_jitted
+
+_FORBIDDEN_CALLS = {
+    "jax.device_get": "jax.device_get",
+}
+_FORBIDDEN_METHODS = ("block_until_ready", "item")
+_WRAPPER_BUILTINS = ("float", "int")
+_WRAPPER_CALLS = ("numpy.asarray", "numpy.array")
+
+_SCOPE_DIRS = ("core", "kernels")
+
+
+def _scopes(ctx: ModuleContext) -> list[ast.AST]:
+    """Module plus every function def — the per-scope analysis units."""
+    out: list[ast.AST] = [ctx.tree]
+    out.extend(n for n in ast.walk(ctx.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)))
+    return out
+
+
+@register
+class SyncDisciplineRule(Rule):
+    """Device->host transfers must route through the counted fetch."""
+
+    rule_id = "SL002"
+    title = ("core/ and kernels/ must fetch device values through "
+             "launch.platform.device_fetch (counted syncs)")
+
+    def applies_to(self, ctx: ModuleContext) -> bool:
+        parts = PurePosixPath(ctx.rel_path.replace("\\", "/")).parts
+        return any(d in parts for d in _SCOPE_DIRS)
+
+    # ------------------------------------------------------------------
+
+    def _jitted_names(self, ctx: ModuleContext,
+                      project: ProjectIndex) -> dict[str, JitSig]:
+        """Local names in ``ctx`` that evaluate to jitted callables."""
+        names = dict(collect_jitted(ctx))
+        leaves = project.jitted_leaves()
+        for local, canonical in ctx.aliases.items():
+            if not canonical.startswith("repro."):
+                continue
+            sig = project.jitted.get(canonical)
+            if sig is None:
+                leaf = canonical.rsplit(".", 1)[-1]
+                cand = leaves.get(leaf)
+                # re-export tolerance: `from repro.kernels.scar_eval import
+                # evaluate` matches `...scar_eval.ops.evaluate`
+                if cand is not None and cand.qualname.startswith(
+                        canonical.rsplit(".", 1)[0]):
+                    sig = cand
+            if sig is not None:
+                names[local] = sig
+        return names
+
+    def _is_jitted_call(self, ctx: ModuleContext, node: ast.AST,
+                        jitted: dict[str, JitSig],
+                        project: ProjectIndex) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        if isinstance(node.func, ast.Name) and node.func.id in jitted:
+            return True
+        name = ctx.call_name(node)
+        if name is None:
+            return False
+        if name in project.jitted:
+            return True
+        return (name.startswith("repro.")
+                and name.rsplit(".", 1)[-1] in project.jitted_leaves())
+
+    # ------------------------------------------------------------------
+
+    def check(self, ctx: ModuleContext,
+              project: ProjectIndex) -> Iterator[Finding]:
+        jitted = self._jitted_names(ctx, project)
+
+        # direct forbidden fetches, anywhere in the module
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ctx.call_name(node)
+            if name in _FORBIDDEN_CALLS:
+                yield self.finding(
+                    ctx, node,
+                    f"raw '{name}' — route device->host transfers through "
+                    "launch.platform.device_fetch so the sync is counted")
+                continue
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _FORBIDDEN_METHODS
+                    and not node.args and not node.keywords):
+                yield self.finding(
+                    ctx, node,
+                    f"'.{node.func.attr}()' is an uncounted host sync — "
+                    "materialise via launch.platform.device_fetch instead")
+
+        # wrappers applied to jitted-call results, per scope (a dedupe set
+        # guards against the module walk revisiting function bodies)
+        seen: set[tuple[int, int]] = set()
+        for scope in _scopes(ctx):
+            jit_locals: set[str] = set()
+            for node in ast.walk(scope):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and self._is_jitted_call(ctx, node.value, jitted,
+                                                 project)):
+                    jit_locals.add(node.targets[0].id)
+            for node in ast.walk(scope):
+                if not isinstance(node, ast.Call) or not node.args:
+                    continue
+                if (node.lineno, node.col_offset) in seen:
+                    continue
+                fname = ctx.call_name(node)
+                is_wrapper = fname in _WRAPPER_CALLS or (
+                    isinstance(node.func, ast.Name)
+                    and node.func.id in _WRAPPER_BUILTINS)
+                if not is_wrapper:
+                    continue
+                arg = node.args[0]
+                hits_jit = self._is_jitted_call(ctx, arg, jitted,
+                                                project) or (
+                    isinstance(arg, ast.Name) and arg.id in jit_locals)
+                if hits_jit:
+                    seen.add((node.lineno, node.col_offset))
+                    label = fname or (node.func.id
+                                      if isinstance(node.func, ast.Name)
+                                      else "?")
+                    yield self.finding(
+                        ctx, node,
+                        f"'{label}(...)' on a jitted callable's result is "
+                        "an uncounted device->host sync — fetch through "
+                        "launch.platform.device_fetch first")

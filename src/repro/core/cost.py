@@ -578,6 +578,35 @@ def comm_from_parts(xp, pkg, cols: int, cpos, seg_w, seg_last_out, n_segs,
     return ip_lat, ip_e, op_lat, op_e
 
 
+def _span_bottleneck_mask(n: int) -> np.ndarray:
+    """Static ``[n, n, n-1]`` bool mask of 1-D span membership.
+
+    Entry ``[a, b, k]`` is True iff consecutive-link ``k`` lies on the
+    1-D span ``a -> b``.  Pure mesh geometry over python ints — always
+    a host-side numpy constant, never traced, which is why this lives
+    outside the xp-generic ``route_wait_tables`` body (scarlint SL001).
+    """
+    a = np.arange(n)
+    lo = np.minimum(a[:, None], a[None, :])[..., None]
+    hi = np.maximum(a[:, None], a[None, :])[..., None]
+    span = np.arange(n - 1)[None, None, :]
+    return (span >= lo) & (span < hi)
+
+
+def _mesh_route_index(rows: int, cols: int
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Static per-chiplet ``(row, col, dram_edge_col)`` index arrays.
+
+    ``dram_edge_col`` is the nearer of columns 0 / ``cols - 1`` (ties to
+    0), matching ``dram_route_links``.  Host-side constants for the
+    xp-generic ``route_wait_tables`` gathers.
+    """
+    idx = np.arange(rows * cols)
+    r, c = idx // cols, idx % cols
+    edge = np.where(c <= cols - 1 - c, 0, cols - 1)
+    return r, c, edge
+
+
 def route_wait_tables(xp, link_cost, rows: int, cols: int):
     """Bottleneck-wait lookup tables over all XY routes of a mesh.
 
@@ -585,42 +614,33 @@ def route_wait_tables(xp, link_cost, rows: int, cols: int):
     (background bytes / link bandwidth, h then v link ids).  Returns
     ``(wait_pair, wait_dram)``: ``wait_pair[s, d]`` is the max link cost
     on the XY route ``s -> d`` (``[n, n]``), ``wait_dram[c]`` the max on
-    chiplet ``c``'s DRAM-port route (``[n]``).  Built from static range
-    masks so the same code runs host-side (numpy float64 oracle) and
-    inside the jitted fused search, where ``link_cost`` is a traced
-    float32 array; exactly matches ``_route_wait`` over
-    ``xy_route_links`` / ``dram_route_links``.
+    chiplet ``c``'s DRAM-port route (``[n]``).  Built from the static
+    range masks of ``_span_bottleneck_mask`` / ``_mesh_route_index`` so
+    the same code runs host-side (numpy float64 oracle) and inside the
+    jitted fused search, where ``link_cost`` is a traced float32 array;
+    exactly matches ``_route_wait`` over ``xy_route_links`` /
+    ``dram_route_links``.
     """
     n_h = rows * (cols - 1)
     if cols > 1:
         h = link_cost[:n_h].reshape(rows, cols - 1)
-        a = np.arange(cols)
-        lo = np.minimum(a[:, None], a[None, :])[..., None]
-        hi = np.maximum(a[:, None], a[None, :])[..., None]
-        span = np.arange(cols - 1)[None, None, :]
-        mask = (span >= lo) & (span < hi)            # [cols, cols, cols-1]
+        mask = _span_bottleneck_mask(cols)           # [cols, cols, cols-1]
         hmax = xp.max(xp.where(mask[None], h[:, None, None, :], 0.0),
                       axis=-1)                       # [rows, cols, cols]
     else:
         hmax = xp.zeros((rows, 1, 1), dtype=link_cost.dtype)
     if rows > 1:
         v = link_cost[n_h:].reshape(rows - 1, cols).T  # [cols, rows-1]
-        a = np.arange(rows)
-        lo = np.minimum(a[:, None], a[None, :])[..., None]
-        hi = np.maximum(a[:, None], a[None, :])[..., None]
-        span = np.arange(rows - 1)[None, None, :]
-        mask = (span >= lo) & (span < hi)            # [rows, rows, rows-1]
+        mask = _span_bottleneck_mask(rows)           # [rows, rows, rows-1]
         vmax = xp.max(xp.where(mask[None], v[:, None, None, :], 0.0),
                       axis=-1)                       # [cols, rows, rows]
     else:
         vmax = xp.zeros((cols, 1, 1), dtype=link_cost.dtype)
-    idx = np.arange(rows * cols)
-    r, c = idx // cols, idx % cols
+    r, c, edge = _mesh_route_index(rows, cols)
     # XY route s->d: horizontal leg on the source row, vertical on the
     # destination column — max of the two leg bottlenecks.
     wait_pair = xp.maximum(hmax[r[:, None], c[:, None], c[None, :]],
                            vmax[c[None, :], r[:, None], r[None, :]])
-    edge = np.where(c <= cols - 1 - c, 0, cols - 1)
     wait_dram = hmax[r, c, edge]
     return wait_pair, wait_dram
 

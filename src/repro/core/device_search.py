@@ -194,6 +194,9 @@ def beam_scan(pool, full, *, beam: int, metric: str, max_exp: int,
             new_e = b_e[:, None] + ce_s[None, :]
             sc = jnp.where(flat.reshape(beam, n_s),
                            metric_score(new_lat, new_e, metric), jnp.inf)
+            # scarlint: ignore[SL004] -- beam-stage ordering deliberately
+            # mirrors BeamEngine.combine's unquantised f64 argsort bit-for-
+            # bit; only the per-model pool ordering uses the quantiser
             _, idx = jax.lax.top_k(-sc.ravel(), beam)
             return ((idx // n_s).astype(jnp.int32),
                     (idx % n_s).astype(jnp.int32), total)

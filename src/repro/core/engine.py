@@ -365,6 +365,9 @@ class BeamEngine:
                 rows, cand_idx = np.nonzero(sel)
                 new_lat = np.maximum(b_lat[rows], cs.lat[cand_idx])
                 new_energy = b_energy[rows] + cs.energy[cand_idx]
+                # scarlint: ignore[SL004] -- f64 host beam ordering, stable
+                # by construction; the device protocol program mirrors this
+                # exact argsort (quantising here would fork the bit-parity)
                 order = np.argsort(metric_score(new_lat, new_energy, metric),
                                    kind="stable")[:self.beam]
                 rows, cand_idx = rows[order], cand_idx[order]

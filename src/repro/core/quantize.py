@@ -26,6 +26,8 @@ different plans never collide.  The SEG stage keeps its finer default
 """
 from __future__ import annotations
 
+from typing import Any
+
 import numpy as np
 
 # 6 significant digits: the shared host/device candidate-ordering grain.
@@ -46,7 +48,7 @@ def quantize_scores(scores: np.ndarray, sig: int = 11) -> np.ndarray:
     return out
 
 
-def quantize_scores_jax(scores, sig: int = SCORE_SIG):
+def quantize_scores_jax(scores: Any, sig: int = SCORE_SIG) -> Any:
     """Traceable form of ``quantize_scores`` for use inside jitted programs.
 
     Same rounding rule (round to ``sig + 1`` significant digits; zeros and

@@ -59,6 +59,8 @@ def masked_topk(scores, valid, k: int):
     ``ref.masked_topk_ref`` is the oracle.
     """
     neg = jnp.where(valid, -scores, -jnp.inf)
+    # scarlint: ignore[SL004] -- generic top-k primitive: callers that need
+    # the quantised tie-break pass quantize_scores_jax output (see docstring)
     vals, idx = jax.lax.top_k(neg, k)
     return (jnp.where(vals == -jnp.inf, jnp.inf, -vals),
             jnp.where(vals == -jnp.inf, -1, idx))

@@ -40,7 +40,7 @@ from . import export as _export
 from . import registry
 from .registry import (Counter, Gauge, counter, counters,  # noqa: F401
                        gauge, gauges)
-from .tracer import NULL_SPAN, Span, Tracer  # noqa: F401
+from .tracer import NULL_SPAN, Span, Tracer, _NullSpan  # noqa: F401
 
 __all__ = ["Counter", "Gauge", "Span", "Tracer", "bench_dump",
            "cache_stats", "chrome_trace", "counter", "counters", "disable",
@@ -77,14 +77,14 @@ def tracer() -> Optional[Tracer]:
     return _TRACER
 
 
-def span(name: str, cat: str = "app", **attrs):
+def span(name: str, cat: str = "app", **attrs: object) -> "Span | _NullSpan":
     """Open a structured span (context manager); no-op when disabled."""
     if _TRACER is None:
         return NULL_SPAN
     return Span(_TRACER, name, cat, attrs)
 
 
-def event(name: str, cat: str = "app", **attrs) -> None:
+def event(name: str, cat: str = "app", **attrs: object) -> None:
     """Record a zero-duration instant event; no-op when disabled."""
     if _TRACER is not None:
         _TRACER.instant(name, cat, attrs)

@@ -25,7 +25,7 @@ from .tracer import Tracer
 __all__ = ["chrome_trace", "summary", "format_summary", "bench_dump"]
 
 
-def _json_safe(v):
+def _json_safe(v: object) -> object:
     """Coerce an attribute value to something JSON-serializable."""
     if isinstance(v, (str, int, float, bool)) or v is None:
         return v

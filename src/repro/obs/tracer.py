@@ -36,13 +36,13 @@ class _NullSpan:
 
     __slots__ = ()
 
-    def __enter__(self):
+    def __enter__(self) -> "_NullSpan":
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, *exc: object) -> bool:
         return False
 
-    def set(self, **attrs):
+    def set(self, **attrs: object) -> "_NullSpan":
         """Ignore attributes (enabled spans record them)."""
         return self
 
@@ -56,18 +56,19 @@ class Span:
     __slots__ = ("tracer", "name", "cat", "attrs", "sid", "parent",
                  "t0", "c0")
 
-    def __init__(self, tracer: "Tracer", name: str, cat: str, attrs: dict):
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 attrs: dict) -> None:
         self.tracer = tracer
         self.name = name
         self.cat = cat
         self.attrs = attrs
 
-    def set(self, **attrs):
+    def set(self, **attrs: object) -> "Span":
         """Attach/overwrite attributes while the span is open."""
         self.attrs.update(attrs)
         return self
 
-    def __enter__(self):
+    def __enter__(self) -> "Span":
         tr = self.tracer
         self.sid = next(tr._ids)
         stack = tr._stack()
@@ -77,7 +78,7 @@ class Span:
         self.t0 = time.perf_counter()
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, *exc: object) -> bool:
         t1 = time.perf_counter()
         c1 = time.thread_time()
         tr = self.tracer
@@ -105,7 +106,7 @@ class Tracer:
     this tracer's time base when merged.
     """
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.t0 = time.perf_counter()
         self.wall0 = time.time()
         self.pid = os.getpid()

@@ -1,0 +1,724 @@
+"""scarlint test suite: rules, aliases, suppressions, baseline, CLI.
+
+Every rule gets positive / negative / suppressed fixtures through
+``lint_source`` (fast: pure AST, no device work), the baseline mechanism
+gets a save/load/apply/drift round-trip, the CLI gets exit-code coverage
+with planted violations, and the integration test at the bottom pins the
+committed ``scarlint-baseline.json`` to a fresh run over ``src/repro`` —
+drift in either direction fails here before it fails in CI.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro import obs
+from repro.analysis.lint import (
+    Baseline,
+    Finding,
+    ModuleContext,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.lint.baseline import BASELINE_FILENAME
+from repro.analysis.lint.cli import main as scarlint_main
+from repro.analysis.lint.context import infer_module_name
+from repro.analysis.lint.runner import PARSE_ERROR_RULE, discover_files
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+SRC_REPRO = REPO_ROOT / "src" / "repro"
+
+
+@pytest.fixture(autouse=True)
+def _restore_tracing_state():
+    was = obs.enabled()
+    yield
+    if not was:
+        obs.disable()
+
+
+def _src(text):
+    return textwrap.dedent(text)
+
+
+def _rules(findings, *, active_only=False):
+    return [f.rule for f in findings if not active_only or f.active]
+
+
+# ---------------------- SL001: xp-genericity --------------------------------
+
+def test_sl001_flags_bare_np_inside_xp_function():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def comm(xp, a):
+            return np.sum(a)
+    """))
+    assert _rules(findings) == ["SL001"]
+    assert "numpy.sum" in findings[0].message and "xp.sum" in findings[0].message
+
+
+def test_sl001_flags_jnp_via_from_import_alias():
+    findings = lint_source(_src("""
+        from jax import numpy as jnp
+
+        def comm(xp, a):
+            return jnp.minimum(a, 0)
+    """))
+    assert _rules(findings) == ["SL001"]
+    assert "jax.numpy.minimum" in findings[0].message
+
+
+def test_sl001_allows_xp_calls_and_dtype_whitelist():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def comm(xp, a):
+            lo = xp.minimum(a, 0)
+            eps = np.finfo(np.float32).eps
+            return xp.asarray(lo, dtype=np.float64) + eps
+    """))
+    assert findings == []
+
+
+def test_sl001_ignores_functions_without_xp_param():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def helper(n):
+            return np.arange(n)
+    """))
+    assert findings == []
+
+
+def test_sl001_nested_closure_flagged_once():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def outer(xp, a):
+            def inner(b):
+                return np.where(b > 0, b, 0)
+            return inner(a)
+    """))
+    assert _rules(findings) == ["SL001"]
+
+
+# ---------------------- SL002: sync discipline ------------------------------
+
+_SL002_DIRECT = _src("""
+    import jax
+
+    def pull(x):
+        host = jax.device_get(x)
+        y = x.block_until_ready()
+        return host, y.item()
+""")
+
+
+def test_sl002_flags_raw_fetches_in_core_scope():
+    findings = lint_source(_SL002_DIRECT, path="core/foo.py")
+    assert _rules(findings) == ["SL002", "SL002", "SL002"]
+
+
+def test_sl002_scoped_to_core_and_kernels_only():
+    assert lint_source(_SL002_DIRECT, path="online/foo.py") == []
+    assert lint_source(_SL002_DIRECT, path="analysis/foo.py") == []
+    assert _rules(lint_source(_SL002_DIRECT, path="kernels/foo.py")) == [
+        "SL002", "SL002", "SL002"]
+
+
+def test_sl002_flags_wrappers_on_jitted_results():
+    findings = lint_source(_src("""
+        from functools import partial
+
+        import jax
+        import numpy as np
+
+        def _inner(a, mode):
+            return a
+
+        run = partial(jax.jit, static_argnames=("mode",))(_inner)
+
+        def direct(a):
+            return np.asarray(run(a, mode="x"))
+
+        def one_step(a):
+            out = run(a, mode="x")
+            return float(out)
+    """), path="core/foo.py")
+    assert _rules(findings) == ["SL002", "SL002"]
+    assert "device_fetch" in findings[0].message
+
+
+def test_sl002_allows_counted_fetch_and_plain_wrappers():
+    findings = lint_source(_src("""
+        import jax
+        import numpy as np
+        from repro.launch.platform import device_fetch
+
+        @jax.jit
+        def run(a):
+            return a
+
+        def pull(a):
+            out = device_fetch(run(a))
+            return float(np.pi), np.asarray([1, 2]), out.item(0)
+    """), path="core/foo.py")
+    assert findings == []
+
+
+def test_sl002_cross_module_jit_via_project_index(tmp_path):
+    pkg = tmp_path / "repro"
+    (pkg / "kernels" / "scar_eval").mkdir(parents=True)
+    (pkg / "core").mkdir()
+    (pkg / "kernels" / "scar_eval" / "ops.py").write_text(_src("""
+        from functools import partial
+
+        import jax
+
+        def _ev(x, mode):
+            return x
+
+        evaluate = partial(jax.jit, static_argnames=("mode",))(_ev)
+    """))
+    (pkg / "core" / "use.py").write_text(_src("""
+        import numpy as np
+        from repro.kernels.scar_eval import evaluate
+
+        def pull(x):
+            return np.asarray(evaluate(x, mode="a"))
+    """))
+    report = lint_paths([tmp_path], root=tmp_path)
+    sl002 = [f for f in report.findings if f.rule == "SL002"]
+    assert len(sl002) == 1
+    assert sl002[0].path == "repro/core/use.py"
+
+
+# ---------------------- SL003: seeded RNG -----------------------------------
+
+def test_sl003_flags_global_numpy_stream_and_stdlib_random():
+    findings = lint_source(_src("""
+        import random
+
+        import numpy as np
+
+        def draw(n):
+            random.shuffle(list(range(n)))
+            return np.random.rand(n)
+    """))
+    assert _rules(findings) == ["SL003", "SL003", "SL003"]
+
+
+def test_sl003_flags_from_random_import():
+    findings = lint_source("from random import choice\n")
+    assert _rules(findings) == ["SL003"]
+
+
+def test_sl003_flags_aliased_numpy_random():
+    findings = lint_source(_src("""
+        import numpy.random as npr
+
+        def draw(x):
+            npr.shuffle(x)
+    """))
+    assert _rules(findings) == ["SL003"]
+    assert "numpy.random.shuffle" in findings[0].message
+
+
+def test_sl003_allows_seeded_generators_and_jax_random():
+    findings = lint_source(_src("""
+        import jax
+        import numpy as np
+
+        def draw(seed, key):
+            rng = np.random.default_rng(seed)
+            gen = np.random.Generator(np.random.PCG64(seed))
+            ss = np.random.SeedSequence(seed)
+            k1, k2 = jax.random.split(key)
+            return rng.normal(), gen.integers(10), ss, k1, k2
+    """))
+    assert findings == []
+
+
+# ---------------------- SL004: quantized tie-breaks -------------------------
+
+def test_sl004_flags_raw_argsort_on_scores():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def pick(scores):
+            return np.argsort(scores)
+    """))
+    assert _rules(findings) == ["SL004"]
+    assert "quantize_scores" in findings[0].message
+
+
+def test_sl004_flags_topk_on_score_derived_name():
+    findings = lint_source(_src("""
+        import jax
+
+        def pick(a, k):
+            sc = metric_score(a)
+            return jax.lax.top_k(-sc, k)
+    """))
+    assert _rules(findings) == ["SL004"]
+
+
+def test_sl004_quantized_operand_is_clean():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        from repro.core.quantize import quantize_scores
+
+        def pick(scores):
+            return np.argsort(quantize_scores(scores))
+
+        def pick2(scores):
+            q = quantize_scores(scores)
+            return np.lexsort((q,))
+    """))
+    assert findings == []
+
+
+def test_sl004_non_score_operands_clean():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def pick(latencies):
+            return np.argsort(latencies)
+    """))
+    assert findings == []
+
+
+# ---------------------- SL005: jit static hygiene ---------------------------
+
+_SL005_DEF = """
+    from functools import partial
+
+    import jax
+
+    @partial(jax.jit, static_argnames=("mode",))
+    def run(x, mode):
+        return x
+"""
+
+
+def test_sl005_flags_fstring_static():
+    findings = lint_source(_src(_SL005_DEF + """
+        def bad(x):
+            return run(x, mode=f"m{x}")
+    """))
+    assert _rules(findings) == ["SL005"]
+    assert "f-string" in findings[0].message
+
+
+def test_sl005_flags_unhashable_statics_kw_and_positional():
+    findings = lint_source(_src(_SL005_DEF + """
+        def bad(x):
+            a = run(x, mode={"a": 1})
+            b = run(x, [1, 2])
+            c = run(x, mode=dict(a=1))
+            return a, b, c
+    """))
+    assert _rules(findings) == ["SL005", "SL005", "SL005"]
+
+
+def test_sl005_hashable_statics_clean():
+    findings = lint_source(_src(_SL005_DEF + """
+        def good(x):
+            return run(x, mode="fixed"), run(x, "other")
+    """))
+    assert findings == []
+
+
+def test_sl005_jax_jit_assignment_form():
+    findings = lint_source(_src("""
+        import jax
+
+        def _inner(x, k):
+            return x
+
+        g = jax.jit(_inner, static_argnames=("k",))
+
+        def bad(x):
+            return g(x, k=[1])
+    """))
+    assert _rules(findings) == ["SL005"]
+
+
+def test_sl005_cross_module_call_site(tmp_path):
+    pkg = tmp_path / "repro"
+    (pkg / "kernels").mkdir(parents=True)
+    (pkg / "online").mkdir()
+    (pkg / "kernels" / "ops.py").write_text(_src(_SL005_DEF))
+    (pkg / "online" / "use.py").write_text(_src("""
+        from repro.kernels.ops import run
+
+        def bad(x):
+            return run(x, mode=f"m{x}")
+    """))
+    report = lint_paths([tmp_path], root=tmp_path)
+    assert [f.rule for f in report.findings] == ["SL005"]
+    assert report.findings[0].path == "repro/online/use.py"
+
+
+# ---------------------- suppressions ----------------------------------------
+
+def test_suppression_same_line_and_line_above():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def draw(n):
+            a = np.random.rand(n)  # scarlint: ignore[SL003] -- fixture
+            # scarlint: ignore[SL003]
+            b = np.random.rand(n)
+            return a, b
+    """))
+    assert _rules(findings) == ["SL003", "SL003"]
+    assert all(f.suppressed for f in findings)
+    assert _rules(findings, active_only=True) == []
+
+
+def test_suppression_multiline_comment_block():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def pick(scores):
+            # scarlint: ignore[SL004] -- intentional: host f64 ordering
+            # mirrored bit-for-bit by the device program; quantising here
+            # would fork the parity
+            return np.argsort(scores)
+    """))
+    assert _rules(findings) == ["SL004"]
+    assert findings[0].suppressed
+
+
+def test_bare_ignore_suppresses_all_rules_on_line():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def pick(xp, scores):
+            return np.argsort(scores)  # scarlint: ignore
+    """))
+    assert sorted(_rules(findings)) == ["SL001", "SL004"]
+    assert all(f.suppressed for f in findings)
+
+
+def test_ignore_for_other_rule_does_not_suppress():
+    findings = lint_source(_src("""
+        import numpy as np
+
+        def draw(n):
+            return np.random.rand(n)  # scarlint: ignore[SL001]
+    """))
+    assert _rules(findings, active_only=True) == ["SL003"]
+
+
+# ---------------------- alias resolution ------------------------------------
+
+def test_resolve_chains_through_import_aliases():
+    ctx = ModuleContext("m.py", _src("""
+        import numpy as np
+        import jax.numpy
+        from numpy import asarray
+        from jax import numpy as jnp
+    """))
+    import ast as _ast
+
+    def resolve(expr):
+        return ctx.resolve(_ast.parse(expr, mode="eval").body)
+
+    assert resolve("np.random.default_rng") == "numpy.random.default_rng"
+    assert resolve("jax.numpy.argsort") == "jax.numpy.argsort"
+    assert resolve("asarray") == "numpy.asarray"
+    assert resolve("jnp.sum") == "jax.numpy.sum"
+    assert resolve("unknown_local.attr") is None
+
+
+def test_relative_imports_expand_against_module_name():
+    ctx = ModuleContext("src/repro/core/foo.py", _src("""
+        from .quantize import quantize_scores
+        from ..kernels.scar_eval import ops
+        from . import cost as c
+    """))
+    assert ctx.module_name == "repro.core.foo"
+    assert ctx.aliases["quantize_scores"] == \
+        "repro.core.quantize.quantize_scores"
+    assert ctx.aliases["ops"] == "repro.kernels.scar_eval.ops"
+    assert ctx.aliases["c"] == "repro.core.cost"
+
+
+def test_infer_module_name():
+    assert infer_module_name("src/repro/core/cost.py") == "repro.core.cost"
+    assert infer_module_name("src/repro/core/__init__.py") == "repro.core"
+    assert infer_module_name("elsewhere/snippet.py") == "snippet"
+
+
+# ---------------------- baseline mechanism ----------------------------------
+
+_VIOLATION = _src("""
+    import numpy as np
+
+    def draw(n):
+        return np.random.rand(n)
+""")
+
+
+def test_baseline_roundtrip_and_match(tmp_path):
+    (tmp_path / "mod.py").write_text(_VIOLATION)
+    first = lint_paths([tmp_path], root=tmp_path)
+    assert _rules(first.findings, active_only=True) == ["SL003"]
+
+    bl = Baseline.from_findings(first.findings)
+    bl_file = tmp_path / BASELINE_FILENAME
+    bl.save(bl_file)
+    loaded = Baseline.load(bl_file)
+    assert loaded.entries == bl.entries and len(loaded) == 1
+
+    second = lint_paths([tmp_path], baseline=loaded, root=tmp_path)
+    assert second.active == [] and len(second.baselined) == 1
+    assert second.stale_baseline == []
+    assert second.ok(strict_baseline=True)
+
+
+def test_baseline_fingerprint_survives_line_drift(tmp_path):
+    (tmp_path / "mod.py").write_text(_VIOLATION)
+    bl = Baseline.from_findings(lint_paths([tmp_path],
+                                           root=tmp_path).findings)
+    # shift the violation down without changing its text
+    (tmp_path / "mod.py").write_text("'''moved'''\n\n\n" + _VIOLATION)
+    report = lint_paths([tmp_path], baseline=bl, root=tmp_path)
+    assert report.active == [] and len(report.baselined) == 1
+
+
+def test_stale_baseline_detected_and_fails_strict(tmp_path):
+    (tmp_path / "mod.py").write_text(_VIOLATION)
+    bl = Baseline.from_findings(lint_paths([tmp_path],
+                                           root=tmp_path).findings)
+    (tmp_path / "mod.py").write_text("def draw(n):\n    return n\n")
+    report = lint_paths([tmp_path], baseline=bl, root=tmp_path)
+    assert report.findings == []
+    assert len(report.stale_baseline) == 1
+    assert report.stale_baseline[0]["rule"] == "SL003"
+    assert report.ok() and not report.ok(strict_baseline=True)
+
+
+def test_baseline_does_not_cover_new_findings(tmp_path):
+    (tmp_path / "mod.py").write_text(_VIOLATION)
+    bl = Baseline.from_findings(lint_paths([tmp_path],
+                                           root=tmp_path).findings)
+    (tmp_path / "mod.py").write_text(
+        _VIOLATION + "\ndef more(n):\n    return np.random.rand(n + 1)\n")
+    report = lint_paths([tmp_path], baseline=bl, root=tmp_path)
+    assert len(report.baselined) == 1
+    assert _rules(report.active) == ["SL003"]
+
+
+# ---------------------- runner / discovery / obs ----------------------------
+
+def test_discover_files_skips_pycache_and_dedupes(tmp_path):
+    (tmp_path / "a.py").write_text("x = 1\n")
+    (tmp_path / "__pycache__").mkdir()
+    (tmp_path / "__pycache__" / "a.py").write_text("x = 1\n")
+    files = discover_files([tmp_path, tmp_path / "a.py"])
+    assert [f.name for f in files] == ["a.py"]
+
+
+def test_parse_error_becomes_sl000_finding(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n")
+    report = lint_paths([tmp_path], root=tmp_path)
+    assert _rules(report.findings) == [PARSE_ERROR_RULE]
+    with pytest.raises(SyntaxError):
+        lint_source("def f(:\n")
+
+
+def test_lint_paths_emits_obs_counters_and_trace(tmp_path):
+    (tmp_path / "mod.py").write_text(_VIOLATION)
+    scanned = obs.counter("scarlint.files_scanned")
+    per_rule = obs.counter("scarlint.findings.SL003")
+    before = (scanned.value, per_rule.value)
+    obs.enable()
+    lint_paths([tmp_path], root=tmp_path)
+    trace = obs.chrome_trace()
+    obs.disable()
+    assert scanned.value == before[0] + 1
+    assert per_rule.value == before[1] + 1
+    assert obs.gauge("scarlint.runtime_ms").value > 0
+    cats = {e.get("cat") for e in trace["traceEvents"]}
+    assert "scarlint" in cats
+
+
+# ---------------------- CLI -------------------------------------------------
+
+def _plant(tmp_path):
+    d = tmp_path / "proj" / "core"
+    d.mkdir(parents=True)
+    (d / "bad.py").write_text(_src("""
+        import jax
+        import numpy as np
+
+        def pick(scores, x):
+            host = jax.device_get(x)
+            return np.argsort(scores), host
+    """))
+    return tmp_path / "proj", d / "bad.py"
+
+
+def test_cli_planted_violations_exit_nonzero(tmp_path, capsys):
+    proj, _ = _plant(tmp_path)
+    rc = scarlint_main([str(proj), "--no-baseline"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "SL002" in out and "SL004" in out
+
+
+def test_cli_per_rule_planting_each_exits_nonzero(tmp_path):
+    snippets = {
+        "SL001": "import numpy as np\ndef f(xp, a):\n    return np.sum(a)\n",
+        "SL002": "import jax\ndef f(x):\n    return jax.device_get(x)\n",
+        "SL003": "import numpy as np\nx = np.random.rand(3)\n",
+        "SL004": ("import numpy as np\ndef f(scores):\n"
+                  "    return np.argsort(scores)\n"),
+        "SL005": ("import jax\ndef _i(x, k):\n    return x\n"
+                  "g = jax.jit(_i, static_argnames=('k',))\n"
+                  "y = g(1, k=[1])\n"),
+    }
+    for rule, code in snippets.items():
+        d = tmp_path / rule.lower() / "core"
+        d.mkdir(parents=True)
+        (d / "mod.py").write_text(code)
+        rc = scarlint_main([str(d.parent), "--no-baseline", "--rules", rule])
+        assert rc == 1, rule
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, capsys):
+    d = tmp_path / "clean"
+    d.mkdir()
+    (d / "ok.py").write_text("def f(a):\n    return a + 1\n")
+    rc = scarlint_main([str(d), "--no-baseline"])
+    assert rc == 0
+    assert "0 active" in capsys.readouterr().out
+
+
+def test_cli_write_baseline_then_clean_then_strict_drift(tmp_path, capsys):
+    proj, bad = _plant(tmp_path)
+    bl = str(proj / BASELINE_FILENAME)
+
+    rc = scarlint_main([str(proj), "--baseline", bl, "--write-baseline"])
+    assert rc == 0 and Path(bl).is_file()
+    capsys.readouterr()
+
+    rc = scarlint_main([str(proj), "--baseline", bl, "--strict-baseline"])
+    assert rc == 0
+    assert "baselined" in capsys.readouterr().out
+
+    # pay down the debt: strict mode now fails on the stale entries
+    bad.write_text("def f(a):\n    return a\n")
+    rc = scarlint_main([str(proj), "--baseline", bl, "--strict-baseline"])
+    assert rc == 1
+    assert "stale baseline" in capsys.readouterr().out
+    # ...but the non-strict run still passes
+    assert scarlint_main([str(proj), "--baseline", bl]) == 0
+
+
+def test_cli_json_format_and_out_file(tmp_path, capsys):
+    proj, _ = _plant(tmp_path)
+    out_file = tmp_path / "report.json"
+    rc = scarlint_main([str(proj), "--no-baseline", "--format", "json",
+                        "--out", str(out_file)])
+    assert rc == 1
+    stdout_report = json.loads(capsys.readouterr().out)
+    file_report = json.loads(out_file.read_text())
+    assert stdout_report == file_report
+    assert file_report["tool"] == "scarlint"
+    assert file_report["counts"]["active"] == 2
+    assert {f["rule"] for f in file_report["findings"]} == {"SL002", "SL004"}
+
+
+def test_cli_rule_selection_and_catalogue(tmp_path, capsys):
+    proj, _ = _plant(tmp_path)
+    rc = scarlint_main([str(proj), "--no-baseline", "--rules", "SL003"])
+    assert rc == 0                      # planted file has no SL003
+
+    rc = scarlint_main(["--list-rules"])
+    assert rc == 0
+    listing = capsys.readouterr().out
+    for rule in ("SL001", "SL002", "SL003", "SL004", "SL005"):
+        assert rule in listing
+
+
+def test_cli_usage_errors_exit_two(tmp_path):
+    assert scarlint_main([str(tmp_path / "nope")]) == 2
+    (tmp_path / "x.py").write_text("x = 1\n")
+    assert scarlint_main([str(tmp_path), "--rules", "SL999"]) == 2
+
+
+def test_cli_trace_out_writes_chrome_trace(tmp_path):
+    d = tmp_path / "clean"
+    d.mkdir()
+    (d / "ok.py").write_text("x = 1\n")
+    trace = tmp_path / "trace.json"
+    rc = scarlint_main([str(d), "--no-baseline", "--format", "json",
+                        "--out", str(tmp_path / "r.json"),
+                        "--trace-out", str(trace)])
+    assert rc == 0
+    payload = json.loads(trace.read_text())
+    assert any(e.get("cat") == "scarlint" for e in payload["traceEvents"])
+
+
+def test_module_and_script_entry_points():
+    env_path = str(REPO_ROOT / "src")
+    rc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--list-rules"],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+        env={"PYTHONPATH": env_path, "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert rc.returncode == 0 and "SL001" in rc.stdout
+    rc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "scripts" / "scarlint.py"),
+         "--list-rules"],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+        env={"PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert rc.returncode == 0 and "SL005" in rc.stdout
+
+
+# ---------------------- repo-wide integration -------------------------------
+
+def test_repo_matches_committed_baseline_exactly():
+    """Fresh run over src/repro == committed baseline, both directions.
+
+    New violations (active findings) fail; paid-down debt the baseline
+    still lists (stale entries) also fails — the committed file must
+    mirror reality exactly, never drift silently.
+    """
+    bl_file = REPO_ROOT / BASELINE_FILENAME
+    assert bl_file.is_file(), "committed scarlint-baseline.json missing"
+    baseline = Baseline.load(bl_file)
+    report = lint_paths([SRC_REPRO], baseline=baseline, root=REPO_ROOT)
+    assert report.files_scanned > 50
+    assert report.active == [], [f.format_text() for f in report.active]
+    assert report.stale_baseline == [], report.stale_baseline
+    assert report.ok(strict_baseline=True)
+
+
+def test_repo_suppressions_are_reasoned():
+    """Every inline ignore in src/repro carries a ``--`` reason."""
+    report = lint_paths([SRC_REPRO], root=REPO_ROOT)
+    assert len(report.suppressed) >= 3      # the three SL004 exemptions
+    for f in report.suppressed:
+        text = (SRC_REPRO.parent.parent / f.path).read_text().splitlines()
+        window = "\n".join(text[max(0, f.line - 4):f.line])
+        assert "scarlint: ignore" in window
+        assert "--" in window, f"unreasoned suppression at {f.path}:{f.line}"
+
+
+def test_finding_dataclass_semantics():
+    f = Finding(rule="SL001", path="a.py", line=3, col=4, message="m",
+                snippet="x = 1")
+    assert f.active and f.fingerprint == ("SL001", "a.py", "x = 1")
+    s = f.with_flags(suppressed=True)
+    assert s.suppressed and not s.active and not f.suppressed
+    assert "SL001" in f.format_text() and "[suppressed]" in s.format_text()
+    assert f.as_dict()["line"] == 3
