@@ -20,6 +20,12 @@ rises more than ``tolerance`` above.  Gating dimensionless factors
 machine generations — commit a new baseline alongside any intentional
 change.
 
+``--require-baselines`` turns a *missing baseline* into a failure: without
+it a newly added benchmark silently rides through the gate ungated (the
+row prints only a "note:"), which is exactly how a regression in a new
+bench ships unnoticed.  CI passes the flag, so committing the baseline
+JSON is part of adding a benchmark, not an optional follow-up.
+
 ``--update-baselines`` refreshes the committed baselines instead of gating:
 every current row overwrites (or creates) its baseline file, carrying over
 the existing baseline's ``gate`` object so which metrics are enforced is a
@@ -108,6 +114,12 @@ def main() -> None:
         help="allowed relative regression (default 0.15)",
     )
     ap.add_argument(
+        "--require-baselines",
+        action="store_true",
+        help="fail when a current bench has no committed baseline "
+        "(instead of a silent note)",
+    )
+    ap.add_argument(
         "--update-baselines",
         action="store_true",
         help="write current rows over the baseline files (preserving each "
@@ -149,7 +161,13 @@ def main() -> None:
             bval, cval = metric_value(base, key), metric_value(cur, key)
             print(f"{name}.{key}: baseline={bval} current={cval}")
     for name in sorted(set(cur_rows) - set(base_rows)):
-        print(f"note: {name} has no baseline (not gated)")
+        if args.require_baselines:
+            problems.append(
+                f"{name}: no committed baseline under {args.baseline} "
+                "(run --update-baselines and commit, or drop the bench)"
+            )
+        else:
+            print(f"note: {name} has no baseline (not gated)")
 
     if problems:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)

@@ -11,6 +11,7 @@ compute/communication magnitudes matter for the scheduling study.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 from .workload import Layer, Model, OpType, conv, dwconv, gemm, transformer_layers
@@ -284,7 +285,16 @@ REGISTRY: dict[str, Callable[..., Model]] = {
 }
 
 
+@functools.lru_cache(maxsize=256)
 def get_model(name: str, batch: int = 1) -> Model:
+    """Build (or return the cached) model graph for ``name`` at ``batch``.
+
+    ``Model``/``Layer`` are frozen dataclasses, so instances are safely
+    shared.  The cache matters online: ``rescheduler.active_scenario``
+    resolves every active tenant's model each epoch, which on
+    million-event fleet traces is millions of calls that would otherwise
+    rebuild identical layer graphs.
+    """
     if name not in REGISTRY:
         raise KeyError(f"unknown model {name!r}; have {sorted(REGISTRY)}")
     return REGISTRY[name](batch=batch)

@@ -117,6 +117,15 @@ TRACE_PRESETS: dict[str, dict] = {
     "xr8_cadence": dict(kind="cadence", scenario="xr8_outdoors", horizon=0.5),
     "xr6_cadence": dict(kind="cadence", scenario="xr6_ar_assistant",
                         horizon=0.5),
+    # Open-loop fleet churn: tenants carry request rates (diurnal + bursty
+    # arrivals, log-uniform per-tenant demand) and are served by the
+    # multi-package fleet driver (``repro.online.fleet``).  The smoke preset
+    # is test/doc sized; the bench builds its million-event trace directly
+    # from ``iter_open_loop_churn`` so nothing that large is materialised.
+    "dc_fleet_smoke": dict(kind="open_churn", seed=23, horizon=30.0,
+                           base_rate=0.8, mean_lifetime=4.0,
+                           zoo=_DC_CHURN_ZOO, slo_mix=_DC_SLO_MIX,
+                           request_rate=(0.5, 8.0)),
 }
 
 
@@ -126,7 +135,9 @@ def get_trace(preset: str):
     Imported lazily: ``repro.online`` depends on this package, so the trace
     generators can't be imported at module load without a cycle.
     """
-    from repro.online.traces import frame_cadence_trace, poisson_churn_trace
+    from repro.online.traces import (frame_cadence_trace,
+                                     open_loop_churn_trace,
+                                     poisson_churn_trace)
     try:
         spec = dict(TRACE_PRESETS[preset])
     except KeyError:
@@ -135,7 +146,30 @@ def get_trace(preset: str):
     kind = spec.pop("kind")
     if kind == "churn":
         return poisson_churn_trace(name=preset, **spec)
+    if kind == "open_churn":
+        return open_loop_churn_trace(name=preset, **spec)
     return frame_cadence_trace(name=preset, **spec)
+
+
+def iter_trace_events(preset: str):
+    """Stream the named churn preset's events without materialising them.
+
+    Returns ``(event iterator, horizon)``.  Yields exactly the events
+    ``get_trace(preset)`` would materialise (pinned by the trace tests);
+    cadence presets have no streaming form and raise ``KeyError``.
+    """
+    from repro.online.traces import iter_open_loop_churn, iter_poisson_churn
+    try:
+        spec = dict(TRACE_PRESETS[preset])
+    except KeyError:
+        raise KeyError(f"unknown trace preset {preset!r}; "
+                       f"have {sorted(TRACE_PRESETS)}") from None
+    kind = spec.pop("kind")
+    if kind == "churn":
+        return iter_poisson_churn(**spec), spec["horizon"]
+    if kind == "open_churn":
+        return iter_open_loop_churn(**spec), spec["horizon"]
+    raise KeyError(f"trace preset {preset!r} ({kind}) has no streaming form")
 
 
 def get_scenario(name: str) -> Scenario:

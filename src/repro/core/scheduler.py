@@ -98,6 +98,66 @@ _DB_CACHE: "collections.OrderedDict[tuple, CostDB]" = collections.OrderedDict()
 _DB_CACHE_MAX = 128
 _DB_HIT = obs.counter("costdb.cache_hit")
 _DB_MISS = obs.counter("costdb.cache_miss")
+_DB_DISK_HIT = obs.counter("costdb.disk_hit")
+_DB_DISK_MISS = obs.counter("costdb.disk_miss")
+
+# Version salt of the on-disk CostDB cache: bump when the cost model or the
+# CostDB layout changes so stale pickles can never be read back.
+_COSTDB_DISK_SCHEMA = 1
+
+
+def costdb_cache_dir() -> Optional[str]:
+    """Shared on-disk CostDB cache directory (``SCAR_COSTDB_CACHE``).
+
+    Unset (the default) disables the disk layer entirely.  When set, cost
+    databases are pickled under the directory keyed by a content hash of
+    ``cost_db_key`` + schema version, so portfolio workers and wide fleet
+    sweeps across *processes* never rebuild a CostDB they have built once
+    (the open PR 3 item).  The directory is user-managed: it is safe to
+    delete at any time, and it must be wiped when switching repo versions
+    whose cost model differs (the schema salt guards layout changes only).
+    """
+    import os
+    d = os.environ.get("SCAR_COSTDB_CACHE", "").strip()
+    return d or None
+
+
+def _disk_cache_path(cache_dir: str, key: tuple) -> str:
+    import hashlib
+    import os
+    digest = hashlib.sha256(
+        repr((_COSTDB_DISK_SCHEMA, key)).encode()).hexdigest()[:32]
+    return os.path.join(cache_dir, f"costdb_{digest}.pkl")
+
+
+def _disk_cache_load(path: str) -> Optional[CostDB]:
+    import pickle
+    try:
+        with open(path, "rb") as fh:
+            db = pickle.load(fh)
+    except (OSError, pickle.UnpicklingError, EOFError, AttributeError):
+        return None
+    return db if isinstance(db, CostDB) else None
+
+
+def _disk_cache_store(path: str, db: CostDB) -> None:
+    # atomic publish (tmp + rename) so concurrent portfolio workers can
+    # race on the same key without ever exposing a torn file
+    import os
+    import pickle
+    import tempfile
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                               prefix=".costdb_tmp_")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            pickle.dump(db, fh, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
 _CAND_HIT = obs.counter("candidates.cache_hit")
 _CAND_MISS = obs.counter("candidates.cache_miss")
 _WIN_HIT = obs.counter("window_memo.cache_hit")
@@ -117,13 +177,29 @@ def cost_db_key(sc: Scenario, mcm: MCM) -> tuple:
 
 
 def get_cost_db(sc: Scenario, mcm: MCM) -> CostDB:
-    """Memoised ``build_cost_db`` keyed on ``cost_db_key`` (LRU-bounded)."""
+    """Memoised ``build_cost_db`` keyed on ``cost_db_key`` (LRU-bounded).
+
+    With ``SCAR_COSTDB_CACHE`` set, a second, process-shared disk layer
+    sits under the in-memory LRU: misses first try the pickled store and
+    only build on a double miss, then publish atomically for other
+    processes (``costdb.disk_hit`` / ``costdb.disk_miss`` count the layer).
+    """
     key = cost_db_key(sc, mcm)
     if key not in _DB_CACHE:
         _DB_MISS.inc()
-        with obs.span("costdb_build", cat="scheduler", scenario=sc.name,
-                      mcm=mcm.name):
-            _DB_CACHE[key] = build_cost_db(sc, mcm.classes, mcm.pkg)
+        cache_dir = costdb_cache_dir()
+        db = None
+        if cache_dir:
+            path = _disk_cache_path(cache_dir, key)
+            db = _disk_cache_load(path)
+            (_DB_DISK_HIT if db is not None else _DB_DISK_MISS).inc()
+        if db is None:
+            with obs.span("costdb_build", cat="scheduler", scenario=sc.name,
+                          mcm=mcm.name):
+                db = build_cost_db(sc, mcm.classes, mcm.pkg)
+            if cache_dir:
+                _disk_cache_store(path, db)
+        _DB_CACHE[key] = db
         while len(_DB_CACHE) > _DB_CACHE_MAX:
             _DB_CACHE.popitem(last=False)
     else:
@@ -143,7 +219,8 @@ def clear_caches() -> None:
     from .paths import path_cache_clear
     _DB_CACHE.clear()
     path_cache_clear()
-    for c in (_DB_HIT, _DB_MISS, _CAND_HIT, _CAND_MISS, _WIN_HIT, _WIN_MISS):
+    for c in (_DB_HIT, _DB_MISS, _DB_DISK_HIT, _DB_DISK_MISS,
+              _CAND_HIT, _CAND_MISS, _WIN_HIT, _WIN_MISS):
         c.reset()
 
 

@@ -22,14 +22,23 @@ adds the discrete-event layer on top of it:
   sub-iteration preemption (``simulator.OnlinePolicy``), trace-driven MCM
   reconfiguration (``rescheduler.SLORescheduler``) and the per-class /
   class-weighted metrics (``metrics.slo_report``).
+* ``fleet``        — open-loop multi-package serving: streams a (possibly
+  unmaterialised) churn event sequence through many ``PackageServer``
+  loops behind a router with admission control and power/area-budgeted
+  autoscaling (``core.provision``); bounded memory at any trace length.
 """
 from .traces import (Event, Trace, frame_cadence_trace,  # noqa: F401
-                     poisson_churn_trace)
+                     iter_frame_cadence, iter_open_loop_churn,
+                     iter_poisson_churn, merge_events,
+                     open_loop_churn_trace, poisson_churn_trace)
 from .rescheduler import (Rescheduler, ReplanRecord,  # noqa: F401
                           SLORescheduler)
-from .simulator import (EpochRecord, OnlinePolicy, SimResult,  # noqa: F401
-                        SLOSample, iteration_split, simulate)
-from .metrics import (ClassQoS, ModelQoS, QoSReport, SLOReport,  # noqa: F401
-                      qos_report, slo_report)
+from .simulator import (EpochRecord, OnlinePolicy,  # noqa: F401
+                        PackageServer, SimResult, SLOSample,
+                        iteration_split, simulate)
+from .metrics import (ClassQoS, ModelQoS, QoSReport,  # noqa: F401
+                      SLOReport, StreamingStats, qos_report, slo_report)
 from .slo import (SLO_CLASSES, SLOClass, class_weighted_score,  # noqa: F401
                   get_slo)
+from .fleet import (FleetConfig, FleetReport,  # noqa: F401
+                    PackageSummary, simulate_fleet)

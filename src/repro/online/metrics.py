@@ -30,6 +30,7 @@ weight cancels; pinned by ``tests/test_online_slo.py``).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from repro import obs
@@ -39,9 +40,15 @@ from .slo import get_slo
 
 
 def weighted_percentile(samples: list[tuple[float, float]], p: float) -> float:
-    """Smallest value whose cumulative weight fraction reaches ``p`` (0-100)."""
+    """Smallest value whose cumulative weight fraction reaches ``p`` (0-100).
+
+    An empty sample set has no percentile: returns ``nan`` (NaN-tagged, not
+    a silent 0.0) so an admission-rejected class can never masquerade as a
+    zero-latency one.  Callers that want a sentinel must check
+    ``math.isnan`` explicitly.
+    """
     if not samples:
-        return 0.0
+        return float("nan")
     ordered = sorted(samples)
     total = sum(w for _, w in ordered)
     if total <= 0:
@@ -185,12 +192,15 @@ def slo_report(sim: SimResult) -> SLOReport:
             slo=name, weight=cls.weight, n_samples=total,
             p50_latency=weighted_percentile(cs, 50.0),
             p99_latency=weighted_percentile(cs, 99.0),
-            miss_rate=(missed / total) if total > 0 else 0.0,
-            attainment=1.0 - ((missed / total) if total > 0 else 0.0)))
+            miss_rate=(missed / total) if total > 0 else float("nan"),
+            attainment=(1.0 - missed / total) if total > 0
+            else float("nan")))
         pooled.extend((s.latency, s.weight * cls.weight) for s in ss)
         w_miss += cls.weight * missed
         w_total += cls.weight * total
-    miss_rate = (w_miss / w_total) if w_total > 0 else 0.0
+    # zero served weight across every class (e.g. everything rejected at
+    # admission): the weighted metrics are undefined — NaN, not 0.0/1.0
+    miss_rate = (w_miss / w_total) if w_total > 0 else float("nan")
     attainment = 1.0 - miss_rate
     served = sum(s.weight for s in sim.slo_samples)
     return SLOReport(
@@ -199,10 +209,94 @@ def slo_report(sim: SimResult) -> SLOReport:
         weighted_p99=weighted_percentile(pooled, 99.0),
         weighted_miss_rate=miss_rate, slo_attainment=attainment,
         score=(base.aggregate_edp / attainment) if attainment > 0
-        else float("inf"),
+        else (float("nan") if math.isnan(attainment) else float("inf")),
         served_weight=served,
         edp_per_iteration=(base.aggregate_edp / served) if served > 0
         else float("inf"),
         n_preemptions=sim.n_preemptions, n_switches=sim.n_switches,
         gauges={**obs.gauges(prefix="online."),
                 **obs.counters(prefix="online.")})
+
+
+# ---------------------------------------------------------------------------
+# bounded-memory streaming accumulation (fleet-scale traces)
+# ---------------------------------------------------------------------------
+
+class StreamingStats:
+    """Bounded-memory weighted latency/miss accumulator.
+
+    Million-event fleet runs cannot retain per-sample lists, so this folds
+    each observation into a fixed log-spaced histogram (``n_bins`` decades
+    spanning [``lo``, ``hi``) seconds plus under/overflow bins — infinite
+    latencies, i.e. unserved offered load, land in the overflow bin) and
+    running weight/miss totals.  Percentiles come back as the *upper edge*
+    of the bin holding the target cumulative weight — a deterministic upper
+    bound within one bin width (~5% at the default resolution), and
+    permutation-invariant because only sums are kept.  Empty accumulators
+    report NaN everywhere, matching ``weighted_percentile``.
+    """
+
+    __slots__ = ("lo", "hi", "n_bins", "_scale", "_w", "w_total", "w_miss")
+
+    def __init__(self, lo: float = 1e-6, hi: float = 1e3,
+                 n_bins: int = 256) -> None:
+        self.lo, self.hi, self.n_bins = lo, hi, n_bins
+        self._scale = n_bins / math.log(hi / lo)
+        self._w = [0.0] * (n_bins + 2)     # [under | bins | over/inf]
+        self.w_total = 0.0
+        self.w_miss = 0.0
+
+    def add(self, latency: float, weight: float, missed: float = 0.0) -> None:
+        if weight <= 0:
+            return
+        if latency < self.lo:
+            b = 0
+        elif not (latency < self.hi):      # hi, above, or inf
+            b = self.n_bins + 1
+        else:
+            b = 1 + int(self._scale * math.log(latency / self.lo))
+        self._w[b] += weight
+        self.w_total += weight
+        self.w_miss += missed
+
+    def merge(self, other: "StreamingStats") -> None:
+        if (other.lo, other.hi, other.n_bins) != (self.lo, self.hi,
+                                                  self.n_bins):
+            raise ValueError("cannot merge differently-binned stats")
+        self._w = [a + b for a, b in zip(self._w, other._w)]
+        self.w_total += other.w_total
+        self.w_miss += other.w_miss
+
+    def percentile(self, p: float) -> float:
+        """Upper edge of the bin reaching cumulative weight fraction p."""
+        if self.w_total <= 0:
+            return float("nan")
+        target = self.w_total * (p / 100.0)
+        acc = 0.0
+        for b, w in enumerate(self._w):
+            acc += w
+            if acc >= target and w > 0:
+                if b == 0:
+                    return self.lo
+                if b == self.n_bins + 1:
+                    return float("inf")
+                return self.lo * math.exp(b / self._scale)
+        return float("inf")
+
+    @property
+    def miss_rate(self) -> float:
+        return (self.w_miss / self.w_total) if self.w_total > 0 \
+            else float("nan")
+
+    @property
+    def attainment(self) -> float:
+        return (1.0 - self.w_miss / self.w_total) if self.w_total > 0 \
+            else float("nan")
+
+    def as_class_qos(self, slo: str, weight: float) -> ClassQoS:
+        """Freeze into the same ``ClassQoS`` record list-based reports use."""
+        return ClassQoS(slo=slo, weight=weight, n_samples=self.w_total,
+                        p50_latency=self.percentile(50.0),
+                        p99_latency=self.percentile(99.0),
+                        miss_rate=self.miss_rate,
+                        attainment=self.attainment)

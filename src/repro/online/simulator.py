@@ -105,15 +105,28 @@ class OnlinePolicy:
     switches when the projected relative gain exceeds the hysteresis
     (``rescheduler.SLORescheduler``; ``inf`` never switches and is
     bit-identical to the fixed-pattern planner).
+
+    ``idle_power_w`` is the package's static (leakage + always-on) power in
+    watts: charged whenever a provisioned package has no serving work —
+    tenantless epochs in every boundary mode, and the demand-limited slack
+    inside open-loop epochs — so aggregate EDP is comparable across
+    policies that leave different amounts of the fleet idle (a policy
+    parking tenants on one package no longer gets the others' idleness for
+    free).  The default 0.0 keeps every closed-loop result bit-identical
+    to the PR 5 accounting.  ``core.provision.package_idle_power_w``
+    derives a value from the MCM's chiplet count.
     """
 
     boundary: str = "instant"              # instant | drain | preempt
     reconfig_patterns: tuple[str, ...] = ()
     reconfig_hysteresis: float = math.inf
+    idle_power_w: float = 0.0
 
     def __post_init__(self) -> None:
         if self.boundary not in ("instant", "drain", "preempt"):
             raise KeyError(f"unknown boundary policy {self.boundary!r}")
+        if self.idle_power_w < 0:
+            raise ValueError("idle_power_w must be >= 0")
 
 
 @dataclasses.dataclass
@@ -197,6 +210,11 @@ class SimResult:
     policy: Optional[OnlinePolicy] = None
     n_preemptions: int = 0
     n_switches: int = 0
+    idle_energy: float = 0.0                  # static-power joules included
+    #                                           in total_energy (0 unless
+    #                                           policy.idle_power_w is set)
+    requests_offered: float = 0.0             # open-loop demand (rate x time)
+    requests_served: float = 0.0              # demand actually served
 
 
 # ---------------------------------------------------------------------------
@@ -258,29 +276,46 @@ def _build_plan(rec) -> _Plan:
 
 
 class _ChurnLoop:
-    """Mutable accounting state of one churn replay (one mode/policy)."""
+    """Mutable accounting state of one churn replay (one mode/policy).
 
-    def __init__(self, trace: Trace, resched, policy: OnlinePolicy):
-        self.trace = trace
+    ``depart_t`` maps tenant id -> departure event time and is only
+    *required* by the discrete boundary modes (drain/preempt look ahead to
+    cancel in-flight work); the fluid modes never read it, which is what
+    lets the fleet driver stream instant-boundary traces without knowing
+    the future.  ``sink`` replaces per-sample list retention with a
+    callback (fleet-scale bounded memory): when set, every ``SLOSample``
+    goes to the callback and nothing accumulates in ``samples`` /
+    ``slo_samples``.
+    """
+
+    def __init__(self, resched, policy: OnlinePolicy,
+                 depart_t: Optional[dict[int, float]] = None,
+                 sink=None):
         self.resched = resched
         self.policy = policy
+        self.sink = sink
         self.samples: dict[str, list[tuple[float, float]]] = {}
         self.slo_samples: list[SLOSample] = []
         self.epochs: list[EpochRecord] = []
         self.total_energy = 0.0
+        self.idle_energy = 0.0
         self.busy = 0.0
         self.replan_wall = 0.0
         self.n_replans = self.n_hits = self.n_preempt = 0
+        self.requests_offered = 0.0
+        self.requests_served = 0.0
         # tenant id -> (model name, declared slo) while active
         self.name_of: dict[int, str] = {}
         self.slo_of: dict[int, Optional[str]] = {}
+        # tenant id -> offered load (requests/s); absent = closed-loop
+        self.rate_of: dict[int, float] = {}
         # arrival time awaiting the tenant's first completed iteration
         self.wait_from: dict[int, float] = {}
         # tenant id -> time its deferred (preempted) chunks finish executing
         self.resume_until: dict[int, float] = {}
-        # tenant id -> departure event time (inf if none in the trace)
-        self.depart_t = {e.tenant: e.t for e in trace.events
-                         if e.kind == "depart"}
+        # tenant id -> departure event time (inf if none known)
+        self.depart_t: dict[int, float] = depart_t if depart_t is not None \
+            else {}
 
     # -- sample plumbing ----------------------------------------------------
     def emit(self, t: float, tid: int, latency: float, weight: float,
@@ -288,11 +323,15 @@ class _ChurnLoop:
         if weight <= 0:
             return
         name = self.name_of[tid]
-        self.samples.setdefault(name, []).append((latency, weight))
         missed = weight if latency > deadline else 0.0
-        self.slo_samples.append(SLOSample(
+        sample = SLOSample(
             t=t, model=name, tenant=tid, slo=self.slo_of.get(tid),
-            latency=latency, weight=weight, deadline=deadline, missed=missed))
+            latency=latency, weight=weight, deadline=deadline, missed=missed)
+        if self.sink is not None:
+            self.sink(sample)
+            return
+        self.samples.setdefault(name, []).append((latency, weight))
+        self.slo_samples.append(sample)
 
     def _deadline(self, tid: int, pml: float) -> float:
         return get_slo(self.slo_of.get(tid)).deadline_factor * pml
@@ -321,7 +360,10 @@ class _ChurnLoop:
                 self.resume_until.pop(tid, None)
 
         if self.policy.boundary == "instant":
-            cut = self._serve_fluid(plan, serve_start, t_end, departing)
+            if self.rate_of:
+                cut = self._serve_open(plan, serve_start, t_end, departing)
+            else:
+                cut = self._serve_fluid(plan, serve_start, t_end, departing)
             return cut, 0
         return self._serve_discrete(plan, serve_start, t_end,
                                     at_horizon, j_min)
@@ -337,9 +379,14 @@ class _ChurnLoop:
             weight = iters
             if tid in departing and frac > 0:
                 # the in-flight fraction at the departure is cancelled: no
-                # sample, and its energy share is not charged
+                # sample, and its energy share is not charged.  Each of the
+                # (possibly several) tenants departing at this boundary
+                # refunds exactly its own share once; ``.get`` guards a
+                # departing tenant the plan never served (a same-timestamp
+                # arrive+depart pair) — nothing was charged, so nothing is
+                # refunded
                 weight = math.floor(iters)
-                energy -= frac * plan.share[tid]
+                energy -= frac * plan.share.get(tid, 0.0)
             self.emit(t_end, tid, plan.pml[tid], weight,
                       self._deadline(tid, plan.pml[tid]))
             self.wait_from.pop(tid, None)
@@ -347,6 +394,57 @@ class _ChurnLoop:
         self.busy += t_end - serve_start
         self._last_iters = iters
         self._last_energy = energy
+        return t_end
+
+    def _serve_open(self, plan: _Plan, serve_start: float, t_end: float,
+                    departing: set[int]) -> float:
+        """Demand-limited fluid accounting (open-loop offered load).
+
+        Each rated tenant's served iterations are capped by its offered
+        demand ``rate x duration`` as well as by the package iteration
+        capacity ``duration / latency``; unrated tenants saturate like the
+        closed-loop fluid model.  Demand the package could not serve is
+        emitted as an infinite-latency missed sample (an unserved request
+        never completes), which is what the fleet-level attainment gate
+        measures.  The package is busy only for the iterations it actually
+        runs — the slack is charged at ``policy.idle_power_w``.
+        """
+        lat = plan.latency
+        dur = t_end - serve_start
+        cap = dur / lat                    # package iteration capacity
+        served: dict[int, float] = {}
+        for tid in plan.pml:
+            r = self.rate_of.get(tid)
+            served[tid] = cap if r is None else min(cap, r * dur)
+        # the package runs as many iterations as its hungriest tenant needs;
+        # lighter tenants simply sit out the rest (demand-limited fluid)
+        iters_run = max(served.values(), default=0.0)
+        energy = 0.0
+        for tid in plan.pml:
+            w = served[tid]
+            if tid in departing:
+                # in-flight fraction at departure cancelled, as in fluid
+                w = math.floor(w)
+            energy += w * plan.share.get(tid, 0.0)
+            r = self.rate_of.get(tid)
+            if r is not None:
+                demand = r * dur
+                self.requests_offered += demand
+                self.requests_served += w
+                unserved = demand - served[tid]
+                if unserved > 1e-12:
+                    self.emit(t_end, tid, math.inf, unserved,
+                              self._deadline(tid, plan.pml[tid]))
+            self.emit(t_end, tid, plan.pml[tid], w,
+                      self._deadline(tid, plan.pml[tid]))
+            self.wait_from.pop(tid, None)
+        busy_t = min(dur, iters_run * lat)
+        idle_e = self.policy.idle_power_w * max(0.0, dur - busy_t)
+        self.total_energy += energy + idle_e
+        self.idle_energy += idle_e
+        self.busy += busy_t
+        self._last_iters = iters_run
+        self._last_energy = energy + idle_e
         return t_end
 
     def _serve_discrete(self, plan: _Plan, serve_start: float, t_end: float,
@@ -439,12 +537,16 @@ class _ChurnLoop:
                     n_preempted += 1
                     rest = sum(r for r, _ in rem)
                     done_t = cut + rest
-                    energy += plan.share[tid] * (done / pml)
+                    # pml > 0 whenever chunks exist; guard the degenerate
+                    # zero-latency plan rather than dividing by it
+                    energy += plan.share[tid] * (done / pml) if pml > 0 \
+                        else 0.0
                     if self.depart_t.get(tid, math.inf) < done_t:
                         continue        # departs mid-resume: rest cancelled
                     self.resume_until[tid] = done_t
                     self.emit(done_t, tid, done_t - wait_t, 1.0, dl)
-                    energy += plan.share[tid] * (rest / pml)
+                    energy += plan.share[tid] * (rest / pml) if pml > 0 \
+                        else 0.0
 
         self.total_energy += energy
         self.busy += cut - serve_start
@@ -455,13 +557,158 @@ class _ChurnLoop:
         return cut, n_preempted
 
 
-def _churn(trace: Trace, resched, policy: OnlinePolicy) -> SimResult:
-    loop = _ChurnLoop(trace, resched, policy)
-    active: dict[int, Tenant] = {}
-    free_at = 0.0
-    active_g = obs.gauge("online.active_tenants")
-    preempt_c = obs.counter("online.preemptions")
+class PackageServer:
+    """Incremental epoch-stepped churn serving for one MCM package.
 
+    The per-event-group body of the classic single-package replay,
+    factored out so the fleet driver (``online.fleet``) can drive many
+    packages from one merged event stream.  Feed successive same-time
+    event groups through ``step``; each call applies the group's events
+    and closes the serving epoch ``[t, t_next)`` on this package.  The
+    fluid boundary modes need no future knowledge; drain/preempt need
+    ``depart_t`` pre-filled from a materialised trace (the single-package
+    path does this; the streaming fleet driver is instant-only).
+
+    ``keep_epochs=False`` drops per-epoch records (fleet-scale bounded
+    memory); ``sink`` reroutes samples the same way (see ``_ChurnLoop``).
+    ``created_at`` is when the package was provisioned — static power is
+    charged from there to the first event.
+    """
+
+    def __init__(self, resched, policy: OnlinePolicy, *,
+                 depart_t: Optional[dict[int, float]] = None,
+                 sink=None, created_at: float = 0.0,
+                 keep_epochs: bool = True, gauge=None):
+        self.resched = resched
+        self.policy = policy
+        self.loop = _ChurnLoop(resched, policy, depart_t=depart_t, sink=sink)
+        self.active: dict[int, Tenant] = {}
+        self.free_at = created_at
+        self.created_at = created_at
+        self.keep_epochs = keep_epochs
+        self.k = 0
+        self._started = False
+        self._gauge = gauge if gauge is not None \
+            else obs.gauge("online.active_tenants")
+        self._preempt_c = obs.counter("online.preemptions")
+
+    @property
+    def load(self) -> float:
+        """Offered load on this package: sum of active tenants' request
+        rates, counting a closed-loop (rateless) tenant as 1.0."""
+        return sum(self.loop.rate_of.get(tid, 1.0) for tid in self.active)
+
+    def reset_idle_origin(self, t: float) -> None:
+        """Restart static-power accounting from ``t``.
+
+        The fleet autoscaler calls this when it re-provisions a previously
+        decommissioned package: the decommissioned interval burned nothing,
+        and idle charging resumes at the re-provision time.
+        """
+        self.created_at = t
+        self.free_at = max(self.free_at, t)
+        self._started = False
+
+    def step(self, t: float, evs: list, t_next: float,
+             next_departing: set[int], at_horizon: bool) -> None:
+        loop = self.loop
+        if not self._started:
+            self._started = True
+            # static power from provisioning until the first event
+            idle_e = self.policy.idle_power_w * max(0.0, t - self.created_at)
+            if idle_e > 0:
+                loop.total_energy += idle_e
+                loop.idle_energy += idle_e
+        # A tenant arriving AND departing at the same timestamp while not
+        # already resident is a zero-length tenancy: it is never resident.
+        # (The total order processes the depart first, which would no-op
+        # and leave the arrival permanently active otherwise.)
+        arr_ids = {e.tenant for e in evs if e.kind == "arrive"}
+        dep_ids = {e.tenant for e in evs if e.kind == "depart"}
+        ghosts = (arr_ids & dep_ids) - set(self.active)
+        for e in evs:
+            if e.tenant in ghosts:
+                continue
+            if e.kind == "arrive":
+                self.active[e.tenant] = (e.tenant, e.model, e.batch)
+                loop.name_of[e.tenant] = e.model
+                loop.slo_of[e.tenant] = e.slo
+                if e.rate is not None:
+                    if self.policy.boundary != "instant":
+                        raise ValueError(
+                            "open-loop (rated) tenants require the "
+                            "'instant' boundary; got "
+                            f"{self.policy.boundary!r}")
+                    loop.rate_of[e.tenant] = float(e.rate)
+                loop.wait_from[e.tenant] = e.t
+            elif e.kind == "depart":
+                self.active.pop(e.tenant, None)
+                # prune everything keyed by the tenant: nothing serves or
+                # plans it past its departure, and ``slo_of`` is copied per
+                # replan — leaving departed ids in makes million-event
+                # traces quadratic in the tenant count
+                loop.name_of.pop(e.tenant, None)
+                loop.slo_of.pop(e.tenant, None)
+                loop.rate_of.pop(e.tenant, None)
+                loop.wait_from.pop(e.tenant, None)
+                loop.resume_until.pop(e.tenant, None)
+            else:
+                raise ValueError(f"churn trace carries {e.kind!r} event")
+        tenants = sorted(self.active.values())
+        self._gauge.set(len(tenants))
+        k = self.k
+        self.k = k + 1
+        with obs.span("epoch", cat="online", epoch=k,
+                      tenants=len(tenants)):
+            if tenants:
+                rec = self.resched.replan(tenants, slo_of=dict(loop.slo_of))
+                loop.replan_wall += rec.wall_s
+                loop.n_replans += 1
+                loop.n_hits += rec.memo_hit
+                plan = _build_plan(rec)
+                serve_start = max(self.free_at, t)
+                loop._last_iters = 0.0
+                loop._last_energy = 0.0
+                with obs.span("serve", cat="online",
+                              boundary=self.policy.boundary):
+                    cut, n_pre = loop.serve(plan, serve_start, t_next,
+                                            next_departing, at_horizon)
+                self.free_at = cut
+                if n_pre:
+                    self._preempt_c.inc(n_pre)
+                    obs.event("preempt", cat="online", epoch=k,
+                              tenants_deferred=n_pre)
+                if self.keep_epochs:
+                    loop.epochs.append(EpochRecord(
+                        t_start=t, t_end=t_next, tenants=tuple(tenants),
+                        outcome=rec.outcome,
+                        tenant_order=tuple(rec.tenant_order),
+                        replan_wall_s=rec.wall_s, memo_hit=rec.memo_hit,
+                        iterations=loop._last_iters,
+                        energy=loop._last_energy,
+                        pattern=rec.pattern, switched=rec.switched,
+                        n_preempted=n_pre, serve_start=serve_start,
+                        serve_end=cut))
+            else:
+                self.free_at = max(self.free_at, t)
+                # an empty provisioned package still burns static power
+                idle_e = self.policy.idle_power_w * max(0.0, t_next - t)
+                if idle_e > 0:
+                    loop.total_energy += idle_e
+                    loop.idle_energy += idle_e
+                if self.keep_epochs:
+                    loop.epochs.append(EpochRecord(
+                        t_start=t, t_end=t_next, tenants=(), outcome=None,
+                        tenant_order=(), replan_wall_s=0.0, memo_hit=False,
+                        iterations=0.0, energy=idle_e))
+
+
+def _churn(trace: Trace, resched, policy: OnlinePolicy) -> SimResult:
+    # drain/preempt cancel in-flight work against future departures, so the
+    # single-package path precomputes depart times from the materialised
+    # trace (the streaming fleet driver, instant-only, never needs this)
+    depart_t = {e.tenant: e.t for e in trace.events if e.kind == "depart"}
+    server = PackageServer(resched, policy, depart_t=depart_t)
     groups = [(t, list(evs)) for t, evs in
               itertools.groupby(trace.events, key=lambda e: e.t)]
     bounds = [t for t, _ in groups] + [trace.horizon]
@@ -470,55 +717,8 @@ def _churn(trace: Trace, resched, policy: OnlinePolicy) -> SimResult:
         at_horizon = k + 1 == len(groups)
         next_departing = set() if at_horizon else {
             e.tenant for e in groups[k + 1][1] if e.kind == "depart"}
-        for e in evs:
-            if e.kind == "arrive":
-                active[e.tenant] = (e.tenant, e.model, e.batch)
-                loop.name_of[e.tenant] = e.model
-                loop.slo_of[e.tenant] = e.slo
-                loop.wait_from[e.tenant] = e.t
-            elif e.kind == "depart":
-                active.pop(e.tenant, None)
-                loop.wait_from.pop(e.tenant, None)
-                loop.resume_until.pop(e.tenant, None)
-            else:
-                raise ValueError(f"churn trace carries {e.kind!r} event")
-        tenants = sorted(active.values())
-        active_g.set(len(tenants))
-        with obs.span("epoch", cat="online", epoch=k,
-                      tenants=len(tenants)):
-            if tenants:
-                rec = resched.replan(tenants, slo_of=dict(loop.slo_of))
-                loop.replan_wall += rec.wall_s
-                loop.n_replans += 1
-                loop.n_hits += rec.memo_hit
-                plan = _build_plan(rec)
-                serve_start = max(free_at, t)
-                loop._last_iters = 0.0
-                loop._last_energy = 0.0
-                with obs.span("serve", cat="online",
-                              boundary=policy.boundary):
-                    cut, n_pre = loop.serve(plan, serve_start, t_next,
-                                            next_departing, at_horizon)
-                free_at = cut
-                if n_pre:
-                    preempt_c.inc(n_pre)
-                    obs.event("preempt", cat="online", epoch=k,
-                              tenants_deferred=n_pre)
-                loop.epochs.append(EpochRecord(
-                    t_start=t, t_end=t_next, tenants=tuple(tenants),
-                    outcome=rec.outcome,
-                    tenant_order=tuple(rec.tenant_order),
-                    replan_wall_s=rec.wall_s, memo_hit=rec.memo_hit,
-                    iterations=loop._last_iters, energy=loop._last_energy,
-                    pattern=rec.pattern, switched=rec.switched,
-                    n_preempted=n_pre, serve_start=serve_start,
-                    serve_end=cut))
-            else:
-                free_at = max(free_at, t)
-                loop.epochs.append(EpochRecord(
-                    t_start=t, t_end=t_next, tenants=(), outcome=None,
-                    tenant_order=(), replan_wall_s=0.0, memo_hit=False,
-                    iterations=0.0, energy=0.0))
+        server.step(t, evs, t_next, next_departing, at_horizon)
+    loop = server.loop
     return SimResult(trace=trace, mode=resched.mode, epochs=loop.epochs,
                      frames=[], latency_samples=loop.samples,
                      total_energy=loop.total_energy, busy_s=loop.busy,
@@ -526,7 +726,10 @@ def _churn(trace: Trace, resched, policy: OnlinePolicy) -> SimResult:
                      n_replans=loop.n_replans, n_memo_hits=loop.n_hits,
                      slo_samples=loop.slo_samples, policy=policy,
                      n_preemptions=loop.n_preempt,
-                     n_switches=getattr(resched, "n_switches", 0))
+                     n_switches=getattr(resched, "n_switches", 0),
+                     idle_energy=loop.idle_energy,
+                     requests_offered=loop.requests_offered,
+                     requests_served=loop.requests_served)
 
 
 # ---------------------------------------------------------------------------

@@ -2,6 +2,7 @@
 re-schedule parity on the committed fixture traces, hand-computed
 deadline-miss accounting, anchor carry-over, and the trace portfolio."""
 import json
+import math
 import multiprocessing as mp
 import os
 
@@ -146,7 +147,10 @@ def test_weighted_percentile_and_report():
     samples = [(1.0, 1.0), (2.0, 1.0), (10.0, 2.0)]
     assert weighted_percentile(samples, 50.0) == 2.0
     assert weighted_percentile(samples, 99.0) == 10.0
-    assert weighted_percentile([], 50.0) == 0.0
+    # an empty sample set has no percentile: NaN-tagged, never a silent 0.0
+    assert math.isnan(weighted_percentile([], 50.0))
+    assert weighted_percentile([(3.0, 1.0)], 50.0) == 3.0
+    assert weighted_percentile([(3.0, 1.0)], 99.0) == 3.0
 
     frames = [FrameRecord(t=0.0, model="m", tenant=0, latency=0.2,
                           deadline=0.1, missed=True, energy=1.5),

@@ -48,6 +48,30 @@ def test_event_ordering_total(raw):
     assert tr.events == tuple(ordered)
 
 
+@given(st.lists(st.tuples(st.integers(0, 50), st.sampled_from(
+    ["arrive", "depart"]), st.integers(0, 9)), min_size=0, max_size=30,
+    unique=True),
+    st.integers(1, 5), st.randoms(use_true_random=False))
+@settings(max_examples=60, deadline=None)
+def test_merge_events_deterministic_and_partition_invariant(raw, n, rnd):
+    """``merge_events`` over sorted sub-streams always reproduces the global
+    sort — for any partition of the events into streams, in any stream
+    order."""
+    from repro.online.traces import merge_events
+    events = [Event(t=t / 10.0, kind=kind, model="m", tenant=tid)
+              for t, kind, tid in raw]
+    expected = sorted(events, key=Event.sort_key)
+    streams = [[] for _ in range(n)]
+    for e in events:
+        streams[rnd.randrange(n)].append(e)
+    streams = [sorted(s, key=Event.sort_key) for s in streams]
+    rnd.shuffle(streams)
+    merged = list(merge_events(*(iter(s) for s in streams)))
+    assert merged == expected
+    # and merging the merge with an empty stream changes nothing
+    assert list(merge_events(iter(merged), iter([]))) == expected
+
+
 # ---------------------------- work conservation -----------------------------
 
 @given(st.lists(st.floats(1e-6, 1.0, allow_nan=False), min_size=1,
